@@ -1,0 +1,199 @@
+"""Shared benchmark infrastructure: scales, datasets, model artifact cache.
+
+The paper's campaign is 1,500 matrices x 100 configs x 3 platforms (~4M CPU
+hours of simulator time). This container has one CPU core, so benchmarks run
+at a disclosed reduced scale by default (REPRO_BENCH_SCALE=default); every
+figure prints the scale next to the paper's number. REPRO_BENCH_SCALE=paper
+selects the full protocol (100 source matrices @128px, 100 epochs).
+
+Expensive artifacts (datasets, pretrained/fine-tuned models) are cached under
+benchmarks/artifacts/ keyed by (scale, recipe) so the figure scripts compose
+without retraining.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pickle
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import (CostModelConfig, TransferResult, finetune_target,
+                        make_codec, pretrain_source, train_scratch, zero_shot)
+from repro.data import CostMeter, collect_dataset, split_suite
+from repro.hw import get_platform
+
+ARTIFACT_DIR = Path(__file__).parent / "artifacts"
+ARTIFACT_DIR.mkdir(exist_ok=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class Scale:
+    name: str
+    n_source: int           # matrices for source pre-training (paper: 100)
+    n_finetune: int         # few-shot matrices (paper: 5)
+    n_eval: int             # evaluation matrices (paper: 715)
+    n_cfg_samples: int      # sampled configs per matrix (paper: 100)
+    resolution: int         # density pyramid resolution (paper analogue: 256)
+    ch_scale: float         # featurizer channel multiplier (paper: 1.0)
+    pre_epochs: int         # paper: 100
+    ft_epochs: int          # paper: 100
+    ae_epochs: int          # paper: 1000
+    max_suite: int          # largest source suite for the sweeps
+
+
+SCALES = {
+    "tiny": Scale("tiny", 10, 3, 8, 24, 32, 0.25, 3, 4, 30, 16),
+    "default": Scale("default", 60, 5, 100, 60, 32, 0.5, 30, 100, 200, 100),
+    "paper": Scale("paper", 100, 5, 715, 100, 128, 1.0, 100, 100, 1000, 1000),
+}
+
+
+def scale() -> Scale:
+    return SCALES[os.environ.get("REPRO_BENCH_SCALE", "default")]
+
+
+def _key(name: str) -> Path:
+    return ARTIFACT_DIR / f"{scale().name}_{name}.pkl"
+
+
+def cached(name: str, builder, force: bool = False):
+    path = _key(name)
+    if path.exists() and not force:
+        with open(path, "rb") as f:
+            return pickle.load(f)
+    t0 = time.time()
+    obj = builder()
+    tmp = path.with_suffix(".tmp")
+    with open(tmp, "wb") as f:
+        pickle.dump(obj, f)
+    os.replace(tmp, path)  # atomic: a crash never leaves a torn artifact
+    print(f"# built artifact {path.name} in {time.time() - t0:.1f}s", flush=True)
+    return obj
+
+
+# ------------------------------------------------------------------ suites
+
+def suites():
+    s = scale()
+    def build():
+        train, evl = split_suite(s.max_suite + s.n_finetune + 20, s.n_eval, seed=0)
+        return train, evl
+    return cached("suites", build)
+
+
+def source_dataset(op: str, n_mat: int | None = None):
+    s = scale()
+    n = n_mat or s.n_source
+    def build():
+        train, _ = suites()
+        meter = CostMeter()
+        ds = collect_dataset(get_platform("cpu"), train[:n], op,
+                             s.n_cfg_samples, seed=11, resolution=s.resolution,
+                             meter=meter)
+        return ds, meter.units
+    return cached(f"src_ds_{op}_{n}", build)
+
+
+def finetune_dataset(platform: str, op: str, n_mat: int | None = None):
+    s = scale()
+    n = n_mat or s.n_finetune
+    def build():
+        train, _ = suites()
+        meter = CostMeter()
+        base = s.max_suite  # finetune matrices disjoint from any source set
+        ds = collect_dataset(get_platform(platform), train[base:base + n], op,
+                             s.n_cfg_samples, seed=13, resolution=s.resolution,
+                             meter=meter)
+        return ds, meter.units
+    return cached(f"ft_ds_{platform}_{op}_{n}", build)
+
+
+def eval_dataset(platform: str, op: str):
+    s = scale()
+    def build():
+        _, evl = suites()
+        return collect_dataset(get_platform(platform), evl, op, 0, seed=17,
+                               resolution=s.resolution)
+    return cached(f"eval_ds_{platform}_{op}", build)
+
+
+# ------------------------------------------------------------------ models
+
+def model_config(kind: str, predictor: str = "mlp") -> CostModelConfig:
+    s = scale()
+    common = dict(ch_scale=s.ch_scale, predictor=predictor)
+    if kind == "cognate":
+        return CostModelConfig(featurizer="cognate", **common)
+    if kind == "waco_fa":
+        return CostModelConfig(featurizer="waco", use_mapper=False, **common)
+    if kind == "waco_fm":
+        return CostModelConfig(featurizer="waco", use_latent=False, **common)
+    raise ValueError(kind)
+
+
+_LATENT_FOR = {"cognate": "ae", "waco_fa": "fa", "waco_fm": "none"}
+
+
+def get_source_model(op: str, kind: str = "cognate", n_mat: int | None = None,
+                     predictor: str = "mlp", seed: int = 0) -> TransferResult:
+    s = scale()
+    n = n_mat or s.n_source
+    name = f"src_model_{kind}_{op}_{n}_{predictor}_{seed}"
+    def build():
+        ds, _ = source_dataset(op, n)
+        return pretrain_source(model_config(kind, predictor), ds,
+                               epochs=s.pre_epochs, seed=seed,
+                               latent_kind=_LATENT_FOR[kind],
+                               ae_epochs=s.ae_epochs)
+    return cached(name, build)
+
+
+def get_finetuned(platform: str, op: str, kind: str = "cognate",
+                  n_ft: int | None = None, n_src: int | None = None,
+                  latent_kind: str | None = None, predictor: str = "mlp",
+                  seed: int = 0) -> TransferResult:
+    s = scale()
+    n_ft = n_ft or s.n_finetune
+    latent = latent_kind or _LATENT_FOR[kind]
+    name = f"ft_{kind}_{platform}_{op}_{n_ft}_{n_src or s.n_source}_{latent}_{predictor}_{seed}"
+    def build():
+        pre = get_source_model(op, kind, n_mat=n_src, predictor=predictor,
+                               seed=seed)
+        ft_ds, _ = finetune_dataset(platform, op, n_ft)
+        return finetune_target(pre, ft_ds, epochs=s.ft_epochs, seed=seed,
+                               latent_kind=latent, ae_epochs=s.ae_epochs)
+    return cached(name, build)
+
+
+def get_scratch(platform: str, op: str, n_mat: int | None = None,
+                seed: int = 0) -> TransferResult:
+    s = scale()
+    n = n_mat or s.n_finetune
+    name = f"scratch_{platform}_{op}_{n}_{seed}"
+    def build():
+        ft_ds, _ = finetune_dataset(platform, op, n)
+        return train_scratch(model_config("cognate"), ft_ds,
+                             epochs=s.ft_epochs, seed=seed,
+                             ae_epochs=s.ae_epochs)
+    return cached(name, build)
+
+
+def get_zero_shot(platform: str, op: str, seed: int = 0) -> TransferResult:
+    name = f"zeroshot_{platform}_{op}_{seed}"
+    def build():
+        pre = get_source_model(op, "cognate", seed=seed)
+        ft_ds, _ = finetune_dataset(platform, op)
+        return zero_shot(pre, ft_ds, ae_epochs=scale().ae_epochs, seed=seed)
+    return cached(name, build)
+
+
+# ------------------------------------------------------------------ output
+
+def emit(rows, header=("name", "value", "paper", "notes")):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    print()

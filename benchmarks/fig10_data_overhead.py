@@ -1,0 +1,30 @@
+"""Fig. 10: data-collection overhead without transfer learning — accelerator-
+only models need 20-200x more target samples to match COGNATE's few-shot
+speedup (paper: NT needs 100-1000 matrices vs TL's 5)."""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import evaluate
+
+
+def run():
+    s = common.scale()
+    ev = common.eval_dataset("spade", "spmm")
+    tl5 = common.cached("eval_fig4_cognate_spade_spmm",
+                        lambda: evaluate(common.get_finetuned(
+                            "spade", "spmm", "cognate"), ev))
+    rows = [("fig10/TL_5_top1", f"{tl5['top1_geomean']:.3f}", 1.40,
+             f"5 target matrices, DCE={5 * s.n_cfg_samples * 1000:.0f}")]
+    # no-transfer at increasing target-set sizes (scaled from 5/100/1000)
+    for n in (s.n_finetune, s.n_finetune * 4, s.n_source):
+        model = common.get_scratch("spade", "spmm", n_mat=n)
+        m = common.cached(f"fig10_nt_{n}",
+                          lambda model=model: evaluate(model, ev))
+        rows.append((f"fig10/NT_{n}_top1", f"{m['top1_geomean']:.3f}",
+                     {5: 1.29, 1000: 1.43}.get(n, ""),
+                     f"DCE={n * s.n_cfg_samples * 1000:.0f}"))
+    common.emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,26 @@
+"""Fig. 11: negative transfer — source-set size sweep (paper: 100 source
+matrices beats 1000; over-specialization to the source platform hurts)."""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import evaluate
+
+
+def run():
+    s = common.scale()
+    ev = common.eval_dataset("spade", "spmm")
+    rows = []
+    sizes = sorted({max(s.n_finetune, 5), s.n_source // 3, s.n_source,
+                    s.max_suite})
+    for n in sizes:
+        model = common.get_finetuned("spade", "spmm", "cognate", n_src=n)
+        m = common.cached(f"fig11_src{n}",
+                          lambda model=model: evaluate(model, ev))
+        rows.append((f"fig11/src_{n}_top1", f"{m['top1_geomean']:.3f}",
+                     {100: 1.40}.get(n, ""),
+                     f"source pretrain on {n} matrices"))
+    common.emit(rows)
+
+
+if __name__ == "__main__":
+    run()

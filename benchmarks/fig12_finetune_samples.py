@@ -1,0 +1,25 @@
+"""Fig. 12: fine-tuning sample-count sweep (paper: 3 -> 1.30, 5 -> 1.40,
+7 -> 1.41; diminishing returns beyond 5 matrices)."""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import evaluate
+
+PAPER = {3: 1.30, 5: 1.40, 7: 1.41}
+
+
+def run():
+    s = common.scale()
+    ev = common.eval_dataset("spade", "spmm")
+    rows = []
+    for n in (3, 5, 7, s.n_finetune * 4):
+        model = common.get_finetuned("spade", "spmm", "cognate", n_ft=n)
+        m = common.cached(f"fig12_ft{n}",
+                          lambda model=model: evaluate(model, ev))
+        rows.append((f"fig12/ft_{n}_top1", f"{m['top1_geomean']:.3f}",
+                     PAPER.get(n, ""), f"{n} fine-tune matrices"))
+    common.emit(rows)
+
+
+if __name__ == "__main__":
+    run()

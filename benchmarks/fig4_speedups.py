@@ -1,0 +1,86 @@
+"""Fig. 4: geomean speedups of COGNATE vs all baselines, 2 ops x 2 targets.
+
+Methods: zero-shot, no-transfer, WACO+FA, WACO+FM, COGNATE top-1/top-5,
+plus the exhaustive-search optimal — normalized to the platform default
+configuration, geomean over the evaluation suite, averaged over SEEDS
+training seeds (mean±std reported; the paper reports a single run).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import evaluate
+
+SEEDS = (0, 1, 2)
+
+PAPER = {  # (platform, op, method) -> paper geomean speedup
+    ("spade", "spmm", "cognate_top1"): 1.40, ("spade", "spmm", "cognate_top5"): 1.47,
+    ("spade", "spmm", "optimal"): 1.55, ("spade", "spmm", "waco_fa"): 1.04,
+    ("spade", "spmm", "waco_fm"): 1.09, ("spade", "spmm", "no_transfer"): 1.29,
+    ("spade", "spmm", "zero_shot"): 0.71,
+    ("spade", "sddmm", "cognate_top1"): 1.27, ("spade", "sddmm", "cognate_top5"): 1.39,
+    ("gpu", "spmm", "cognate_top1"): 1.03, ("gpu", "spmm", "cognate_top5"): 1.17,
+    ("gpu", "spmm", "optimal"): 1.25,
+    ("gpu", "sddmm", "cognate_top1"): 1.07, ("gpu", "sddmm", "cognate_top5"): 1.15,
+    ("gpu", "sddmm", "optimal"): 1.22,
+}
+
+
+def _ms(vals):
+    vals = np.asarray(vals, np.float64)
+    if vals.size == 1:
+        return f"{vals[0]:.3f}"
+    return f"{vals.mean():.3f}±{vals.std():.3f}"
+
+
+def run(platforms=("spade", "gpu"), ops=("spmm", "sddmm"), seeds=SEEDS):
+    rows = []
+    results = {}
+    for platform in platforms:
+        for op in ops:
+            ev = common.eval_dataset(platform, op)
+            agg = {}
+            for seed in seeds:
+                methods = {
+                    "zero_shot": common.get_zero_shot(platform, op, seed=seed),
+                    "no_transfer": common.get_scratch(platform, op, seed=seed),
+                    "waco_fa": common.get_finetuned(platform, op, "waco_fa",
+                                                    seed=seed),
+                    "waco_fm": common.get_finetuned(platform, op, "waco_fm",
+                                                    seed=seed),
+                    "cognate": common.get_finetuned(platform, op, "cognate",
+                                                    seed=seed),
+                }
+                for mname, model in methods.items():
+                    m = common.cached(
+                        f"eval_fig4_{mname}_{platform}_{op}_{seed}",
+                        lambda model=model: evaluate(model, ev))
+                    results[(platform, op, mname, seed)] = m
+                    agg.setdefault((mname, "top1"), []).append(m["top1_geomean"])
+                    agg.setdefault((mname, "top5"), []).append(m["top5_geomean"])
+                    if mname == "cognate":
+                        agg.setdefault(("optimal", ""), []).append(
+                            m["optimal_geomean"])
+                        agg.setdefault(("cognate", "opa"), []).append(m["opa"])
+            for (mname, k), vals in agg.items():
+                if mname == "optimal":
+                    rows.append((f"fig4/{platform}/{op}/optimal", _ms(vals),
+                                 PAPER.get((platform, op, "optimal"), ""),
+                                 "exhaustive oracle"))
+                elif k == "opa":
+                    continue
+                elif mname == "cognate":
+                    rows.append((f"fig4/{platform}/{op}/cognate_{k}", _ms(vals),
+                                 PAPER.get((platform, op, f"cognate_{k}"), ""),
+                                 f"opa={_ms(agg[('cognate', 'opa')])}"
+                                 if k == "top1" else ""))
+                elif k == "top1":
+                    rows.append((f"fig4/{platform}/{op}/{mname}_top1", _ms(vals),
+                                 PAPER.get((platform, op, mname), ""), ""))
+    common.emit(rows)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Fig. 5/13/14/15: per-matrix speedup distributions of COGNATE on SPADE.
+
+Reuses Fig. 4 artifacts; prints distribution summaries (the paper's scatter
+plots) for SpMM/SDDMM x top-1/top-5.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import evaluate
+
+
+def run():
+    rows = []
+    for op, fig in (("spmm", "fig5"), ("sddmm", "fig14")):
+        model = common.get_finetuned("spade", op, "cognate")
+        ev = common.eval_dataset("spade", op)
+        m = common.cached(f"eval_fig4_cognate_spade_{op}",
+                          lambda: evaluate(model, ev))
+        for k in (1, 5):
+            sp = m[f"top{k}_speedup"]
+            rows.append((f"{fig}/{op}/top{k}/geomean", f"{np.exp(np.log(sp).mean()):.3f}",
+                         {("spmm", 1): 1.40}.get((op, k), ""), ""))
+            rows.append((f"{fig}/{op}/top{k}/max", f"{sp.max():.2f}",
+                         {("spmm", 1): 5.46}.get((op, k), ""), "paper max 5.46 (spmm)"))
+            rows.append((f"{fig}/{op}/top{k}/frac_below_1",
+                         f"{(sp < 1.0).mean():.3f}", "",
+                         "matrices where baseline wins"))
+            qs = np.percentile(sp, [10, 50, 90])
+            rows.append((f"{fig}/{op}/top{k}/p10_p50_p90",
+                         f"{qs[0]:.2f}/{qs[1]:.2f}/{qs[2]:.2f}", "", ""))
+    common.emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Fig. 7: component-level ablation on SPADE SpMM.
+
+Knock out each of IFE / FM (mapper) / LE (latent) through the full
+pretrain->finetune pipeline (paper: 1.40 -> 1.26 / 1.16 / 1.01).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks import common
+from repro.core import CostModelConfig, evaluate, finetune_target, pretrain_source
+
+PAPER = {"full": 1.40, "no_ife": 1.26, "no_fm": 1.16, "no_le": 1.01}
+
+
+def run():
+    s = common.scale()
+    ev = common.eval_dataset("spade", "spmm")
+    rows = []
+    variants = {
+        "full": {},
+        "no_ife": {"use_featurizer": False},
+        "no_fm": {"use_mapper": False},
+        "no_le": {"use_latent": False},
+    }
+    for name, kw in variants.items():
+        def build(kw=kw):
+            cfg = dataclasses.replace(common.model_config("cognate"), **kw)
+            src, _ = common.source_dataset("spmm")
+            latent = "ae" if cfg.use_latent else "none"
+            pre = pretrain_source(cfg, src, epochs=s.pre_epochs,
+                                  latent_kind=latent, ae_epochs=s.ae_epochs)
+            ft_ds, _ = common.finetune_dataset("spade", "spmm")
+            ft = finetune_target(pre, ft_ds, epochs=s.ft_epochs,
+                                 latent_kind=latent, ae_epochs=s.ae_epochs)
+            return evaluate(ft, ev)
+        m = common.cached(f"fig7_{name}", build)
+        rows.append((f"fig7/{name}_top1", f"{m['top1_geomean']:.3f}",
+                     PAPER[name], ""))
+    common.emit(rows)
+
+
+if __name__ == "__main__":
+    run()

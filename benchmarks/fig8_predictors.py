@@ -1,0 +1,24 @@
+"""Fig. 8: predictor-head alternatives (MLP vs LSTM/GRU/Transformer) through
+the full transfer pipeline (paper: MLP 1.40 best; TF next at 1.36)."""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import evaluate
+
+PAPER = {"mlp": 1.40, "tf": 1.36, "lstm": "", "gru": ""}
+
+
+def run():
+    ev = common.eval_dataset("spade", "spmm")
+    rows = []
+    for pred in ("mlp", "lstm", "gru", "tf"):
+        model = common.get_finetuned("spade", "spmm", "cognate", predictor=pred)
+        m = common.cached(f"fig8_{pred}",
+                          lambda model=model: evaluate(model, ev))
+        rows.append((f"fig8/{pred}_top1", f"{m['top1_geomean']:.3f}",
+                     PAPER[pred], ""))
+    common.emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Benchmark entry point — one section per paper table/figure.
+
+Prints ``name,value,paper,notes`` CSV per figure. Results are cached under
+benchmarks/artifacts/ (first full run trains the models; later runs replay).
+Scale via REPRO_BENCH_SCALE=tiny|default|paper (see benchmarks/common.py).
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    t0 = time.time()
+    from benchmarks import common
+    s = common.scale()
+    print(f"# REPRO_BENCH_SCALE={s.name}: {s.n_source} source / "
+          f"{s.n_finetune} finetune / {s.n_eval} eval matrices, "
+          f"{s.n_cfg_samples} cfg samples, res={s.resolution}, "
+          f"ch_scale={s.ch_scale}, epochs={s.pre_epochs}/{s.ft_epochs} "
+          f"(paper: 100/5/715, 100 cfgs, res~256, 100 epochs)")
+    print()
+
+    figures = [
+        ("fig4", "benchmarks.fig4_speedups"),
+        ("fig5", "benchmarks.fig5_per_matrix"),
+        ("fig6", "benchmarks.fig6_training_curves"),
+        ("fig7", "benchmarks.fig7_ablation_components"),
+        ("fig8", "benchmarks.fig8_predictors"),
+        ("fig9", "benchmarks.fig9_latent_choices"),
+        ("fig10", "benchmarks.fig10_data_overhead"),
+        ("fig11", "benchmarks.fig11_negative_transfer"),
+        ("fig12", "benchmarks.fig12_finetune_samples"),
+        ("table2", "benchmarks.table2_dce"),
+        ("kernel", "benchmarks.kernel_bench"),
+    ]
+    only = set(sys.argv[1:])
+    failures = []
+    for name, module in figures:
+        if only and name not in only:
+            continue
+        print(f"## {name} ({module})")
+        try:
+            mod = __import__(module, fromlist=["run"])
+            mod.run()
+        except Exception as e:
+            failures.append(name)
+            print(f"{name}/ERROR,{type(e).__name__}: {e},,")
+            traceback.print_exc()
+        print(flush=True)
+    print(f"# done in {time.time() - t0:.0f}s; failures: {failures or 'none'}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

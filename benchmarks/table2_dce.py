@@ -1,0 +1,54 @@
+"""Table 2 (App. A.3): speedup / APE / DCE across NT-d, TL-d, CPU-d and
+zero-shot model categories. DCE uses beta_CPU=1, beta_SPADE=1000."""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import evaluate
+
+BETA_SPADE, BETA_CPU = 1000.0, 1.0
+
+PAPER = {  # (category) -> (speedup, APE, DCE/1e6) at paper scale
+    "NT_5": (1.29, 15.02, 0.50), "TL_5": (1.40, 9.58, 0.51),
+    "CPU_5": (1.07, 27.80, 0.50), "ZeroShot": (0.71, 46.22, 0.01),
+}
+
+
+def run():
+    s = common.scale()
+    ev = common.eval_dataset("spade", "spmm")
+    cfgs = s.n_cfg_samples
+    rows = []
+
+    def emit_row(name, m, dce):
+        p = PAPER.get(name, ("", "", ""))
+        rows.append((f"table2/{name}",
+                     f"speedup={m['top1_geomean']:.3f} ape={m['top1_ape']:.1f} "
+                     f"dce_m={dce/1e6:.3f}",
+                     f"speedup={p[0]} ape={p[1]} dce_m={p[2]}", ""))
+
+    # NT d: target-only models
+    for n in (s.n_finetune, s.n_finetune * 4, s.n_source):
+        m = common.cached(f"fig10_nt_{n}", lambda n=n: evaluate(
+            common.get_scratch("spade", "spmm", n_mat=n), ev))
+        emit_row(f"NT_{n}" if n != s.n_finetune else "NT_5", m,
+                 n * cfgs * BETA_SPADE)
+    # TL 5: the headline transfer model
+    m = common.cached("eval_fig4_cognate_spade_spmm", lambda: evaluate(
+        common.get_finetuned("spade", "spmm", "cognate"), ev))
+    emit_row("TL_5", m, s.n_source * cfgs * BETA_CPU
+             + s.n_finetune * cfgs * BETA_SPADE)
+    # CPU d: source-size variants fine-tuned on 5 (shared with fig11)
+    small = max(s.n_finetune, 5)
+    m = common.cached(f"fig11_src{small}", lambda: evaluate(
+        common.get_finetuned("spade", "spmm", "cognate", n_src=small), ev))
+    emit_row("CPU_5", m, small * cfgs * BETA_CPU
+             + s.n_finetune * cfgs * BETA_SPADE)
+    # Zero-shot
+    m = common.cached("eval_fig4_zero_shot_spade_spmm", lambda: evaluate(
+        common.get_zero_shot("spade", "spmm"), ev))
+    emit_row("ZeroShot", m, s.n_source * cfgs * BETA_CPU)
+    common.emit(rows)
+
+
+if __name__ == "__main__":
+    run()

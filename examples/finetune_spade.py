@@ -1,0 +1,52 @@
+"""Few-shot fine-tuning scenario (the paper's deployment story): an emerging
+accelerator (SPADE) exists only as a slow simulator; we can afford labels
+from FIVE matrices. Compare:
+
+  zero-shot  — CPU-pretrained model applied directly,
+  no-transfer — train from scratch on the 5 matrices,
+  COGNATE    — CPU-pretrain + unsupervised AE + few-shot fine-tune,
+
+and report speedup + the metered data-collection expense of each.
+
+Run:  PYTHONPATH=src python examples/finetune_spade.py
+"""
+from repro.core import (CostModelConfig, evaluate, finetune_target,
+                        pretrain_source, train_scratch, zero_shot)
+from repro.data import CostMeter, collect_dataset, split_suite
+from repro.hw import get_platform
+
+RES = 32
+
+def main():
+    train, evl = split_suite(20, 10, seed=1)
+    cpu, spade = get_platform("cpu"), get_platform("spade")
+
+    meter_cpu, meter_spade = CostMeter(), CostMeter()
+    src = collect_dataset(cpu, train, "spmm", 40, seed=1, resolution=RES,
+                          meter=meter_cpu)
+    tgt = collect_dataset(spade, train[:5], "spmm", 40, seed=2, resolution=RES,
+                          meter=meter_spade)
+    ev = collect_dataset(spade, evl, "spmm", 0, seed=3, resolution=RES)
+
+    cfg = CostModelConfig(ch_scale=0.25)
+    pre = pretrain_source(cfg, src, epochs=8, ae_epochs=60)
+
+    results = {
+        "zero-shot": (evaluate(zero_shot(pre, tgt, ae_epochs=60), ev),
+                      meter_cpu.units),
+        "no-transfer": (evaluate(train_scratch(cfg, tgt, epochs=20,
+                                               ae_epochs=60), ev),
+                        meter_spade.units),
+        "COGNATE": (evaluate(finetune_target(pre, tgt, epochs=20,
+                                             ae_epochs=60), ev),
+                    meter_cpu.units + meter_spade.units),
+    }
+    print(f"{'method':12s} {'top1':>6s} {'top5':>6s} {'OPA':>6s} {'DCE':>10s}")
+    for name, (m, dce) in results.items():
+        print(f"{name:12s} {m['top1_geomean']:6.2f} {m['top5_geomean']:6.2f} "
+              f"{m['opa']:6.2f} {dce:10.0f}")
+    print(f"{'optimal':12s} {results['COGNATE'][0]['optimal_geomean']:6.2f}")
+
+
+if __name__ == "__main__":
+    main()

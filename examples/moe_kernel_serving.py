@@ -1,0 +1,64 @@
+"""MoE dispatch as a block-sparse SpMM through the Pallas kernel, with tile
+configuration selected by the COGNATE KernelAutotuner — the paper's technique
+driving a real kernel inside the LM stack.
+
+For a batch of routed tokens we build the (tokens x experts*d_ff-block)
+block-sparse dispatch pattern, let the autotuner pick block_m from the
+pattern's fill curve, run the Pallas BSR SpMM in interpret mode, and check it
+against the dense einsum the distributed model uses.
+
+Run:  PYTHONPATH=src python examples/moe_kernel_serving.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.autotune import KernelAutotuner
+from repro.data.matrices import SparseMatrix
+from repro.kernels import bsr_from_dense, spmm, spmm_ref
+
+
+def main():
+    rng = np.random.default_rng(0)
+    T, D, E, K = 256, 128, 4, 2          # tokens, d_model, experts, top-k
+
+    # router: top-k expert assignment per token
+    logits = rng.normal(size=(T, E))
+    topk = np.argsort(-logits, axis=1)[:, :K]
+
+    # block-sparse token->expert dispatch matrix (T x E*D): token row t has
+    # nonzero D-blocks only at its routed experts
+    dispatch = np.zeros((T, E * D), np.float32)
+    x = rng.normal(size=(T, D)).astype(np.float32)
+    for t in range(T):
+        for e in topk[t]:
+            dispatch[t, e * D:(e + 1) * D] = x[t]
+
+    # featurize the dispatch pattern and pick kernel tiles
+    rows, cols = np.nonzero(dispatch)
+    mat = SparseMatrix("dispatch", "moe", T, E * D,
+                       rows.astype(np.int32), cols.astype(np.int32))
+    cfg = KernelAutotuner.heuristic(mat)
+    print(f"pattern: {T}x{E * D}, nnz={mat.nnz}; autotuner chose {cfg}")
+
+    # expert weights stacked on the contraction axis: (E*D, F)
+    F = 64
+    w = rng.normal(size=(E * D, F)).astype(np.float32) * 0.1
+
+    a = bsr_from_dense(dispatch, block_m=cfg["block_m"])
+    out = np.asarray(spmm(a, jnp.asarray(w), block_n=cfg["block_n"],
+                          n_major=cfg["n_major"]))
+    want = np.asarray(spmm_ref(a, jnp.asarray(w)))
+    err = np.abs(out - want).max()
+    print(f"Pallas BSR SpMM vs oracle: maxerr={err:.2e}")
+
+    # cross-check against the dense formulation
+    dense_out = dispatch @ w
+    err2 = np.abs(out[:T] - dense_out).max()
+    print(f"vs dense dispatch einsum:  maxerr={err2:.2e}")
+    assert err < 1e-4 and err2 < 1e-3
+    print("MoE-dispatch-through-Pallas OK")
+
+
+if __name__ == "__main__":
+    main()

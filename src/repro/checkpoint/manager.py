@@ -1,0 +1,136 @@
+"""Fault-tolerant checkpointing for multi-pod training.
+
+Design (per-feature rationale for 1000+ node deployments):
+
+* **Atomic commits** — each checkpoint is staged under ``step_N.tmp`` and
+  ``os.replace``d into place only after every shard file and the manifest are
+  fsynced; a preempted save can never produce a torn checkpoint (restore
+  simply ignores ``*.tmp``).
+* **Per-host shard files** — each host writes only the leaves (or leaf
+  shards) it owns (``addressable_shards``), so save bandwidth scales with
+  host count and no host needs global memory. In this single-process
+  container that degenerates to one file, but the layout (``shard_<i>.npz``
+  + manifest) is the multi-host one.
+* **Elastic restore** — the manifest stores leaf paths/shapes/dtypes, not
+  device layouts. On restore, leaves are device_put against the *current*
+  mesh's NamedShardings, so a job can come back on a different pod count
+  (e.g. 2 pods -> 1 pod after a failure) without conversion.
+* **Rolling retention** — keep the newest ``keep`` checkpoints; deletion
+  happens only after a newer checkpoint is durable (crash between delete
+  and commit can't lose the latest state).
+* **Straggler/failure protocol** (documented contract for the launcher):
+  synchronous data-parallel training restarts from the newest durable
+  checkpoint on any worker loss; the deterministic, step-keyed data sharding
+  in ``launch/train.py`` guarantees bit-identical batch assignment after an
+  elastic restart, and hot-spare hosts can adopt a failed host's shard by
+  reading the same manifest.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+             for path, _ in flat]
+    return names, [leaf for _, leaf in flat], treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, state: dict) -> Path:
+        final = self.dir / f"step_{step:08d}"
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+
+        names, leaves, _ = _flatten(state)
+        manifest = {"step": step, "time": time.time(), "leaves": []}
+        arrays = {}
+        for i, (name, leaf) in enumerate(zip(names, leaves)):
+            arr = np.asarray(leaf)
+            dtype = str(arr.dtype)
+            if dtype == "bfloat16":      # npz has no bf16: store raw bits
+                arr = arr.view(np.uint16)
+            arrays[f"a{i}"] = arr
+            manifest["leaves"].append(
+                {"name": name, "key": f"a{i}", "shape": list(arr.shape),
+                 "dtype": dtype})
+        # single-process: one shard file; multi-host would write
+        # shard_<process_index>.npz with only addressable leaves
+        with open(tmp / "shard_0.npz", "wb") as f:
+            np.savez(f, **arrays)
+            f.flush()
+            os.fsync(f.fileno())
+        with open(tmp / "manifest.json", "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, final)          # atomic commit
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for p in self.dir.iterdir():
+            m = re.fullmatch(r"step_(\d+)", p.name)
+            if m and (p / "manifest.json").exists():
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self):
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, state_like, step: int | None = None,
+                shardings=None) -> dict:
+        """Restore into the structure of ``state_like``; if ``shardings`` is
+        given (same pytree structure), leaves are placed onto the current
+        mesh (elastic restore)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = self.dir / f"step_{step:08d}"
+        manifest = json.loads((path / "manifest.json").read_text())
+        data = np.load(path / "shard_0.npz")
+        by_name = {l["name"]: data[l["key"]] for l in manifest["leaves"]}
+
+        names, leaves, treedef = _flatten(state_like)
+        shard_leaves = None
+        if shardings is not None:
+            _, shard_leaves, _ = _flatten(shardings)
+        dtypes = {l["name"]: l["dtype"] for l in manifest["leaves"]}
+        out = []
+        for i, (name, like) in enumerate(zip(names, leaves)):
+            arr = by_name[name]
+            if dtypes[name] == "bfloat16":
+                import ml_dtypes
+                arr = arr.view(ml_dtypes.bfloat16)
+            want_dtype = getattr(like, "dtype", arr.dtype)
+            arr = np.asarray(arr).astype(want_dtype)
+            if shard_leaves is not None:
+                out.append(jax.device_put(arr, shard_leaves[i]))
+            else:
+                out.append(jax.numpy.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,1 @@
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES, valid_cells

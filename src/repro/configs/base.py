@@ -1,0 +1,111 @@
+"""Architecture and shape configuration schema.
+
+One ``ArchConfig`` per assigned architecture (exact public configs), plus a
+``reduced()`` derivation used by the CPU smoke tests. ``ShapeConfig`` are the
+assigned input shapes; ``long_500k`` is only valid for sub-quadratic families
+(DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # dense | moe | ssm | vlm | audio | hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    activation: str = "swiglu"   # swiglu | sq_relu | geglu
+    # MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    # virtual-expert (expert-slicing) factor: weights stored as
+    # (n_experts*split, d_model, d_ff/split) so the expert axis can divide
+    # the model mesh axis -> true expert parallelism (EXPERIMENTS.md §Perf)
+    moe_expert_split: int = 1
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    attn_every: int = 0          # zamba: shared attention every k blocks
+    slstm_every: int = 0         # xlstm: sLSTM block every k blocks
+    # enc-dec (seamless): n_layers = decoder layers, n_enc_layers = encoder
+    n_enc_layers: int = 0
+    # vlm / audio stub frontends
+    n_prefix_tokens: int = 0     # vision patches / audio frames are inputs
+    prefix_dim: int = 0          # stub embedding dim (0 -> d_model)
+    # misc
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm" and self.attn_every == 0
+
+    @property
+    def subquadratic(self) -> bool:
+        """Eligible for the long_500k shape."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # every assigned arch has a decode path (see DESIGN.md)
+
+    def reduced(self) -> "ArchConfig":
+        """Small same-family config for CPU smoke tests."""
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            n_layers=min(self.n_layers, 4) if self.attn_every == 0
+            else max(self.attn_every, 4),
+            n_enc_layers=min(self.n_enc_layers, 2),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 4) if self.n_kv_heads > 1 else 1,
+            d_ff=max(64, min(self.d_ff, 256)),
+            vocab=512,
+            head_dim=32,
+            n_experts=min(self.n_experts, 4),
+            experts_per_token=min(self.experts_per_token, 2),
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_head_dim=32,
+            n_prefix_tokens=min(self.n_prefix_tokens, 16),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+    def reduced(self, seq: int = 64, batch: int = 2) -> "ShapeConfig":
+        return dataclasses.replace(self, name=self.name + "-smoke",
+                                   seq_len=seq, global_batch=batch)
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def valid_cells(arch: ArchConfig) -> list[str]:
+    """The assigned shape cells this architecture runs (skips per DESIGN.md)."""
+    cells = ["train_4k", "prefill_32k", "decode_32k"]
+    if arch.subquadratic:
+        cells.append("long_500k")
+    return cells

@@ -1,0 +1,8 @@
+"""granite-3.0 MoE: 32L, 40 experts top-8, tiny per-expert d_ff=512, GQA kv=8.
+[hf:ibm-granite/granite-3.0-1b-a400m-base]"""
+from repro.configs.base import ArchConfig
+
+ARCH = ArchConfig(
+    name="granite-moe-3b-a800m", family="moe", n_layers=32, d_model=1536,
+    n_heads=24, n_kv_heads=8, d_ff=512, vocab=49155, activation="swiglu",
+    n_experts=40, experts_per_token=8)

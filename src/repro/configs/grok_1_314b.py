@@ -1,0 +1,7 @@
+"""grok-1: 64L MoE (8 experts, top-2), GQA kv=8. [hf:xai-org/grok-1]"""
+from repro.configs.base import ArchConfig
+
+ARCH = ArchConfig(
+    name="grok-1-314b", family="moe", n_layers=64, d_model=6144, n_heads=48,
+    n_kv_heads=8, d_ff=32768, vocab=131072, activation="swiglu",
+    n_experts=8, experts_per_token=2)

@@ -1,0 +1,8 @@
+"""paligemma-3b: SigLIP patch stub (256 prefix tokens) + gemma backbone,
+18L MQA kv=1, GeGLU. [arXiv:2407.07726]"""
+from repro.configs.base import ArchConfig
+
+ARCH = ArchConfig(
+    name="paligemma-3b", family="vlm", n_layers=18, d_model=2048, n_heads=8,
+    n_kv_heads=1, d_ff=16384, vocab=257216, activation="geglu",
+    n_prefix_tokens=256, prefix_dim=1152, head_dim=256)

@@ -1,0 +1,9 @@
+"""seamless-m4t-v2-large: enc-dec transformer backbone over precomputed audio
+frame embeddings (stub frontend), 24 enc + 24 dec, MHA kv=16.
+[arXiv:2308.11596]"""
+from repro.configs.base import ArchConfig
+
+ARCH = ArchConfig(
+    name="seamless-m4t-large-v2", family="audio", n_layers=24, d_model=1024,
+    n_heads=16, n_kv_heads=16, d_ff=8192, vocab=256206, activation="geglu",
+    n_enc_layers=24)

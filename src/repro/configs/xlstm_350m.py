@@ -1,0 +1,7 @@
+"""xlstm-350m: 24 blocks, mLSTM + sLSTM every 8th (xLSTM[7:1]).
+[arXiv:2405.04517]"""
+from repro.configs.base import ArchConfig
+
+ARCH = ArchConfig(
+    name="xlstm-350m", family="ssm", n_layers=24, d_model=1024, n_heads=4,
+    n_kv_heads=4, d_ff=0, vocab=50304, slstm_every=8, head_dim=256)

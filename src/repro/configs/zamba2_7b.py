@@ -1,0 +1,8 @@
+"""zamba2-7b: 81 Mamba2 blocks (ssm_state=64) + 2 alternating shared
+full-attention blocks every 6th position. [arXiv:2411.15242]"""
+from repro.configs.base import ArchConfig
+
+ARCH = ArchConfig(
+    name="zamba2-7b", family="hybrid", n_layers=81, d_model=3584, n_heads=32,
+    n_kv_heads=32, d_ff=14336, vocab=32000, activation="swiglu",
+    ssm_state=64, ssm_head_dim=64, attn_every=6)

@@ -1,0 +1,12 @@
+# The paper's primary contribution: the COGNATE transfer-learned cost-model
+# stack (featurizer, config mapper, latent encoder, predictor, ranking
+# trainer, pretrain->few-shot-finetune pipeline, search, autotune API).
+from repro.core.cognate import CostModelConfig, init_cost_model, apply_cost_model
+from repro.core.latent import LatentCodec, make_codec, LATENT_DIM
+from repro.core.loss import (pairwise_ranking_loss, ordered_pair_accuracy,
+                             kendall_tau, topk_speedup, geomean)
+from repro.core.trainer import (TrainConfig, train_cost_model,
+                                evaluate_cost_model, score_full_space)
+from repro.core.transfer import (pretrain_source, finetune_target, train_scratch,
+                                 zero_shot, evaluate, TransferResult)
+from repro.core.autotune import Autotuner, KernelAutotuner

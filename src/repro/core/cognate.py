@@ -1,0 +1,123 @@
+"""The assembled COGNATE cost model (paper Fig. 3(b)) and WACO baselines.
+
+Score = P( IFE(pyramid) || FM(homog) || LE(het) )  — predicted *rank score*
+(higher = slower), trained with pairwise margin ranking loss.
+
+Model variants (selected by ``CostModelConfig``):
+  * cognate            — full model (featurizer=cognate, mapper, latent=ae)
+  * waco_fa            — WacoNet + feature augmentation (latent=fa, no mapper;
+                         raw het features fill the config path)
+  * waco_fm            — WacoNet + feature mapping (mapper only, latent=none)
+  * ablations          — any component zeroed out (paper Fig. 7)
+  * predictor variants — mlp | lstm | gru | tf (paper Fig. 8)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nn
+from repro.core.featurizer import FEATURIZERS, MATRIX_EMBED_DIM
+from repro.core.latent import LATENT_DIM
+from repro.hw.mapping import UNIFIED_DIM
+
+CONFIG_EMBED_DIM = 64   # paper Table 6
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModelConfig:
+    featurizer: str = "cognate"       # cognate | waco
+    use_featurizer: bool = True       # Fig. 7: -IFE
+    use_mapper: bool = True           # Fig. 7: -FM
+    use_latent: bool = True           # Fig. 7: -LE
+    latent_dim: int = LATENT_DIM
+    predictor: str = "mlp"            # mlp | lstm | gru | tf
+    ch_scale: float = 1.0
+    in_ch: int = 4
+
+    @property
+    def trunk_dim(self) -> int:
+        return MATRIX_EMBED_DIM + CONFIG_EMBED_DIM + self.latent_dim
+
+
+def init_cost_model(key, cfg: CostModelConfig):
+    kf, km, kp, kt = jax.random.split(key, 4)
+    feat_init, _ = FEATURIZERS[cfg.featurizer]
+    p = {"featurizer": feat_init(kf, in_ch=cfg.in_ch, ch_scale=cfg.ch_scale)}
+    p["mapper"] = nn.mlp_init(km, [UNIFIED_DIM, 64, CONFIG_EMBED_DIM])
+    # predictor trunk (Table 6): concat 256 -> 192 -> 128 -> 64 -> 1
+    if cfg.predictor == "mlp":
+        p["predictor"] = nn.mlp_init(kp, [cfg.trunk_dim, 192, 128, 64, 1])
+    elif cfg.predictor in ("lstm", "gru"):
+        init = nn.lstm_init if cfg.predictor == "lstm" else nn.gru_init
+        p["predictor"] = {"cell": init(kp, 64, 128),
+                          "head": nn.mlp_init(kt, [128, 64, 1])}
+    elif cfg.predictor == "tf":
+        k1, k2, k3, k4 = jax.random.split(kp, 4)
+        dm = 64
+        p["predictor"] = {
+            "qkv": nn.dense_init(k1, dm, 3 * dm),
+            "out": nn.dense_init(k2, dm, dm),
+            "ln1": nn.layernorm_init(dm), "ln2": nn.layernorm_init(dm),
+            "ff": nn.mlp_init(k3, [dm, 128, dm]),
+            "head": nn.mlp_init(k4, [dm, 64, 1]),
+        }
+    else:
+        raise ValueError(cfg.predictor)
+    return p
+
+
+def _tokens(x, dm=64):
+    """Split the trunk vector into dm-wide tokens for seq predictors."""
+    B, D = x.shape
+    pad = (-D) % dm
+    x = jnp.pad(x, ((0, 0), (0, pad)))
+    return x.reshape(B, (D + pad) // dm, dm)
+
+
+def _predict(p, cfg: CostModelConfig, trunk):
+    if cfg.predictor == "mlp":
+        return nn.mlp(p["predictor"], trunk)[..., 0]
+    if cfg.predictor in ("lstm", "gru"):
+        apply = nn.lstm_apply if cfg.predictor == "lstm" else nn.gru_apply
+        h = apply(p["predictor"]["cell"], _tokens(trunk))
+        return nn.mlp(p["predictor"]["head"], h)[..., 0]
+    # single-block transformer encoder over trunk tokens
+    pp = p["predictor"]
+    t = _tokens(trunk)
+    x = nn.layernorm(pp["ln1"], t)
+    qkv = nn.dense(pp["qkv"], x)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    att = jax.nn.softmax(q @ jnp.swapaxes(k, 1, 2) / jnp.sqrt(q.shape[-1]), -1)
+    t = t + nn.dense(pp["out"], att @ v)
+    t = t + nn.mlp(pp["ff"], nn.layernorm(pp["ln2"], t), final_act=False)
+    return nn.mlp(pp["head"], t.mean(axis=1))[..., 0]
+
+
+def matrix_embedding(p, cfg: CostModelConfig, pyramid):
+    """(B, C, R, R) -> (B, 128). Computed once per matrix, reused per config."""
+    if not cfg.use_featurizer:
+        return jnp.zeros((pyramid.shape[0], MATRIX_EMBED_DIM))
+    _, feat_apply = FEATURIZERS[cfg.featurizer]
+    return feat_apply(p["featurizer"], pyramid)
+
+
+def score_configs(p, cfg: CostModelConfig, s_m, homog, z):
+    """s_m: (B, 128); homog: (B, G, 53); z: (B, G, L) -> scores (B, G)."""
+    B, G, _ = homog.shape
+    if cfg.use_mapper:
+        pj = nn.mlp(p["mapper"], homog.reshape(B * G, -1)).reshape(B, G, -1)
+    else:
+        pj = jnp.zeros((B, G, CONFIG_EMBED_DIM))
+    if not cfg.use_latent:
+        z = jnp.zeros((B, G, cfg.latent_dim))
+    sm = jnp.broadcast_to(s_m[:, None, :], (B, G, s_m.shape[-1]))
+    trunk = jnp.concatenate([sm, pj, z], axis=-1).reshape(B * G, -1)
+    return _predict(p, cfg, trunk).reshape(B, G)
+
+
+def apply_cost_model(p, cfg: CostModelConfig, pyramid, homog, z):
+    """End-to-end scoring: pyramid (B,C,R,R), homog (B,G,53), z (B,G,L)."""
+    return score_configs(p, cfg, matrix_embedding(p, cfg, pyramid), homog, z)

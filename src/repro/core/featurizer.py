@@ -1,0 +1,90 @@
+"""Input featurizers (paper §3.1 IFE, Table 5; WACO baseline).
+
+``cognate`` — 12 conv layers in 4 blocks of 3, channels 32→64→128→256,
+max-pool after each block, multi-scale taps (global-pooled features of every
+block concatenated) feeding a 128-d matrix embedding. This is the TPU-native
+dense-CNN adaptation of the paper's submanifold sparse CNN (DESIGN.md §4).
+
+``waco`` — WACO's original macro-shape: 14 conv layers at a fixed 32
+channels, single final tap. Used by the WACO+FA / WACO+FM baselines and the
+over-parameterization comparison.
+
+``ch_scale`` scales channel widths for the container-scale benchmark runs
+(disclosed next to every reported number).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nn
+
+MATRIX_EMBED_DIM = 128
+
+
+def _c(v, scale):
+    return max(8, int(v * scale))
+
+
+def _block_specs(in_ch, ch_scale):
+    """Exactly Table 5: 4 blocks x 3 convs, pool after each block."""
+    c32, c64, c128, c256 = (_c(32, ch_scale), _c(64, ch_scale),
+                            _c(128, ch_scale), _c(256, ch_scale))
+    return [
+        [(in_ch, c32, 5), (c32, c32, 3), (c32, c64, 3)],
+        [(c64, c64, 3), (c64, c64, 3), (c64, c128, 3)],
+        [(c128, c128, 3), (c128, c128, 3), (c128, c256, 3)],
+        [(c256, c256, 3), (c256, c256, 3), (c256, c256, 3)],
+    ]
+
+
+def cognate_featurizer_init(key, in_ch: int = 4, ch_scale: float = 1.0):
+    specs = _block_specs(in_ch, ch_scale)
+    keys = jax.random.split(key, 13)
+    p = {"blocks": []}
+    ki = 0
+    for block in specs:
+        layers = []
+        for cin, cout, ksize in block:
+            layers.append(nn.conv_init(keys[ki], cin, cout, ksize)); ki += 1
+        p["blocks"].append(layers)
+    tap_dim = sum(block[-1][1] for block in specs)  # multi-scale taps
+    p["proj"] = nn.dense_init(keys[ki], tap_dim, MATRIX_EMBED_DIM)
+    return p
+
+
+def cognate_featurizer_apply(p, pyramid):
+    """pyramid: (B, C, R, R) -> (B, 128)."""
+    x = pyramid
+    taps = []
+    for layers in p["blocks"]:
+        for conv_p in layers:
+            x = jax.nn.relu(nn.conv(conv_p, x))
+        x = nn.max_pool(x, 2)
+        taps.append(nn.global_avg_pool(x))
+    feat = jnp.concatenate(taps, axis=-1)
+    return nn.dense(p["proj"], feat)
+
+
+def waco_featurizer_init(key, in_ch: int = 4, ch_scale: float = 1.0):
+    c = _c(32, ch_scale)
+    keys = jax.random.split(key, 15)
+    convs = [nn.conv_init(keys[0], in_ch, c, 5)]
+    convs += [nn.conv_init(keys[i], c, c, 3) for i in range(1, 14)]
+    return {"convs": convs, "proj": nn.dense_init(keys[14], c, MATRIX_EMBED_DIM)}
+
+
+def waco_featurizer_apply(p, pyramid):
+    x = pyramid
+    for i, conv_p in enumerate(p["convs"]):
+        x = jax.nn.relu(nn.conv(conv_p, x))
+        # pool every ~3rd layer to keep spatial cost comparable
+        if i in (2, 5, 8, 11):
+            x = nn.max_pool(x, 2)
+    return nn.dense(p["proj"], nn.global_avg_pool(x))
+
+
+FEATURIZERS = {
+    "cognate": (cognate_featurizer_init, cognate_featurizer_apply),
+    "waco": (waco_featurizer_init, waco_featurizer_apply),
+}

@@ -1,0 +1,170 @@
+"""Latent encoding of heterogeneous configuration components (paper §3.3).
+
+Per target (platform, primitive) pair we train an unsupervised autoencoder on
+the *full enumerated config space* (no runtime labels needed — this is the
+point: standardizing heterogeneous knobs costs zero simulator samples). The
+encoder half then maps each config's heterogeneous features to a fixed-width
+latent z consumed by the predictor.
+
+Ablation variants (paper Fig. 9): PCA, VAE, and raw feature augmentation (FA,
+zero-padded union space).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import nn
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+LATENT_DIM = 64  # paper Table 6
+
+
+@dataclasses.dataclass
+class LatentCodec:
+    """Picklable encoder: holds parameters, not closures."""
+    kind: str                 # ae | vae | pca | fa | none
+    latent_dim: int
+    payload: dict             # numpy arrays (AE params / PCA basis / offset)
+    history: dict
+
+    def encode(self, het: np.ndarray) -> np.ndarray:
+        x = jnp.asarray(het, jnp.float32)
+        if self.kind in ("ae", "vae"):
+            z = _ae_encode(self.payload["params"], x)
+            if self.kind == "vae":
+                z = jnp.split(z, 2, axis=-1)[0]
+            return np.asarray(z)
+        if self.kind == "pca":
+            return np.asarray((x - self.payload["mu"]) @ self.payload["basis"])
+        if self.kind == "fa":
+            off = self.payload["offset"]
+            d = het.shape[1]
+            return np.asarray(jnp.pad(
+                x, ((0, 0), (off, self.latent_dim - d - off))))
+        if self.kind == "none":
+            return np.zeros((het.shape[0], self.latent_dim), np.float32)
+        raise ValueError(self.kind)
+
+
+def _to_numpy(tree):
+    return jax.tree_util.tree_map(np.asarray, tree)
+
+
+def _ae_init(key, din, enc_out, hidden=32, dec_in=None):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dec_in = dec_in or enc_out
+    return {
+        "enc": [nn.dense_init(k1, din, hidden), nn.dense_init(k2, hidden, enc_out)],
+        "dec": [nn.dense_init(k3, dec_in, hidden), nn.dense_init(k4, hidden, din)],
+    }
+
+
+def _ae_encode(p, x):
+    h = jax.nn.relu(nn.dense(p["enc"][0], x))
+    return nn.dense(p["enc"][1], h)
+
+
+def _ae_decode(p, z):
+    h = jax.nn.relu(nn.dense(p["dec"][0], z))
+    return nn.dense(p["dec"][1], h)
+
+
+def train_autoencoder(het: np.ndarray, latent_dim: int = LATENT_DIM,
+                      epochs: int = 1000, lr: float = 1e-3, batch: int = 32,
+                      seed: int = 0, variational: bool = False) -> LatentCodec:
+    """Paper Table 4 hyperparameters: Adam, lr 1e-3, bs 32, 1000 epochs, MSE."""
+    key = jax.random.PRNGKey(seed)
+    din = het.shape[1]
+    out_latent = latent_dim * (2 if variational else 1)
+    params = _ae_init(key, din, out_latent, dec_in=latent_dim)
+    cfg = AdamWConfig(lr=lr, grad_clip_norm=None)
+    state = adamw_init(params, cfg)
+    x_all = jnp.asarray(het)
+
+    def loss_fn(p, x, key):
+        z = _ae_encode(p, x)
+        if variational:
+            mu, logvar = jnp.split(z, 2, axis=-1)
+            eps = jax.random.normal(key, mu.shape)
+            zs = mu + jnp.exp(0.5 * logvar) * eps
+            recon = _ae_decode(p, zs)
+            kl = -0.5 * jnp.mean(1 + logvar - mu ** 2 - jnp.exp(logvar))
+            return jnp.mean((recon - x) ** 2) + 1e-3 * kl
+        recon = _ae_decode(p, z)
+        return jnp.mean((recon - x) ** 2)
+
+    @jax.jit
+    def step(p, s, x, key):
+        l, g = jax.value_and_grad(loss_fn)(p, x, key)
+        p, s, _ = adamw_update(p, g, s, cfg)
+        return p, s, l
+
+    n = het.shape[0]
+    rng = np.random.default_rng(seed)
+    losses = []
+    steps_per_epoch = max(n // batch, 1)
+    for e in range(epochs):
+        perm = rng.permutation(n)
+        tot = 0.0
+        for i in range(steps_per_epoch):
+            idx = perm[i * batch:(i + 1) * batch]
+            key, sub = jax.random.split(key)
+            params, state, l = step(params, state, x_all[idx], sub)
+            tot += float(l)
+        losses.append(tot / steps_per_epoch)
+
+    return LatentCodec("vae" if variational else "ae", latent_dim,
+                       {"params": _to_numpy(params)}, {"loss": losses})
+
+
+def pca_codec(het: np.ndarray, latent_dim: int = LATENT_DIM) -> LatentCodec:
+    x = het - het.mean(0, keepdims=True)
+    _, _, vt = np.linalg.svd(x, full_matrices=False)
+    k = min(latent_dim, vt.shape[0])
+    basis = np.zeros((het.shape[1], latent_dim), np.float32)
+    basis[:, :k] = vt[:k].T
+    mu = het.mean(0, keepdims=True).astype(np.float32)
+    return LatentCodec("pca", latent_dim, {"basis": basis, "mu": mu}, {})
+
+
+# Daumé-style union space: each platform occupies a disjoint block, so a
+# model trained on one platform's block sees only zeros for another's.
+FA_OFFSETS = {"cpu": 0, "spade": 24, "gpu": 37, "tpu_pallas": 0}
+
+
+def fa_codec(het: np.ndarray, latent_dim: int = LATENT_DIM,
+             offset: int = 0) -> LatentCodec:
+    """Feature augmentation: raw het features placed at the platform's
+    disjoint offset in a fixed-width union space, zero elsewhere.
+
+    This reproduces the sparse union-space representation the paper shows
+    transfers poorly (WACO+FA baseline)."""
+    d = het.shape[1]
+    if offset + d > latent_dim:
+        raise ValueError("FA union space too narrow for this platform block")
+    return LatentCodec("fa", latent_dim, {"offset": offset}, {})
+
+
+def zero_codec(latent_dim: int = LATENT_DIM) -> LatentCodec:
+    return LatentCodec("none", latent_dim, {}, {})
+
+
+def make_codec(kind: str, het: np.ndarray, latent_dim: int = LATENT_DIM,
+               seed: int = 0, epochs: int = 1000,
+               fa_platform: str = "cpu") -> LatentCodec:
+    if kind == "ae":
+        return train_autoencoder(het, latent_dim, epochs=epochs, seed=seed)
+    if kind == "vae":
+        return train_autoencoder(het, latent_dim, epochs=epochs, seed=seed,
+                                 variational=True)
+    if kind == "pca":
+        return pca_codec(het, latent_dim)
+    if kind == "fa":
+        return fa_codec(het, latent_dim, offset=FA_OFFSETS[fa_platform])
+    if kind == "none":
+        return zero_codec(latent_dim)
+    raise ValueError(kind)

@@ -1,0 +1,78 @@
+"""Learning objective and ranking metrics (paper App. A.4, §4.4 Fig. 6).
+
+Pairwise margin ranking loss over all config pairs of the same matrix:
+    L = sum max(0, 1 - (r1 - r2)) * delta,  delta = sign(t1 - t2)
+Metrics: OPA (ordered pair accuracy), Kendall's tau, APE of the selected
+configuration, and top-k speedup over the platform default.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def pairwise_ranking_loss(scores, runtimes, valid=None):
+    """scores/runtimes: (B, G). Margin ranking loss over within-row pairs."""
+    s1 = scores[:, :, None]
+    s2 = scores[:, None, :]
+    t1 = runtimes[:, :, None]
+    t2 = runtimes[:, None, :]
+    delta = jnp.sign(t1 - t2)
+    # hinge on the signed score difference; delta==0 pairs contribute 0
+    raw = jnp.maximum(0.0, 1.0 - (s1 - s2) * delta) * jnp.abs(delta)
+    mask = jnp.abs(delta) > 0
+    if valid is not None:
+        pair_valid = valid[:, :, None] & valid[:, None, :]
+        mask = mask & pair_valid
+    return jnp.sum(raw * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def ordered_pair_accuracy(scores: np.ndarray, runtimes: np.ndarray) -> float:
+    """Fraction of config pairs whose predicted order matches the true order."""
+    total, correct = 0, 0
+    for s, t in zip(np.atleast_2d(scores), np.atleast_2d(runtimes)):
+        ds = np.sign(s[:, None] - s[None, :])
+        dt = np.sign(t[:, None] - t[None, :])
+        m = dt != 0
+        total += int(m.sum())
+        correct += int(((ds == dt) & m).sum())
+    return correct / max(total, 1)
+
+
+def kendall_tau(scores: np.ndarray, runtimes: np.ndarray) -> float:
+    """Mean Kendall's tau-b across matrices (rows)."""
+    from scipy.stats import kendalltau
+    taus = []
+    for s, t in zip(np.atleast_2d(scores), np.atleast_2d(runtimes)):
+        tau, _ = kendalltau(s, t)
+        if np.isfinite(tau):
+            taus.append(tau)
+    return float(np.mean(taus)) if taus else 0.0
+
+
+def topk_speedup(scores: np.ndarray, runtimes_full: np.ndarray,
+                 default_index: int, k: int = 1):
+    """Per-matrix speedup of the best of the model's top-k picks vs default.
+
+    Mirrors the paper's evaluation: run the k predicted-best configs on the
+    target, keep the fastest, compare against the default configuration.
+    Returns (speedups (n,), ape (n,)).
+    """
+    scores = np.atleast_2d(scores)
+    runtimes_full = np.atleast_2d(runtimes_full)
+    n = scores.shape[0]
+    sp = np.zeros(n)
+    ape = np.zeros(n)
+    for i in range(n):
+        pick = np.argsort(scores[i])[:k]
+        t_model = runtimes_full[i, pick].min()
+        t_default = runtimes_full[i, default_index]
+        t_opt = runtimes_full[i].min()
+        sp[i] = t_default / t_model
+        ape[i] = abs(t_model - t_opt) / t_opt * 100.0
+    return sp, ape
+
+
+def geomean(x) -> float:
+    x = np.asarray(x, np.float64)
+    return float(np.exp(np.log(np.maximum(x, 1e-12)).mean()))

@@ -1,0 +1,126 @@
+"""Minimal functional NN substrate (no flax): params are plain dict pytrees.
+
+Conventions: every layer is an (init, apply) pair. Images are NCHW to match
+the density pyramid layout (C, R, R).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _he(key, shape, fan_in):
+    return jax.random.normal(key, shape) * jnp.sqrt(2.0 / fan_in)
+
+
+# ----------------------------------------------------------------- dense
+
+def dense_init(key, din, dout):
+    kw, _ = jax.random.split(key)
+    return {"w": _he(kw, (din, dout), din), "b": jnp.zeros((dout,))}
+
+
+def dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def mlp_init(key, dims):
+    keys = jax.random.split(key, len(dims) - 1)
+    return [dense_init(k, a, b) for k, a, b in zip(keys, dims[:-1], dims[1:])]
+
+
+def mlp(layers, x, final_act=False):
+    for i, p in enumerate(layers):
+        x = dense(p, x)
+        if i < len(layers) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ------------------------------------------------------------------ conv
+
+def conv_init(key, cin, cout, ksize):
+    kw, _ = jax.random.split(key)
+    w = _he(kw, (cout, cin, ksize, ksize), cin * ksize * ksize)
+    return {"w": w, "b": jnp.zeros((cout,))}
+
+
+def conv(p, x, stride=1):
+    """x: (B, C, H, W) -> (B, Cout, H', W'), SAME padding."""
+    y = lax.conv_general_dilated(
+        x, p["w"], window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    return y + p["b"][None, :, None, None]
+
+
+def max_pool(x, window=2):
+    return lax.reduce_window(x, -jnp.inf, lax.max,
+                             (1, 1, window, window), (1, 1, window, window),
+                             "VALID")
+
+
+def global_avg_pool(x):
+    return x.mean(axis=(2, 3))
+
+
+# ------------------------------------------------------- layer norm (1d)
+
+def layernorm_init(dim):
+    return {"g": jnp.ones((dim,)), "b": jnp.zeros((dim,))}
+
+
+def layernorm(p, x, eps=1e-6):
+    mu = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * p["g"] + p["b"]
+
+
+# ------------------------------------------------------ recurrent cells
+# Used only by the Fig. 8 predictor ablation (LSTM/GRU alternatives).
+
+def lstm_init(key, din, dh):
+    k1, k2 = jax.random.split(key)
+    return {"wx": _he(k1, (din, 4 * dh), din), "wh": _he(k2, (dh, 4 * dh), dh),
+            "b": jnp.zeros((4 * dh,))}
+
+
+def lstm_apply(p, xs):
+    """xs: (B, T, D) -> final hidden (B, H)."""
+    dh = p["wh"].shape[0]
+    B = xs.shape[0]
+
+    def step(carry, x):
+        h, c = carry
+        z = x @ p["wx"] + h @ p["wh"] + p["b"]
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), None
+
+    init = (jnp.zeros((B, dh)), jnp.zeros((B, dh)))
+    (h, _), _ = lax.scan(step, init, jnp.swapaxes(xs, 0, 1))
+    return h
+
+
+def gru_init(key, din, dh):
+    k1, k2 = jax.random.split(key)
+    return {"wx": _he(k1, (din, 3 * dh), din), "wh": _he(k2, (dh, 3 * dh), dh),
+            "b": jnp.zeros((3 * dh,))}
+
+
+def gru_apply(p, xs):
+    dh = p["wh"].shape[0]
+    B = xs.shape[0]
+
+    def step(h, x):
+        zx = x @ p["wx"] + p["b"]
+        zh = h @ p["wh"]
+        r = jax.nn.sigmoid(zx[..., :dh] + zh[..., :dh])
+        u = jax.nn.sigmoid(zx[..., dh:2 * dh] + zh[..., dh:2 * dh])
+        n = jnp.tanh(zx[..., 2 * dh:] + r * zh[..., 2 * dh:])
+        h = (1 - u) * n + u * h
+        return h, None
+
+    h, _ = lax.scan(step, jnp.zeros((B, dh)), jnp.swapaxes(xs, 0, 1))
+    return h

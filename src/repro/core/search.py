@@ -1,0 +1,68 @@
+"""Configuration search over a cost model's predictions (paper §2.3).
+
+The paper's spaces are small enough for exhaustive scoring (256/270 configs);
+``topk_exhaustive`` is the production path. ``simulated_annealing`` is the
+auxiliary search used when a space is too large to enumerate (the CPU space
+here, and any future accelerator with combinatorial knobs).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def topk_exhaustive(scores: np.ndarray, k: int = 5) -> np.ndarray:
+    """scores: (n_cfg,) -> indices of the k best (lowest predicted cost)."""
+    k = min(k, scores.shape[0])
+    idx = np.argpartition(scores, k - 1)[:k]
+    return idx[np.argsort(scores[idx])]
+
+
+def simulated_annealing(score_fn, n_configs: int, neighbors_fn=None,
+                        steps: int = 500, t0: float = 1.0, t1: float = 0.01,
+                        seed: int = 0, batch: int = 1):
+    """Generic SA over config indices.
+
+    score_fn: (indices (m,)) -> scores (m,)   (lower is better)
+    neighbors_fn: index -> candidate neighbor indices; default = random jump.
+    Returns (best_index, best_score, trace).
+    """
+    rng = np.random.default_rng(seed)
+    cur = int(rng.integers(n_configs))
+    cur_s = float(score_fn(np.asarray([cur]))[0])
+    best, best_s = cur, cur_s
+    trace = [best_s]
+    for i in range(steps):
+        t = t0 * (t1 / t0) ** (i / max(steps - 1, 1))
+        if neighbors_fn is not None:
+            cands = np.asarray(neighbors_fn(cur))
+            nxt = int(cands[rng.integers(len(cands))])
+        else:
+            nxt = int(rng.integers(n_configs))
+        s = float(score_fn(np.asarray([nxt]))[0])
+        if s < cur_s or rng.random() < np.exp(-(s - cur_s) / max(t, 1e-9)):
+            cur, cur_s = nxt, s
+        if cur_s < best_s:
+            best, best_s = cur, cur_s
+        trace.append(best_s)
+    return best, best_s, trace
+
+
+def hamming_neighbors(space, index: int) -> list[int]:
+    """Configs differing in exactly one parameter (for SA on product spaces)."""
+    params = space.params
+    names = list(params)
+    n = space.n_configs
+    current = {k: params[k][index] for k in names}
+    out = []
+    for k in names:
+        for v in space.choices[k]:
+            if v == current[k]:
+                continue
+            match = np.ones(n, bool)
+            for k2 in names:
+                want = v if k2 == k else current[k2]
+                match &= params[k2] == want
+            idx = np.flatnonzero(match)
+            if idx.size:
+                out.append(int(idx[0]))
+    return out

@@ -1,0 +1,194 @@
+"""Cost-model training/fine-tuning loop (paper Table 3 hyperparameters).
+
+Training batches pair each sampled matrix with G of its observed
+configurations; the pairwise margin ranking loss is computed within each
+matrix's group (runtimes across different matrices are not comparable).
+
+Few-shot fine-tuning reuses pre-trained parameters, swaps the latent codec
+for the target platform's autoencoder, and optionally freezes the early
+featurizer blocks (partial fine-tuning, Shen et al. 2021).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cognate import CostModelConfig, apply_cost_model, init_cost_model
+from repro.core.latent import LatentCodec
+from repro.core.loss import (geomean, kendall_tau, ordered_pair_accuracy,
+                             pairwise_ranking_loss, topk_speedup)
+from repro.data.dataset import CostDataset
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    epochs: int = 100
+    batch_matrices: int = 16
+    group: int = 8                 # configs per matrix per step
+    lr: float = 1e-4               # paper Table 3
+    seed: int = 0
+    freeze_prefixes: tuple = ()    # parameter paths with zeroed gradients
+    eval_every: int = 5
+    min_steps_per_epoch: int = 4
+
+
+def _freeze_mask(params, prefixes):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    mask = []
+    for path, _ in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        mask.append(not any(name.startswith(pre) for pre in prefixes))
+    return jax.tree_util.tree_unflatten(treedef, mask)
+
+
+def _per_matrix_samples(ds: CostDataset):
+    by_mat = [[] for _ in range(ds.n_matrices)]
+    for mi, ci in zip(ds.sample_matrix, ds.sample_config):
+        by_mat[mi].append(ci)
+    return [np.asarray(v, np.int64) for v in by_mat]
+
+
+def train_cost_model(model_cfg: CostModelConfig, dataset: CostDataset,
+                     codec: LatentCodec, train_cfg: TrainConfig,
+                     init_params=None, val_dataset: CostDataset | None = None,
+                     verbose: bool = False):
+    """Returns (params, history dict)."""
+    key = jax.random.PRNGKey(train_cfg.seed)
+    params = init_params if init_params is not None else \
+        init_cost_model(key, model_cfg)
+    opt_cfg = AdamWConfig(lr=train_cfg.lr, grad_clip_norm=1.0)
+    opt_state = adamw_init(params, opt_cfg)
+    grad_mask = _freeze_mask(params, train_cfg.freeze_prefixes) \
+        if train_cfg.freeze_prefixes else None
+
+    z_table = jnp.asarray(codec.encode(dataset.het))          # (n_cfg, L)
+    pyramids = jnp.asarray(dataset.pyramids)
+    homog_all = jnp.asarray(dataset.homog)                    # (n_mat, n_cfg, 53)
+    runtimes = jnp.asarray(np.log(dataset.runtimes_full + 1e-9))
+    by_mat = _per_matrix_samples(dataset)
+
+    def loss_fn(p, pyr, hom, z, rt):
+        scores = apply_cost_model(p, model_cfg, pyr, hom, z)
+        return pairwise_ranking_loss(scores, rt)
+
+    @jax.jit
+    def step(p, s, pyr, hom, z, rt):
+        l, g = jax.value_and_grad(loss_fn)(p, pyr, hom, z, rt)
+        if grad_mask is not None:
+            g = jax.tree_util.tree_map(
+                lambda m, gr: gr if m else jnp.zeros_like(gr), grad_mask, g)
+        p, s, m = adamw_update(p, g, s, opt_cfg)
+        return p, s, l
+
+    rng = np.random.default_rng(train_cfg.seed)
+    B = min(train_cfg.batch_matrices, dataset.n_matrices)
+    G = train_cfg.group
+    steps_per_epoch = max(int(np.ceil(dataset.n_matrices / B)),
+                          train_cfg.min_steps_per_epoch)
+    history = {"loss": [], "val_loss": [], "val_opa": [], "val_ktau": [],
+               "epoch_time": []}
+
+    for epoch in range(train_cfg.epochs):
+        t0 = time.time()
+        tot = 0.0
+        for _ in range(steps_per_epoch):
+            mats = rng.choice(dataset.n_matrices, size=B,
+                              replace=dataset.n_matrices < B)
+            cfg_idx = np.stack([rng.choice(by_mat[m], size=G,
+                                           replace=by_mat[m].size < G)
+                                for m in mats])              # (B, G)
+            pyr = pyramids[mats]
+            hom = homog_all[jnp.asarray(mats)[:, None], cfg_idx]
+            z = z_table[cfg_idx]
+            rt = runtimes[jnp.asarray(mats)[:, None], cfg_idx]
+            params, opt_state, l = step(params, opt_state, pyr, hom, z, rt)
+            tot += float(l)
+        history["loss"].append(tot / steps_per_epoch)
+        history["epoch_time"].append(time.time() - t0)
+        if val_dataset is not None and (epoch % train_cfg.eval_every == 0 or
+                                        epoch == train_cfg.epochs - 1):
+            m = evaluate_cost_model(params, model_cfg, val_dataset, codec,
+                                    ks=(1,), observed_only=True)
+            history["val_loss"].append(m["prl"])
+            history["val_opa"].append(m["opa"])
+            history["val_ktau"].append(m["ktau"])
+        if verbose:
+            print(f"  epoch {epoch:3d} loss {history['loss'][-1]:.4f} "
+                  f"({history['epoch_time'][-1]:.1f}s)")
+    return params, history
+
+
+# --------------------------------------------------------------- evaluation
+
+def score_full_space(params, model_cfg: CostModelConfig, dataset: CostDataset,
+                     codec: LatentCodec, chunk: int = 256) -> np.ndarray:
+    """Score every config of the space for every matrix -> (n_mat, n_cfg)."""
+    from repro.core.cognate import matrix_embedding, score_configs
+    z_table = jnp.asarray(codec.encode(dataset.het))
+    n_cfg = z_table.shape[0]
+    pad = (-n_cfg) % chunk
+    z_pad = jnp.pad(z_table, ((0, pad), (0, 0)))
+
+    emb_fn = jax.jit(lambda pyr: matrix_embedding(params, model_cfg, pyr))
+    score_fn = jax.jit(lambda sm, hom, z: score_configs(params, model_cfg,
+                                                        sm, hom, z))
+    out = np.zeros((dataset.n_matrices, n_cfg), np.float32)
+    for mi in range(dataset.n_matrices):
+        sm = emb_fn(jnp.asarray(dataset.pyramids[mi:mi + 1]))
+        hom = jnp.pad(jnp.asarray(dataset.homog[mi]), ((0, pad), (0, 0)))
+        scores = []
+        for c0 in range(0, n_cfg + pad, chunk):
+            s = score_fn(sm, hom[None, c0:c0 + chunk], z_pad[None, c0:c0 + chunk])
+            scores.append(np.asarray(s[0]))
+        out[mi] = np.concatenate(scores)[:n_cfg]
+    return out
+
+
+def evaluate_cost_model(params, model_cfg: CostModelConfig,
+                        dataset: CostDataset, codec: LatentCodec,
+                        ks=(1, 5), observed_only: bool = False) -> dict:
+    """Paper evaluation: rank metrics + top-k speedups vs the default config."""
+    scores = score_full_space(params, model_cfg, dataset, codec)
+    rts = dataset.runtimes_full
+    if observed_only:
+        # rank metrics restricted to the observed sample subset (validation)
+        opa_s, opa_t = [], []
+        for mi in range(dataset.n_matrices):
+            sel = dataset.sample_config[dataset.sample_matrix == mi]
+            if sel.size >= 2:
+                opa_s.append(scores[mi, sel])
+                opa_t.append(rts[mi, sel])
+        opa = np.mean([ordered_pair_accuracy(s[None], t[None])
+                       for s, t in zip(opa_s, opa_t)]) if opa_s else 0.0
+        ktau = np.mean([kendall_tau(s[None], t[None])
+                        for s, t in zip(opa_s, opa_t)]) if opa_s else 0.0
+        prl = float(np.mean([
+            np.mean(np.maximum(0, 1 - (s[:, None] - s[None, :]) *
+                               np.sign(t[:, None] - t[None, :])) *
+                    (np.sign(t[:, None] - t[None, :]) != 0))
+            for s, t in zip(opa_s, opa_t)])) if opa_s else 0.0
+    else:
+        opa = ordered_pair_accuracy(scores, rts)
+        ktau = kendall_tau(scores, rts)
+        prl = 0.0
+    if observed_only and not opa_s:
+        # validation set carries full labels, no sampled subset: fall back
+        # to full-space rank metrics
+        opa = ordered_pair_accuracy(scores, rts)
+        ktau = kendall_tau(scores, rts)
+    result = {"opa": float(opa), "ktau": float(ktau), "prl": prl}
+    for k in ks:
+        sp, ape = topk_speedup(scores, rts, dataset.default_index, k=k)
+        result[f"top{k}_speedup"] = sp
+        result[f"top{k}_geomean"] = geomean(sp)
+        result[f"top{k}_ape"] = float(ape.mean())
+    # oracle: score == true runtime (lower is better) -> picks the optimum
+    opt_sp, _ = topk_speedup(rts, rts, dataset.default_index, k=1)
+    result["optimal_speedup"] = opt_sp
+    result["optimal_geomean"] = geomean(opt_sp)
+    return result

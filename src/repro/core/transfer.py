@@ -1,0 +1,93 @@
+"""Pre-train -> few-shot fine-tune orchestration (paper §4.1, Fig. 1).
+
+``TransferPipeline`` owns the three-stage recipe:
+  1. pre-train the shared model on the cheap source platform (CPU),
+  2. train the target platform's latent autoencoder *unsupervised* on its
+     enumerated config space (zero simulator samples),
+  3. few-shot fine-tune on labels from k target matrices.
+
+It also provides every baseline the paper compares against: zero-shot,
+no-transfer, WACO+FA, WACO+FM.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.cognate import CostModelConfig
+from repro.core.latent import LatentCodec, make_codec
+from repro.core.trainer import TrainConfig, evaluate_cost_model, train_cost_model
+from repro.data.dataset import CostDataset
+
+# partial fine-tuning: the first two featurizer blocks carry low-level
+# statistics that transfer as-is (Neyshabur et al. 2020; Shen et al. 2021)
+DEFAULT_FREEZE = ("featurizer/blocks/0", "featurizer/blocks/1")
+
+
+@dataclasses.dataclass
+class TransferResult:
+    params: object
+    history: dict
+    codec: LatentCodec
+    model_cfg: CostModelConfig
+
+
+def pretrain_source(model_cfg: CostModelConfig, source_ds: CostDataset,
+                    epochs: int = 100, seed: int = 0, lr: float = 1e-4,
+                    val_dataset: CostDataset | None = None,
+                    codec: LatentCodec | None = None, latent_kind: str = "ae",
+                    ae_epochs: int = 300, verbose=False) -> TransferResult:
+    codec = codec or make_codec(latent_kind, source_ds.het, seed=seed,
+                                epochs=ae_epochs, fa_platform=source_ds.platform)
+    cfg = TrainConfig(epochs=epochs, lr=lr, seed=seed)
+    params, hist = train_cost_model(model_cfg, source_ds, codec, cfg,
+                                    val_dataset=val_dataset, verbose=verbose)
+    return TransferResult(params, hist, codec, model_cfg)
+
+
+def finetune_target(pre: TransferResult, target_ds: CostDataset,
+                    epochs: int = 100, seed: int = 0, lr: float = 1e-4,
+                    freeze=DEFAULT_FREEZE, latent_kind: str = "ae",
+                    val_dataset: CostDataset | None = None,
+                    codec: LatentCodec | None = None,
+                    ae_epochs: int = 300, verbose=False) -> TransferResult:
+    """Few-shot fine-tuning on the target platform (paper: 5 matrices)."""
+    codec = codec or make_codec(latent_kind, target_ds.het, seed=seed,
+                                epochs=ae_epochs, fa_platform=target_ds.platform)
+    cfg = TrainConfig(epochs=epochs, lr=lr, seed=seed, freeze_prefixes=freeze,
+                      batch_matrices=min(8, target_ds.n_matrices))
+    params, hist = train_cost_model(pre.model_cfg, target_ds, codec, cfg,
+                                    init_params=pre.params,
+                                    val_dataset=val_dataset, verbose=verbose)
+    return TransferResult(params, hist, codec, pre.model_cfg)
+
+
+def train_scratch(model_cfg: CostModelConfig, target_ds: CostDataset,
+                  epochs: int = 100, seed: int = 0, lr: float = 1e-4,
+                  latent_kind: str = "ae", ae_epochs: int = 300,
+                  verbose=False) -> TransferResult:
+    """'No transfer' baseline: train only on target samples."""
+    codec = make_codec(latent_kind, target_ds.het, seed=seed, epochs=ae_epochs,
+                       fa_platform=target_ds.platform)
+    cfg = TrainConfig(epochs=epochs, lr=lr, seed=seed,
+                      batch_matrices=min(8, target_ds.n_matrices))
+    params, hist = train_cost_model(model_cfg, target_ds, codec, cfg,
+                                    verbose=verbose)
+    return TransferResult(params, hist, codec, model_cfg)
+
+
+def zero_shot(pre: TransferResult, target_ds: CostDataset,
+              latent_kind: str = "ae", seed: int = 0,
+              ae_epochs: int = 300) -> TransferResult:
+    """Source model applied to the target with no fine-tuning. The target's
+    latent codec exists (it is unsupervised) but the predictor never saw its
+    statistics — the paper's point about why zero-shot underperforms."""
+    codec = make_codec(latent_kind, target_ds.het, seed=seed, epochs=ae_epochs,
+                       fa_platform=target_ds.platform)
+    return TransferResult(pre.params, pre.history, codec, pre.model_cfg)
+
+
+def evaluate(result: TransferResult, eval_ds: CostDataset, ks=(1, 5)) -> dict:
+    return evaluate_cost_model(result.params, result.model_cfg, eval_ds,
+                               result.codec, ks=ks)

@@ -1,0 +1,3 @@
+from repro.data.matrices import SparseMatrix, generate_matrix, generate_suite, FAMILIES
+from repro.data.features import density_pyramid, matrix_stats, STAT_NAMES
+from repro.data.dataset import CostDataset, collect_dataset, split_suite, CostMeter

@@ -1,0 +1,131 @@
+"""Label-collection pipeline and dataset containers (paper §4.1, App. A).
+
+``collect_dataset`` runs a platform's runtime model over sampled program
+configurations for each matrix and meters the data-collection cost
+(DCE = beta_platform * |D|), reproducing the paper's asymmetric label economy
+(CPU samples cost 1 unit; SPADE simulator samples cost 1000).
+
+A ``CostDataset`` keeps per-matrix featurizations (density pyramid + config
+feature views) plus flat (matrix_idx, config_idx, runtime) samples, ready for
+the pairwise-ranking trainer.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from typing import TYPE_CHECKING
+
+from repro.data.features import density_pyramid, matrix_stats
+from repro.data.matrices import SparseMatrix, generate_suite
+
+if TYPE_CHECKING:  # avoid circular import (hw.platforms uses data.features)
+    from repro.hw.platforms import Platform
+
+__all__ = ["CostMeter", "CostDataset", "collect_dataset", "split_suite"]
+
+
+@dataclasses.dataclass
+class CostMeter:
+    """Tracks the paper's Data Collection Expense objective."""
+    units: float = 0.0
+
+    def charge(self, platform: "Platform", n_samples: int):
+        self.units += platform.beta * n_samples
+
+    @property
+    def dce_millions(self) -> float:
+        return self.units / 1e6
+
+
+@dataclasses.dataclass
+class CostDataset:
+    platform: str
+    op: str
+    pyramids: np.ndarray        # (n_matrices, C, R, R) float32
+    homog: np.ndarray           # (n_matrices, n_space_configs, 53) float32
+    het: np.ndarray             # (n_space_configs, het_dim) float32
+    stats: np.ndarray           # (n_matrices, n_stats)
+    runtimes_full: np.ndarray   # (n_matrices, n_space_configs) float32, ms
+    sample_matrix: np.ndarray   # (n_samples,) int32 — observed label subset
+    sample_config: np.ndarray   # (n_samples,) int32
+    matrix_names: list[str]
+    default_index: int
+
+    @property
+    def n_matrices(self) -> int:
+        return self.pyramids.shape[0]
+
+    @property
+    def n_samples(self) -> int:
+        return int(self.sample_matrix.shape[0])
+
+    def sample_runtime(self) -> np.ndarray:
+        return self.runtimes_full[self.sample_matrix, self.sample_config]
+
+    def observed_mask(self) -> np.ndarray:
+        m = np.zeros(self.runtimes_full.shape, bool)
+        m[self.sample_matrix, self.sample_config] = True
+        return m
+
+    def subset_matrices(self, idx) -> "CostDataset":
+        idx = np.asarray(idx)
+        remap = -np.ones(self.n_matrices, np.int64)
+        remap[idx] = np.arange(idx.size)
+        keep = np.isin(self.sample_matrix, idx)
+        return CostDataset(
+            self.platform, self.op, self.pyramids[idx], self.homog[idx],
+            self.het, self.stats[idx], self.runtimes_full[idx],
+            remap[self.sample_matrix[keep]].astype(np.int32),
+            self.sample_config[keep], [self.matrix_names[i] for i in idx],
+            self.default_index)
+
+
+def collect_dataset(platform: "Platform", matrices: list[SparseMatrix], op: str,
+                    n_configs_per_matrix: int, seed: int = 0,
+                    resolution: int = 64, meter: CostMeter | None = None,
+                    full_labels: bool = True) -> CostDataset:
+    """Evaluate sampled configurations of each matrix on ``platform``.
+
+    ``runtimes_full`` holds the exhaustive ground truth (used only for the
+    oracle/optimal speedup evaluation, as the paper does for its 'optimal'
+    line); the *observed* training samples are the random subset recorded in
+    ``sample_matrix``/``sample_config`` and only those are charged to the
+    cost meter.
+    """
+    rng = np.random.default_rng(seed)
+    space = platform.space
+    n_cfg = space.n_configs
+    n_configs_per_matrix = min(n_configs_per_matrix, n_cfg)
+
+    pyramids, homogs, stats_l, full_l = [], [], [], []
+    sm, sc = [], []
+    for mi, mat in enumerate(matrices):
+        st = matrix_stats(mat)
+        pyramids.append(density_pyramid(mat, resolution))
+        homogs.append(space.homogeneous(mat.n_cols))
+        stats_l.append(st)
+        rt = platform.runtime(st, op, matrix_key=hash(mat.name) & 0xFFFF,
+                              n_cols=mat.n_cols)
+        full_l.append(rt.astype(np.float32))
+        cfg_idx = rng.choice(n_cfg, size=n_configs_per_matrix, replace=False)
+        sm.append(np.full(n_configs_per_matrix, mi, np.int32))
+        sc.append(cfg_idx.astype(np.int32))
+        if meter is not None:
+            meter.charge(platform, n_configs_per_matrix)
+
+    return CostDataset(
+        platform.name, op,
+        np.stack(pyramids), np.stack(homogs).astype(np.float32),
+        space.heterogeneous().astype(np.float32),
+        np.stack(stats_l), np.stack(full_l),
+        np.concatenate(sm), np.concatenate(sc),
+        [m.name for m in matrices], space.default_index)
+
+
+def split_suite(n_train: int, n_eval: int, seed: int = 0,
+                size_range=(256, 16384)):
+    """Disjoint train/eval matrix suites (paper: 1,500 total, 715 eval)."""
+    suite = generate_suite(n_train + n_eval, seed=seed, size_range=size_range)
+    return suite[:n_train], suite[n_train:]

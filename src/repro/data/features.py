@@ -1,0 +1,100 @@
+"""Featurization of sparsity patterns.
+
+Two representations:
+
+1. ``density_pyramid`` — the fixed-resolution log-density grid consumed by the
+   CNN input featurizer (TPU-native replacement for WACO's 256x256 submanifold
+   point cloud, see DESIGN.md §4). Channels: [log1p density, binary presence,
+   row-marginal, col-marginal].
+
+2. ``matrix_stats`` — a vector of structural summary statistics consumed by the
+   analytical platform models in ``repro/hw/platforms.py`` (tile-reuse proxies
+   at several block sizes, row-length skew, bandedness).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.matrices import SparseMatrix
+
+__all__ = ["density_pyramid", "matrix_stats", "STAT_NAMES", "PYRAMID_CHANNELS"]
+
+PYRAMID_CHANNELS = 4
+
+
+def density_pyramid(mat: SparseMatrix, resolution: int = 64) -> np.ndarray:
+    """Return (C=4, R, R) float32 canonical grid for any matrix size.
+
+    Every matrix is stretched onto an RxR grid; cell value is the nnz count in
+    that bucket. This is the dense analogue of WACO's coordinate downsampling.
+    """
+    R = resolution
+    gr = (mat.rows.astype(np.int64) * R) // max(mat.n_rows, 1)
+    gc = (mat.cols.astype(np.int64) * R) // max(mat.n_cols, 1)
+    flat = gr * R + gc
+    counts = np.bincount(flat, minlength=R * R).astype(np.float32).reshape(R, R)
+    # normalize: cell capacity differs with matrix size; use log scale
+    cap = (mat.n_rows / R) * (mat.n_cols / R)
+    density = np.log1p(counts) / np.log1p(max(cap, 2.0))
+    presence = (counts > 0).astype(np.float32)
+    row_marg = presence.mean(axis=1, keepdims=True) * np.ones((1, R), np.float32)
+    col_marg = presence.mean(axis=0, keepdims=True) * np.ones((R, 1), np.float32)
+    return np.stack([density, presence, row_marg, col_marg]).astype(np.float32)
+
+
+STAT_NAMES = [
+    "log_rows", "log_cols", "log_nnz", "log_density",
+    "row_mean", "row_cv", "row_max_ratio",
+    "col_cv", "bandwidth", "diag_frac",
+    "block8_fill", "block32_fill", "block128_fill",
+    "seg_locality",
+]
+
+
+def _block_fill(mat: SparseMatrix, bs: int) -> float:
+    """Fraction of touched (bs x bs) blocks that are touched — reuse proxy.
+
+    Returns mean nnz per non-empty block normalized by bs (higher => more
+    spatial clustering => more dense-operand reuse per tile).
+    """
+    br = mat.rows.astype(np.int64) // bs
+    bc = mat.cols.astype(np.int64) // bs
+    nb_cols = (mat.n_cols + bs - 1) // bs
+    key = br * nb_cols + bc
+    uniq, cnt = np.unique(key, return_counts=True)
+    if uniq.size == 0:
+        return 0.0
+    return float(cnt.mean()) / float(bs)
+
+
+def matrix_stats(mat: SparseMatrix) -> np.ndarray:
+    """(len(STAT_NAMES),) float64 structural summary used by hw models."""
+    rc = mat.row_counts().astype(np.float64)
+    cc = mat.col_counts().astype(np.float64)
+    rmean = rc.mean() if rc.size else 0.0
+    rstd = rc.std() if rc.size else 0.0
+    row_cv = rstd / max(rmean, 1e-9)
+    row_max_ratio = rc.max() / max(rmean, 1e-9) if rc.size else 0.0
+    cmean = cc.mean() if cc.size else 0.0
+    col_cv = (cc.std() / max(cmean, 1e-9)) if cc.size else 0.0
+    # normalized mean distance from the (stretched) diagonal
+    diag_col = mat.rows.astype(np.float64) * (mat.n_cols / max(mat.n_rows, 1))
+    band = np.abs(mat.cols.astype(np.float64) - diag_col)
+    bandwidth = float(band.mean()) / max(mat.n_cols, 1)
+    diag_frac = float((band < max(mat.n_cols, 1) * 0.01).mean())
+    # locality: mean column gap between consecutive nnz within a row (sorted COO)
+    same_row = mat.rows[1:] == mat.rows[:-1]
+    if same_row.any():
+        gaps = (mat.cols[1:].astype(np.float64) - mat.cols[:-1])[same_row]
+        seg_locality = float(np.clip(np.abs(gaps), 0, None).mean()) / max(mat.n_cols, 1)
+    else:
+        seg_locality = 1.0
+    vals = [
+        np.log2(mat.n_rows), np.log2(mat.n_cols), np.log2(max(mat.nnz, 1)),
+        np.log2(max(mat.density, 1e-12)),
+        rmean, row_cv, row_max_ratio,
+        col_cv, bandwidth, diag_frac,
+        _block_fill(mat, 8), _block_fill(mat, 32), _block_fill(mat, 128),
+        seg_locality,
+    ]
+    return np.asarray(vals, dtype=np.float64)

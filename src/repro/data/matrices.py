@@ -1,0 +1,228 @@
+"""Synthetic SuiteSparse-like sparse matrix generation.
+
+The paper draws inputs from the SuiteSparse Matrix Collection (Davis & Hu,
+2011), which spans circuit, FEM/mesh, graph, optimization, and statistical
+matrices.  Offline we synthesize structurally analogous families so that the
+learning problem (sparsity pattern -> best program configuration) retains the
+same diversity of row-length skew, bandedness, and block structure that makes
+configuration selection input-sensitive.
+
+Matrices are COO with deduplicated, sorted coordinates.  Generation is pure
+numpy (fast on one core) and fully determined by (family, size, seed).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["SparseMatrix", "generate_matrix", "generate_suite", "FAMILIES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseMatrix:
+    """A COO sparse pattern. Values are implicit (pattern matters, not values)."""
+    name: str
+    family: str
+    n_rows: int
+    n_cols: int
+    rows: np.ndarray  # int32 [nnz], sorted row-major
+    cols: np.ndarray  # int32 [nnz]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.rows.shape[0])
+
+    @property
+    def density(self) -> float:
+        return self.nnz / float(self.n_rows * self.n_cols)
+
+    def row_counts(self) -> np.ndarray:
+        return np.bincount(self.rows, minlength=self.n_rows)
+
+    def col_counts(self) -> np.ndarray:
+        return np.bincount(self.cols, minlength=self.n_cols)
+
+    def to_csr_indptr(self) -> np.ndarray:
+        return np.concatenate([[0], np.cumsum(self.row_counts())]).astype(np.int64)
+
+    def to_dense(self, dtype=np.float32, values: np.ndarray | None = None):
+        d = np.zeros((self.n_rows, self.n_cols), dtype=dtype)
+        d[self.rows, self.cols] = 1.0 if values is None else values
+        return d
+
+
+def _dedup(n_rows, n_cols, rows, cols):
+    rows = np.clip(rows, 0, n_rows - 1).astype(np.int64)
+    cols = np.clip(cols, 0, n_cols - 1).astype(np.int64)
+    key = rows * n_cols + cols
+    key = np.unique(key)
+    return (key // n_cols).astype(np.int32), (key % n_cols).astype(np.int32)
+
+
+def _finalize(name, family, n_rows, n_cols, rows, cols) -> SparseMatrix:
+    rows, cols = _dedup(n_rows, n_cols, rows, cols)
+    if rows.size == 0:  # degenerate fallback: main diagonal
+        d = np.arange(min(n_rows, n_cols), dtype=np.int32)
+        rows, cols = d, d
+    return SparseMatrix(name, family, n_rows, n_cols, rows, cols)
+
+
+# ---------------------------------------------------------------- families
+
+def _uniform(rng, n, m, target_nnz):
+    rows = rng.integers(0, n, target_nnz)
+    cols = rng.integers(0, m, target_nnz)
+    return rows, cols
+
+
+def _powerlaw(rng, n, m, target_nnz):
+    """Scale-free graph style: row degrees ~ Zipf (web/social graphs)."""
+    alpha = rng.uniform(1.6, 2.6)
+    deg = rng.zipf(alpha, n).astype(np.int64)
+    deg = np.minimum(deg, m // 2 + 1)
+    deg = (deg * (target_nnz / max(deg.sum(), 1))).astype(np.int64)
+    deg = np.maximum(deg, 1)
+    rows = np.repeat(np.arange(n), deg)
+    # preferential attachment on columns too
+    col_w = rng.zipf(alpha, m).astype(np.float64)
+    col_p = col_w / col_w.sum()
+    cols = rng.choice(m, size=rows.size, p=col_p)
+    return rows, cols
+
+
+def _banded(rng, n, m, target_nnz):
+    """FEM / finite-difference style banded matrices."""
+    half_bw = max(1, int(target_nnz / (2 * n)) + rng.integers(0, 4))
+    rows = np.repeat(np.arange(n), 2 * half_bw + 1)
+    offs = np.tile(np.arange(-half_bw, half_bw + 1), n)
+    cols = (rows * m // n) + offs
+    keep = (cols >= 0) & (cols < m)
+    # random dropout to break perfect structure
+    keep &= rng.random(rows.size) > 0.15
+    return rows[keep], cols[keep]
+
+
+def _block_diag(rng, n, m, target_nnz):
+    """Block-diagonal (circuit / multi-body) with dense-ish blocks."""
+    bs = int(rng.choice([8, 16, 32, 64]))
+    nb = max(1, min(n, m) // bs)
+    density = min(1.0, target_nnz / (nb * bs * bs))
+    rows_l, cols_l = [], []
+    for b in range(nb):
+        cnt = rng.binomial(bs * bs, density)
+        if cnt == 0:
+            continue
+        rows_l.append(rng.integers(0, bs, cnt) + b * bs)
+        cols_l.append(rng.integers(0, bs, cnt) + b * bs)
+    if not rows_l:
+        return np.array([], np.int64), np.array([], np.int64)
+    return np.concatenate(rows_l), np.concatenate(cols_l)
+
+
+def _rmat(rng, n, m, target_nnz):
+    """R-MAT / Kronecker-style recursive graph (power-law + community)."""
+    a, b, c = 0.57, 0.19, 0.19
+    levels_r = int(np.ceil(np.log2(max(n, 2))))
+    levels_c = int(np.ceil(np.log2(max(m, 2))))
+    levels = max(levels_r, levels_c)
+    k = target_nnz
+    rows = np.zeros(k, np.int64)
+    cols = np.zeros(k, np.int64)
+    for _ in range(levels):
+        r = rng.random(k)
+        quad_b = (r >= a) & (r < a + b)
+        quad_c = (r >= a + b) & (r < a + b + c)
+        quad_d = r >= a + b + c
+        rows = rows * 2 + (quad_c | quad_d)
+        cols = cols * 2 + (quad_b | quad_d)
+    return rows % n, cols % m
+
+
+def _clustered(rng, n, m, target_nnz):
+    """Row-clustered: dense row blocks + sparse background (stat/ML)."""
+    n_clusters = int(rng.integers(2, 8))
+    rows_l, cols_l = [], []
+    per = target_nnz // (n_clusters + 1)
+    for _ in range(n_clusters):
+        r0 = rng.integers(0, max(1, n - n // 8))
+        c0 = rng.integers(0, max(1, m - m // 8))
+        h, w = max(1, n // 8), max(1, m // 8)
+        rows_l.append(rng.integers(r0, r0 + h, per))
+        cols_l.append(rng.integers(c0, c0 + w, per))
+    rows_l.append(rng.integers(0, n, per))
+    cols_l.append(rng.integers(0, m, per))
+    return np.concatenate(rows_l), np.concatenate(cols_l)
+
+
+def _mesh2d(rng, n, m, target_nnz):
+    """5-point stencil on a 2D grid (PDE discretizations)."""
+    side = int(np.sqrt(min(n, m)))
+    side = max(side, 2)
+    idx = np.arange(side * side)
+    x, y = idx % side, idx // side
+    nbrs = [(0, 0), (1, 0), (-1, 0), (0, 1), (0, -1)]
+    rows_l, cols_l = [], []
+    for dx, dy in nbrs:
+        nx, ny = x + dx, y + dy
+        keep = (nx >= 0) & (nx < side) & (ny >= 0) & (ny < side)
+        rows_l.append(idx[keep])
+        cols_l.append((ny * side + nx)[keep])
+    rows = np.concatenate(rows_l)
+    cols = np.concatenate(cols_l)
+    return rows % n, cols % m
+
+
+def _arrow(rng, n, m, target_nnz):
+    """Arrowhead / bordered-diagonal (optimization KKT systems)."""
+    d = np.arange(min(n, m))
+    border = max(1, min(n, m) // 64)
+    b_rows = np.repeat(np.arange(border), m // 2)
+    b_cols = rng.integers(0, m, b_rows.size)
+    b2_cols = np.repeat(np.arange(border), n // 2)
+    b2_rows = rng.integers(0, n, b2_cols.size)
+    rows = np.concatenate([d, b_rows, b2_rows])
+    cols = np.concatenate([d, b_cols, b2_cols])
+    return rows, cols
+
+
+FAMILIES = {
+    "uniform": _uniform,
+    "powerlaw": _powerlaw,
+    "banded": _banded,
+    "blockdiag": _block_diag,
+    "rmat": _rmat,
+    "clustered": _clustered,
+    "mesh2d": _mesh2d,
+    "arrow": _arrow,
+}
+
+
+def generate_matrix(family: str, seed: int, n_rows: int | None = None,
+                    n_cols: int | None = None, target_nnz: int | None = None,
+                    size_range=(256, 16384)) -> SparseMatrix:
+    rng = np.random.default_rng(seed)
+    if n_rows is None:
+        lo, hi = np.log2(size_range[0]), np.log2(size_range[1])
+        n_rows = int(2 ** rng.uniform(lo, hi))
+    if n_cols is None:
+        n_cols = n_rows if rng.random() < 0.7 else int(n_rows * 2 ** rng.uniform(-1, 1))
+        n_cols = max(64, n_cols)
+    if target_nnz is None:
+        avg_deg = 2 ** rng.uniform(1.5, 6.0)  # 3..64 nnz per row on average
+        target_nnz = int(min(n_rows * avg_deg, n_rows * n_cols * 0.25))
+    rows, cols = FAMILIES[family](rng, n_rows, n_cols, max(target_nnz, 8))
+    return _finalize(f"{family}_{seed}", family, n_rows, n_cols, rows, cols)
+
+
+def generate_suite(n_matrices: int, seed: int = 0,
+                   size_range=(256, 16384)) -> list[SparseMatrix]:
+    """A balanced suite across families and log-size bins (paper §4.1 binning)."""
+    fams = list(FAMILIES)
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n_matrices):
+        fam = fams[i % len(fams)]
+        out.append(generate_matrix(fam, int(rng.integers(0, 2**31)) + i,
+                                   size_range=size_range))
+    return out

@@ -1,0 +1,4 @@
+from repro.hw.configspace import (ConfigSpace, spade_space, cpu_space, gpu_space,
+                                  tpu_pallas_space, UNIFIED_DIM)
+from repro.hw.platforms import (Platform, CpuPlatform, SpadePlatform, GpuPlatform,
+                                TpuPallasPlatform, get_platform, PLATFORMS)

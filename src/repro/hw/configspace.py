@@ -1,0 +1,237 @@
+"""Program configuration spaces per hardware platform (paper Table 1, §4.1).
+
+Each space enumerates every valid configuration as parallel numpy arrays and
+exposes the two feature views the cost model consumes:
+
+* ``homogeneous(n_cols)``  — the unified 53-d strip-mining/loop-order encoding
+  produced by the phi/pi mapping functions (``repro.hw.mapping``); shared
+  across platforms (feature reuse).
+* ``heterogeneous()``      — per-platform one/multi-hot raw parameters that
+  cannot be mapped; consumed by the per-target latent autoencoder.
+
+SPADE space is exactly the paper's 256 configurations:
+row_panels {4,32,256,2048} x col_panels {1024,16384,65536,NUM_MATRIX_COLS}
+x split {32,256} x barrier x bypass x reorder.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import numpy as np
+
+from repro.hw import mapping
+from repro.hw.mapping import UNIFIED_DIM, encode_unified
+
+__all__ = ["ConfigSpace", "spade_space", "cpu_space", "gpu_space",
+           "tpu_pallas_space", "UNIFIED_DIM"]
+
+
+def _onehot(values: np.ndarray, choices) -> np.ndarray:
+    choices = list(choices)
+    out = np.zeros((len(values), len(choices)), np.float32)
+    for j, c in enumerate(choices):
+        out[:, j] = values == c
+    return out
+
+
+@dataclasses.dataclass
+class ConfigSpace:
+    platform: str
+    params: dict[str, np.ndarray]          # raw parameter columns, each (n,)
+    choices: dict[str, list]               # value set per parameter
+    default_index: int                     # programming-system default config
+
+    @property
+    def n_configs(self) -> int:
+        return len(next(iter(self.params.values())))
+
+    def param_matrix(self) -> np.ndarray:
+        return np.stack([self.params[k] for k in self.params], axis=1)
+
+    # ---- feature views ----
+    def unified(self, n_cols: int):
+        """Return (I, J, K, order(n,7), flag) in the unified space."""
+        raise NotImplementedError
+
+    def homogeneous(self, n_cols: int) -> np.ndarray:
+        I, J, K, order, flag = self.unified(n_cols)
+        return encode_unified(I, J, K, order, flag)
+
+    def heterogeneous(self) -> np.ndarray:
+        raise NotImplementedError
+
+    @property
+    def het_dim(self) -> int:
+        return self.heterogeneous().shape[1]
+
+
+def _product_space(**choices):
+    keys = list(choices)
+    rows = list(itertools.product(*[choices[k] for k in keys]))
+    arr = {k: np.asarray([r[i] for r in rows]) for i, k in enumerate(keys)}
+    return keys, arr
+
+
+# --------------------------------------------------------------------- SPADE
+
+class SpadeSpace(ConfigSpace):
+    ROW_PANELS = [4, 32, 256, 2048]
+    COL_PANELS = [1024, 16384, 65536, -1]   # -1 == NUM_MATRIX_COLS
+    SPLITS = [32, 256]
+
+    def unified(self, n_cols: int):
+        p = self.params
+        I, J, K, order = mapping.phi_spade(p["row_panels"], p["col_panels"],
+                                           p["split"], p["barrier"], n_cols)
+        # the mapped-flag slot carries the matrix-reorder bit (format-reorder
+        # analogue, the only SPADE knob with a CPU-side counterpart)
+        return I, J, K, order, p["reorder"].astype(np.float32)
+
+    def heterogeneous(self) -> np.ndarray:
+        p = self.params
+        return np.concatenate([
+            p["barrier"][:, None].astype(np.float32),
+            p["bypass"][:, None].astype(np.float32),
+            p["reorder"][:, None].astype(np.float32),
+            _onehot(p["row_panels"], self.ROW_PANELS),
+            _onehot(p["col_panels"], self.COL_PANELS),
+            _onehot(p["split"], self.SPLITS),
+        ], axis=1)  # 3 + 4 + 4 + 2 = 13
+
+
+def spade_space() -> SpadeSpace:
+    _, params = _product_space(
+        row_panels=SpadeSpace.ROW_PANELS, col_panels=SpadeSpace.COL_PANELS,
+        split=SpadeSpace.SPLITS, barrier=[0, 1], bypass=[0, 1], reorder=[0, 1])
+    # default: moderate row panel, whole-matrix col panel, no extras
+    default = int(np.flatnonzero(
+        (params["row_panels"] == 32) & (params["col_panels"] == -1) &
+        (params["split"] == 32) & (params["barrier"] == 0) &
+        (params["bypass"] == 0) & (params["reorder"] == 0))[0])
+    choices = {"row_panels": SpadeSpace.ROW_PANELS,
+               "col_panels": SpadeSpace.COL_PANELS,
+               "split": SpadeSpace.SPLITS,
+               "barrier": [0, 1], "bypass": [0, 1], "reorder": [0, 1]}
+    return SpadeSpace("spade", params, choices, default)
+
+
+# ----------------------------------------------------------------------- CPU
+
+class CpuSpace(ConfigSpace):
+    I_TILES = [16, 64, 256, 1024, 4096]
+    J_TILES = [16, 64, 256, 1024, 4096]
+    K_TILES = [16, 32, 64, 128]
+
+    def unified(self, n_cols: int):
+        p = self.params
+        order6 = [mapping.CPU_ORDERS_6[i] for i in p["order"]]
+        order = np.asarray([mapping.pi_a1(o) for o in order6], np.int32)
+        return (p["i_tile"].astype(np.float64),
+                np.minimum(p["j_tile"], n_cols).astype(np.float64),
+                p["k_tile"].astype(np.float64), order,
+                p["format_reorder"].astype(np.float32))
+
+    def heterogeneous(self) -> np.ndarray:
+        p = self.params
+        return np.concatenate([
+            _onehot(p["format_reorder"], [0, 1]),
+            _onehot(p["i_tile"], self.I_TILES),
+            _onehot(p["j_tile"], self.J_TILES),
+            _onehot(p["k_tile"], self.K_TILES),
+            _onehot(p["order"], list(range(len(mapping.CPU_ORDERS_6)))),
+        ], axis=1)  # 2 + 5 + 5 + 4 + 8 = 24
+
+
+def cpu_space() -> CpuSpace:
+    _, params = _product_space(
+        i_tile=CpuSpace.I_TILES, j_tile=CpuSpace.J_TILES, k_tile=CpuSpace.K_TILES,
+        order=list(range(len(mapping.CPU_ORDERS_6))), format_reorder=[0, 1])
+    default = int(np.flatnonzero(
+        (params["i_tile"] == 256) & (params["j_tile"] == 1024) &
+        (params["k_tile"] == 32) & (params["order"] == 0) &
+        (params["format_reorder"] == 0))[0])
+    choices = {"i_tile": CpuSpace.I_TILES, "j_tile": CpuSpace.J_TILES,
+               "k_tile": CpuSpace.K_TILES,
+               "order": list(range(len(mapping.CPU_ORDERS_6))),
+               "format_reorder": [0, 1]}
+    return CpuSpace("cpu", params, choices, default)
+
+
+# ----------------------------------------------------------------------- GPU
+
+class GpuSpace(ConfigSpace):
+    I_TILES = [16, 32, 64, 128, 256]
+    K1 = [2, 4]
+    K2 = [4, 8, 16]
+    BINDINGS = [0, 1, 2]    # 0: (i->blk, k->thr) 1: (i->blk, j->thr) 2: (ik->blk)
+    UNROLLS = [1, 2, 4]
+
+    def unified(self, n_cols: int):
+        p = self.params
+        I, J, K, order = mapping.pi_a3(p["i_tile"], p["k1"], p["k2"], n_cols)
+        return I, J, K, order, np.zeros(self.n_configs, np.float32)
+
+    def heterogeneous(self) -> np.ndarray:
+        p = self.params
+        return np.concatenate([
+            _onehot(p["binding"], self.BINDINGS),
+            _onehot(p["unroll"], self.UNROLLS),
+            _onehot(p["i_tile"], self.I_TILES),
+            _onehot(p["k1"], self.K1),
+            _onehot(p["k2"], self.K2),
+        ], axis=1)  # 3 + 3 + 5 + 2 + 3 = 16
+
+
+def gpu_space() -> GpuSpace:
+    _, params = _product_space(i_tile=GpuSpace.I_TILES, k1=GpuSpace.K1,
+                               k2=GpuSpace.K2, binding=GpuSpace.BINDINGS,
+                               unroll=GpuSpace.UNROLLS)
+    default = int(np.flatnonzero(
+        (params["i_tile"] == 32) & (params["k1"] == 2) & (params["k2"] == 16) &
+        (params["binding"] == 0) & (params["unroll"] == 1))[0])
+    choices = {"i_tile": GpuSpace.I_TILES, "k1": GpuSpace.K1, "k2": GpuSpace.K2,
+               "binding": GpuSpace.BINDINGS, "unroll": GpuSpace.UNROLLS}
+    return GpuSpace("gpu", params, choices, default)   # 270 configs
+
+
+# ---------------------------------------------------------------- TPU/Pallas
+
+class TpuPallasSpace(ConfigSpace):
+    """Tile space of the Pallas BSR SpMM/SDDMM kernels in repro/kernels.
+
+    bm: sparse-operand row-block height; panel: contraction panel width
+    (-1 = whole); bn: dense-output column tile; n_major: grid iteration order;
+    resident: keep the dense operand panel VMEM-resident vs re-stream.
+    """
+    BM = [8, 16, 32, 64, 128]
+    PANEL = [512, 2048, 8192, -1]
+    BN = [128, 256, 512]
+
+    def unified(self, n_cols: int):
+        p = self.params
+        I, J, K, order = mapping.phi_tpu(p["bm"], p["panel"], p["bn"],
+                                         p["n_major"], n_cols)
+        return I, J, K, order, np.zeros(self.n_configs, np.float32)
+
+    def heterogeneous(self) -> np.ndarray:
+        p = self.params
+        return np.concatenate([
+            _onehot(p["bm"], self.BM),
+            _onehot(p["panel"], self.PANEL),
+            _onehot(p["bn"], self.BN),
+            _onehot(p["n_major"], [0, 1]),
+            _onehot(p["resident"], [0, 1]),
+        ], axis=1)  # 5 + 4 + 3 + 2 + 2 = 16
+
+
+def tpu_pallas_space() -> TpuPallasSpace:
+    _, params = _product_space(bm=TpuPallasSpace.BM, panel=TpuPallasSpace.PANEL,
+                               bn=TpuPallasSpace.BN, n_major=[0, 1],
+                               resident=[0, 1])
+    default = int(np.flatnonzero(
+        (params["bm"] == 32) & (params["panel"] == -1) & (params["bn"] == 128) &
+        (params["n_major"] == 1) & (params["resident"] == 1))[0])
+    choices = {"bm": TpuPallasSpace.BM, "panel": TpuPallasSpace.PANEL,
+               "bn": TpuPallasSpace.BN, "n_major": [0, 1], "resident": [0, 1]}
+    return TpuPallasSpace("tpu_pallas", params, choices, default)  # 240

@@ -1,0 +1,138 @@
+"""Approximate mapping of comparable code optimizations (paper §3.2, App. E).
+
+Every platform's native program configuration is projected into one unified,
+CPU-canonical space:
+
+    (I, J, K, omega, flag)
+
+where I/J/K strip-mine the i (rows of A), j (contraction), k (dense columns)
+loops and omega is a 7-slot loop order over loop ids
+
+    i1=0, i2=1, j1=2, j2=3, k1=4, k2=5, k3=6.
+
+The 7th loop (k3) comes from pi_a1 (CPU: append k3=1 after k2); the GPU's
+native 6-loop nest {i1,i2,j,k1,k2,k3} gets j'=1 inserted after j (pi_a3).
+
+SPADE's phi (verbatim from App. E, which supersedes the transposed statement
+in §3.2 — see DESIGN.md §8):
+
+    i_split <- row_panels, j_split <- column_panels, k_split <- split
+    omega(b=1) = [k2, k3, j2, i2, i1, j1, k1]
+    omega(b=0) = [k2, k3, i2, j2, i1, j1, k1]
+"""
+from __future__ import annotations
+
+import numpy as np
+
+I1, I2, J1, J2, K1, K2, K3 = range(7)
+LOOP_NAMES = ["i1", "i2", "j1", "j2", "k1", "k2", "k3"]
+
+#: unified homogeneous feature dimension (paper Table 6: 53)
+UNIFIED_DIM = 3 + 7 * 7 + 1
+
+# --- canonical CPU loop orders (6-loop perms; k3 appended by pi_a1) ---------
+CPU_ORDERS_6 = [
+    [I1, J1, K1, I2, J2, K2],   # 0: row-tiled ijk (TACO default)
+    [I1, J1, K1, J2, I2, K2],   # 1
+    [I1, K1, J1, I2, J2, K2],   # 2: k-panel outer of j
+    [J1, I1, K1, I2, J2, K2],   # 3: contraction-panel outer (B reuse)
+    [J1, I1, K1, J2, I2, K2],   # 4
+    [I1, J1, K1, I2, K2, J2],   # 5: j innermost (gather)
+    [K1, I1, J1, I2, J2, K2],   # 6: dense-col outer
+    [J1, K1, I1, I2, J2, K2],   # 7
+]
+
+
+def pi_a1(order6: list[int]) -> list[int]:
+    """CPU 6-loop order -> unified 7-loop order: k3=1 appended right after k2."""
+    out = []
+    for l in order6:
+        out.append(l)
+        if l == K2:
+            out.append(K3)
+    assert len(out) == 7
+    return out
+
+
+CPU_ORDERS = [pi_a1(o) for o in CPU_ORDERS_6]
+
+# --- SPADE: phi -------------------------------------------------------------
+SPADE_ORDER_B1 = [K2, K3, J2, I2, I1, J1, K1]
+SPADE_ORDER_B0 = [K2, K3, I2, J2, I1, J1, K1]
+
+
+def phi_spade(row_panels, col_panels, split, barrier, n_cols):
+    """SPADE (p_row, p_col, s_split, b) -> (I, J, K, omega). Vectorized.
+
+    col_panels == -1 means NUM_MATRIX_COLS (resolved against the input).
+    """
+    row_panels = np.asarray(row_panels, np.float64)
+    col_panels = np.asarray(col_panels, np.float64).copy()
+    col_panels[col_panels < 0] = float(n_cols)
+    split = np.asarray(split, np.float64)
+    barrier = np.asarray(barrier)
+    n = row_panels.shape[0]
+    order = np.where(barrier[:, None] == 1,
+                     np.asarray(SPADE_ORDER_B1)[None, :],
+                     np.asarray(SPADE_ORDER_B0)[None, :]).astype(np.int32)
+    assert order.shape == (n, 7)
+    return row_panels, col_panels, split, order
+
+
+# --- GPU: pi_a3 -------------------------------------------------------------
+# native nest {i1, i2, j, k1, k2, k3}; j'=1 inserted after j. Unified ids:
+# j -> j1, j' -> j2. SparseTIR SpMM canonical schedule iterates
+# blockIdx(i1) / j / threads(i2, k) -> [i1, j1, j2, i2, k1, k2, k3].
+GPU_ORDER = [I1, J1, J2, I2, K1, K2, K3]
+
+
+def pi_a3(i_tile, k1, k2, n_cols, dense_k=128):
+    """GPU (i-tile, k-splits) -> (I, J, K, omega). J is the full contraction
+    (not strip-mined on GPU -> J = NUM_MATRIX_COLS), K = k1*k2 thread tile."""
+    i_tile = np.asarray(i_tile, np.float64)
+    k1 = np.asarray(k1, np.float64)
+    k2 = np.asarray(k2, np.float64)
+    n = i_tile.shape[0]
+    J = np.full(n, float(n_cols))
+    K = np.minimum(k1 * k2, dense_k)
+    order = np.tile(np.asarray(GPU_ORDER, np.int32), (n, 1))
+    return i_tile, J, K, order
+
+
+# --- TPU Pallas kernels ------------------------------------------------------
+# grid = (row-blocks, n-tiles, panel-steps): bm ~ I, panel width ~ J, bn ~ K.
+TPU_ORDER_NMAJOR = [I1, K1, J1, I2, J2, K2, K3]   # n-tile outer (B-panel reuse)
+TPU_ORDER_KMAJOR = [I1, J1, K1, I2, J2, K2, K3]   # panel outer (A reuse)
+
+
+def phi_tpu(bm, panel, bn, n_major, n_cols):
+    bm = np.asarray(bm, np.float64)
+    panel = np.asarray(panel, np.float64).copy()
+    panel[panel < 0] = float(n_cols)
+    bn = np.asarray(bn, np.float64)
+    n_major = np.asarray(n_major)
+    order = np.where(n_major[:, None] == 1,
+                     np.asarray(TPU_ORDER_NMAJOR)[None, :],
+                     np.asarray(TPU_ORDER_KMAJOR)[None, :]).astype(np.int32)
+    return bm, panel, bn, order
+
+
+# --- unified feature encoding ------------------------------------------------
+
+def encode_unified(I, J, K, order, flag) -> np.ndarray:
+    """(n,) I/J/K, (n,7) order ids, (n,) flag -> (n, UNIFIED_DIM) float32."""
+    I = np.asarray(I, np.float64)
+    J = np.asarray(J, np.float64)
+    K = np.asarray(K, np.float64)
+    n = I.shape[0]
+    feats = np.zeros((n, UNIFIED_DIM), np.float32)
+    feats[:, 0] = np.log2(np.maximum(I, 1)) / 13.0
+    feats[:, 1] = np.log2(np.maximum(J, 1)) / 20.0
+    feats[:, 2] = np.log2(np.maximum(K, 1)) / 9.0
+    onehot = np.zeros((n, 7, 7), np.float32)
+    rows = np.arange(n)[:, None]
+    slots = np.arange(7)[None, :]
+    onehot[rows, slots, order] = 1.0
+    feats[:, 3:52] = onehot.reshape(n, 49)
+    feats[:, 52] = np.asarray(flag, np.float32)
+    return feats

@@ -1,0 +1,5 @@
+# Pallas TPU kernels for the sparse tensor programs the paper optimizes
+# (SpMM, SDDMM) in block-sparse (BSR) form, validated in interpret mode
+# against the pure-jnp oracles in ref.py.
+from repro.kernels.ops import (BsrMatrix, bsr_from_dense, bsr_from_coo,
+                               spmm, sddmm, spmm_ref, sddmm_ref)

@@ -1,0 +1,130 @@
+"""Public jit'd entry points for the sparse kernels + format conversion.
+
+``spmm`` / ``sddmm`` take a ``BsrMatrix`` (built once per sparsity pattern via
+``bsr_from_dense`` / ``bsr_from_coo``) and dispatch to the Pallas kernels,
+with tile parameters supplied by the caller — typically from
+``repro.core.autotune.KernelAutotuner`` (the paper's technique driving real
+kernel configuration).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.sddmm import BW, sddmm_pallas
+from repro.kernels.spmm import BK, spmm_pallas
+from repro.kernels import ref
+
+
+@dataclasses.dataclass
+class BsrMatrix:
+    """Flattened BSR: blocks sorted by (block-row, block-col); every block-row
+    is represented (empty rows get one zero pad block), so the kernels' flush
+    predicate is exact."""
+    data: jnp.ndarray       # (nnzb, bm, BK)
+    rowids: jnp.ndarray     # (nnzb,) int32, sorted
+    colids: jnp.ndarray     # (nnzb,) int32
+    n_blockrows: int
+    n_blockcols: int
+
+    @property
+    def block_m(self) -> int:
+        return self.data.shape[1]
+
+    @property
+    def nnzb(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def shape(self):
+        return (self.n_blockrows * self.block_m, self.n_blockcols * BK)
+
+
+def bsr_from_dense(dense: np.ndarray, block_m: int = 32,
+                   dtype=jnp.float32) -> BsrMatrix:
+    """Convert a dense (M, K) array (zeros = absent) to flattened BSR.
+
+    M and K are zero-padded up to multiples of (block_m, 128).
+    """
+    m, k = dense.shape
+    pm, pk = (-m) % block_m, (-k) % BK
+    if pm or pk:
+        dense = np.pad(dense, ((0, pm), (0, pk)))
+    m, k = dense.shape
+    nbr, nbc = m // block_m, k // BK
+    blocks = dense.reshape(nbr, block_m, nbc, BK).transpose(0, 2, 1, 3)
+    nz = np.abs(blocks).sum(axis=(2, 3)) > 0
+    rowids, colids, data = [], [], []
+    for r in range(nbr):
+        cols = np.flatnonzero(nz[r])
+        if cols.size == 0:
+            cols = np.array([0])          # pad block keeps the row present
+        for c in cols:
+            rowids.append(r)
+            colids.append(c)
+            data.append(blocks[r, c])
+    return BsrMatrix(jnp.asarray(np.stack(data), dtype),
+                     jnp.asarray(rowids, jnp.int32),
+                     jnp.asarray(colids, jnp.int32), nbr, nbc)
+
+
+def bsr_from_coo(rows, cols, values, shape, block_m: int = 32,
+                 dtype=jnp.float32) -> BsrMatrix:
+    m, k = shape
+    dense = np.zeros((m, k), np.float32)
+    dense[rows, cols] = values
+    return bsr_from_dense(dense, block_m, dtype)
+
+
+def spmm(a: BsrMatrix, b, *, block_n: int = 128, n_major: bool = True,
+         interpret: bool = True):
+    """BSR(A) @ B. b: (K, N) with K == a.shape[1] (padding applied if short).
+
+    Returns (a.shape[0], N) in b.dtype (fp32 accumulation inside).
+    """
+    k_needed = a.shape[1]
+    if b.shape[0] < k_needed:
+        b = jnp.pad(b, ((0, k_needed - b.shape[0]), (0, 0)))
+    pad_n = (-b.shape[1]) % block_n
+    if pad_n:
+        b = jnp.pad(b, ((0, 0), (0, pad_n)))
+    out = spmm_pallas(a.data, a.rowids, a.colids, b,
+                      n_blockrows=a.n_blockrows, block_n=block_n,
+                      n_major=n_major, interpret=interpret)
+    return out[:, :out.shape[1] - pad_n] if pad_n else out
+
+
+def sddmm(mask: BsrMatrix, b, c, *, block_k: int = 128, interpret: bool = True):
+    """(B @ C) sampled at BSR(mask) -> block data aligned with mask blocks."""
+    m_needed, n_needed = mask.shape
+    if b.shape[0] < m_needed:
+        b = jnp.pad(b, ((0, m_needed - b.shape[0]), (0, 0)))
+    if c.shape[1] < n_needed:
+        c = jnp.pad(c, ((0, 0), (0, n_needed - c.shape[1])))
+    pad_k = (-b.shape[1]) % block_k
+    if pad_k:
+        b = jnp.pad(b, ((0, 0), (0, pad_k)))
+        c = jnp.pad(c, ((0, pad_k), (0, 0)))
+    return sddmm_pallas(mask.data, mask.rowids, mask.colids, b, c,
+                        block_k=block_k, interpret=interpret)
+
+
+# Reference entry points operating on the same BsrMatrix (for tests/benches).
+
+def spmm_ref(a: BsrMatrix, b):
+    k_needed = a.shape[1]
+    if b.shape[0] < k_needed:
+        b = jnp.pad(b, ((0, k_needed - b.shape[0]), (0, 0)))
+    return ref.spmm_ref(a.data, a.rowids, a.colids, b, a.n_blockrows)
+
+
+def sddmm_ref(mask: BsrMatrix, b, c):
+    m_needed, n_needed = mask.shape
+    if b.shape[0] < m_needed:
+        b = jnp.pad(b, ((0, m_needed - b.shape[0]), (0, 0)))
+    if c.shape[1] < n_needed:
+        c = jnp.pad(c, ((0, 0), (0, n_needed - c.shape[1])))
+    return ref.sddmm_ref(mask.data, mask.rowids, mask.colids, b, c)

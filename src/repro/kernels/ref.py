@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels (ground truth for allclose tests).
+
+All oracles operate on the same flattened BSR representation the kernels use:
+  data    (nnzb, bm, bk)  — block values (zero-padded)
+  rowids  (nnzb,)         — block-row index of each block (sorted)
+  colids  (nnzb,)         — block-col index of each block
+Every block-row has at least one entry (empty rows carry a zero pad block).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def spmm_ref(data, rowids, colids, b, n_blockrows):
+    """BSR(A) @ B -> (n_blockrows*bm, N), accumulation in fp32."""
+    nnzb, bm, bk = data.shape
+    n = b.shape[1]
+    # gather B tiles per block and contract
+    b_tiles = b.reshape(-1, bk, n)[colids]                     # (nnzb, bk, N)
+    partial = jnp.einsum("zik,zkn->zin", data.astype(jnp.float32),
+                         b_tiles.astype(jnp.float32))          # (nnzb, bm, N)
+    out = jnp.zeros((n_blockrows, bm, n), jnp.float32)
+    out = out.at[rowids].add(partial)
+    return out.reshape(n_blockrows * bm, n)
+
+
+def sddmm_ref(mask_data, rowids, colids, b, c):
+    """(B @ C) sampled at BSR(mask) -> block data (nnzb, bm, bw), fp32 accum.
+
+    mask_data: (nnzb, bm, bw) 0/1 pattern blocks; b: (M, K); c: (K, N).
+    """
+    nnzb, bm, bw = mask_data.shape
+    b_rows = b.reshape(-1, bm, b.shape[1])[rowids]             # (nnzb, bm, K)
+    c_cols = c.reshape(c.shape[0], -1, bw)                     # (K, ncb, bw)
+    c_cols = jnp.moveaxis(c_cols, 1, 0)[colids]                # (nnzb, K, bw)
+    prod = jnp.einsum("zmk,zkn->zmn", b_rows.astype(jnp.float32),
+                      c_cols.astype(jnp.float32))
+    return prod * mask_data.astype(jnp.float32)
+
+
+def bsr_to_dense(data, rowids, colids, n_blockrows, n_blockcols):
+    """Debug helper: reconstruct the dense matrix from flattened BSR."""
+    nnzb, bm, bk = data.shape
+    dense = np.zeros((n_blockrows * bm, n_blockcols * bk), np.float32)
+    for z in range(nnzb):
+        r, c = int(rowids[z]), int(colids[z])
+        dense[r * bm:(r + 1) * bm, c * bk:(c + 1) * bk] += np.asarray(data[z])
+    return dense

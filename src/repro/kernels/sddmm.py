@@ -1,0 +1,69 @@
+"""Block-sparse SDDMM Pallas TPU kernel: out = (B @ C) sampled at BSR(mask).
+
+Grid = (nnzb, k_tiles): for each nonzero (block_m x 128) pattern block, the
+kernel streams (bm x bk) strips of B's rows and (bk x 128) strips of C's
+columns, accumulating the dense product in a fp32 VMEM scratch; at the last
+k-tile the accumulator is masked by the pattern block and written to the
+flattened block output. Block row/col coordinates arrive via scalar prefetch,
+so work scales with touched blocks only — the same dataflow SPADE uses for
+its sampled products.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BW = 128  # pattern block width (lane dimension)
+
+
+def _sddmm_kernel(rowids, colids, mask, b, c, out, acc, *, n_ktiles):
+    kt = pl.program_id(1)
+
+    @pl.when(kt == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    acc[...] += jnp.dot(b[...], c[...], preferred_element_type=jnp.float32)
+
+    @pl.when(kt == n_ktiles - 1)
+    def _flush():
+        out[...] = (acc[...] * mask[0].astype(jnp.float32)).astype(out.dtype)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def sddmm_pallas(mask_data, rowids, colids, b, c, *, block_k: int = 128,
+                 interpret: bool = True):
+    """mask_data (nnzb, bm, BW) x b (M, K) x c (K, N) -> (nnzb, bm, BW).
+
+    M must be a multiple of bm, K of block_k, N of BW. Output is the sampled
+    product in flattened-BSR block layout (same rowids/colids).
+    """
+    nnzb, bm, bw = mask_data.shape
+    assert bw == BW, f"pattern block width must be {BW}, got {bw}"
+    m, k = b.shape
+    k2, n = c.shape
+    assert k == k2 and k % block_k == 0 and m % bm == 0 and n % BW == 0
+    n_ktiles = k // block_k
+
+    grid = (nnzb, n_ktiles)
+    mask_spec = pl.BlockSpec((1, bm, bw), lambda s, kt, rows, cols: (s, 0, 0))
+    b_spec = pl.BlockSpec((bm, block_k), lambda s, kt, rows, cols: (rows[s], kt))
+    c_spec = pl.BlockSpec((block_k, bw), lambda s, kt, rows, cols: (kt, cols[s]))
+    o_spec = pl.BlockSpec((1, bm, bw), lambda s, kt, rows, cols: (s, 0, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2, grid=grid,
+        in_specs=[mask_spec, b_spec, c_spec], out_specs=o_spec,
+        scratch_shapes=[pltpu.VMEM((bm, bw), jnp.float32)])
+    out_shape = jax.ShapeDtypeStruct((nnzb, bm, bw), b.dtype)
+    kernel = functools.partial(_sddmm_kernel, n_ktiles=n_ktiles)
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec, out_shape=out_shape,
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+    )(rowids, colids, mask_data, b, c)

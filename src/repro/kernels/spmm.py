@@ -1,0 +1,121 @@
+"""Block-sparse SpMM Pallas TPU kernel (BSR x dense -> dense).
+
+TPU adaptation of SPADE's tile-based SpMM dataflow (DESIGN.md §4): the sparse
+operand is a flattened list of (block_m x 128) tiles sorted by block-row; the
+grid walks (dense-column tile, sparse block) with the block-column indices
+delivered by scalar prefetch, so only *touched* blocks are ever fetched. A
+fp32 VMEM scratch accumulates each block-row's partial product and is flushed
+to the output exactly once per (block-row, n-tile) — the "barrier"-like
+serialization lives in the grid's arbitrary dimension semantics.
+
+Two grid orders mirror the config-space knob tuned by the COGNATE autotuner:
+  n_major=True :  grid = (n_tiles, nnzb)  — B tile reuse across a block-row
+  n_major=False:  grid = (nnzb, n_tiles)  — A block fetched once, full-width
+                  fp32 accumulator strip in VMEM (needs bm x N x 4 bytes)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BK = 128  # fixed sparse-block width (TPU lane dimension)
+
+
+def _spmm_kernel_nmajor(rowids, colids, a, b, out, acc, *, nnzb):
+    """grid = (n_tiles, nnzb); acc: (bm, bn) fp32 scratch."""
+    step = pl.program_id(1)
+    row = rowids[step]
+    prev_row = rowids[jnp.maximum(step - 1, 0)]
+    next_row = rowids[jnp.minimum(step + 1, nnzb - 1)]
+    is_first = jnp.logical_or(step == 0, prev_row != row)
+    is_last = jnp.logical_or(step == nnzb - 1, next_row != row)
+
+    @pl.when(is_first)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    acc[...] += jnp.dot(a[0], b[...], preferred_element_type=jnp.float32)
+
+    @pl.when(is_last)
+    def _flush():
+        out[...] = acc[...].astype(out.dtype)
+
+
+def _spmm_kernel_kmajor(rowids, colids, a, b, out, acc, *, nnzb, n_tiles):
+    """grid = (nnzb, n_tiles); acc: (bm, n_tiles*bn) full-width fp32 strip."""
+    step = pl.program_id(0)
+    ntile = pl.program_id(1)
+    bn = out.shape[-1]
+    row = rowids[step]
+    prev_row = rowids[jnp.maximum(step - 1, 0)]
+    next_row = rowids[jnp.minimum(step + 1, nnzb - 1)]
+    is_first = jnp.logical_or(step == 0, prev_row != row)
+    is_last = jnp.logical_or(step == nnzb - 1, next_row != row)
+
+    sl = pl.ds(ntile * bn, bn)
+
+    @pl.when(is_first)
+    def _init():
+        acc[:, sl] = jnp.zeros((acc.shape[0], bn), jnp.float32)
+
+    partial = jnp.dot(a[0], b[...], preferred_element_type=jnp.float32)
+    acc[:, sl] += partial
+
+    @pl.when(is_last)
+    def _flush():
+        out[...] = acc[:, sl].astype(out.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_blockrows", "block_n",
+                                              "n_major", "interpret"))
+def spmm_pallas(data, rowids, colids, b, *, n_blockrows: int,
+                block_n: int = 128, n_major: bool = True,
+                interpret: bool = True):
+    """data (nnzb, bm, BK) x b (K, N) -> (n_blockrows*bm, N).
+
+    rowids must be sorted ascending with every block-row represented
+    (``repro.kernels.ops.bsr_from_dense`` guarantees this via pad blocks).
+    ``interpret=True`` runs the kernel body on CPU (this container); on real
+    TPU pass interpret=False.
+    """
+    nnzb, bm, bk = data.shape
+    assert bk == BK, f"sparse block width must be {BK}, got {bk}"
+    k, n = b.shape
+    assert k % BK == 0 and n % block_n == 0, (k, n, block_n)
+    n_tiles = n // block_n
+    out_shape = jax.ShapeDtypeStruct((n_blockrows * bm, n), b.dtype)
+
+    if n_major:
+        grid = (n_tiles, nnzb)
+        a_spec = pl.BlockSpec((1, bm, bk), lambda j, s, rows, cols: (s, 0, 0))
+        b_spec = pl.BlockSpec((bk, block_n),
+                              lambda j, s, rows, cols: (cols[s], j))
+        o_spec = pl.BlockSpec((bm, block_n),
+                              lambda j, s, rows, cols: (rows[s], j))
+        kernel = functools.partial(_spmm_kernel_nmajor, nnzb=nnzb)
+        scratch = [pltpu.VMEM((bm, block_n), jnp.float32)]
+    else:
+        grid = (nnzb, n_tiles)
+        a_spec = pl.BlockSpec((1, bm, bk), lambda s, j, rows, cols: (s, 0, 0))
+        b_spec = pl.BlockSpec((bk, block_n),
+                              lambda s, j, rows, cols: (cols[s], j))
+        o_spec = pl.BlockSpec((bm, block_n),
+                              lambda s, j, rows, cols: (rows[s], j))
+        kernel = functools.partial(_spmm_kernel_kmajor, nnzb=nnzb,
+                                   n_tiles=n_tiles)
+        scratch = [pltpu.VMEM((bm, n), jnp.float32)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2, grid=grid,
+        in_specs=[a_spec, b_spec], out_specs=o_spec,
+        scratch_shapes=scratch)
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec, out_shape=out_shape,
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+    )(rowids, colids, data, b)

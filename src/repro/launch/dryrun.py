@@ -1,0 +1,316 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+_DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the step function (train_step for train shapes,
+prefill_step for prefill, serve_step for decode), lowers it with
+ShapeDtypeStruct inputs under explicit NamedShardings on the production mesh,
+compiles, and extracts:
+
+  * memory_analysis()      — proof the cell fits per-device HBM
+  * cost_analysis()        — per-device HLO flops/bytes for the roofline
+  * collective inventory   — parsed from the post-SPMD optimized HLO:
+                             op counts + per-chip wire bytes (ring estimates)
+
+Results are written incrementally to launch_results/dryrun/<cell>.json so an
+interrupted sweep resumes where it stopped. Nothing here allocates real
+buffers — the 512 host devices are compile-time placeholders.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all [--multi-pod] [--force]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs.base import SHAPES, valid_cells
+from repro.launch.mesh import make_production_mesh
+from repro.models import ARCH_IDS, build_by_name
+from repro.parallel.sharding import (batch_shardings, cache_shardings,
+                                     param_shardings, tree_shardings)
+from repro.train.steps import (TrainStepConfig, init_optimizer,
+                               make_prefill_step, make_serve_step,
+                               make_train_step)
+
+RESULT_DIR = Path(__file__).resolve().parents[3] / "launch_results" / "dryrun"
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUP_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of all typed shapes in an HLO result/tuple prefix."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUP_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUP_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def parse_collectives(hlo_text: str, default_group: int) -> dict:
+    """Per-chip wire-byte estimates per collective kind (ring algorithms).
+
+    HLO shapes after SPMD partitioning are per-device, so the result size of
+    each op is the per-chip buffer. Ring estimates per chip:
+      all-reduce      2 (n-1)/n * bytes
+      all-gather      (n-1)/n * result_bytes
+      reduce-scatter  (n-1)/n * operand_bytes  (= result * n -> (n-1)*result)
+      all-to-all      (n-1)/n * bytes
+      collective-permute  bytes
+    """
+    out = {k: {"count": 0, "bytes": 0.0, "wire_bytes": 0.0}
+           for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        head = ls.split(" = ", 1)
+        if len(head) != 2:
+            continue
+        rhs = head[1]
+        kind, prefix, is_start = None, "", False
+        for k in COLLECTIVES:
+            i = rhs.find(" " + k + "(")
+            i_start = rhs.find(" " + k + "-start(")
+            if i >= 0:
+                kind, prefix = k, rhs[:i]
+                break
+            if i_start >= 0:       # async pair: count the -start, skip -done
+                kind, prefix, is_start = k, rhs[:i_start], True
+                break
+        if kind is None:
+            continue
+        result_bytes = _shape_bytes(prefix)
+        if is_start and result_bytes:
+            result_bytes //= 2     # start result tuple = (operand, result)
+        n = max(_group_size(ls, default_group), 2)
+        if kind == "all-reduce":
+            wire = 2.0 * (n - 1) / n * result_bytes
+        elif kind == "all-gather":
+            wire = (n - 1) / n * result_bytes
+        elif kind == "reduce-scatter":
+            wire = (n - 1) * result_bytes
+        elif kind == "all-to-all":
+            wire = (n - 1) / n * result_bytes
+        else:
+            wire = float(result_bytes)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += float(result_bytes)
+        out[kind]["wire_bytes"] += wire
+    return out
+
+
+def build_step(arch_name: str, shape_name: str, expert_split: int = 1):
+    """Returns (step_fn, example_args (ShapeDtypeStructs), in_shardings,
+    out_shardings_builder, meta)."""
+    arch, model = build_by_name(arch_name)
+    if expert_split > 1 and arch.n_experts:
+        import dataclasses
+        from repro.models import build_model
+        arch = dataclasses.replace(arch, moe_expert_split=expert_split)
+        model = build_model(arch)
+    shape = SHAPES[shape_name]
+    key = jax.random.PRNGKey(0)
+    params_s = jax.eval_shape(model.init, key)
+
+    def shardings(mesh, serving=False):
+        return param_shardings(mesh, params_s, arch, serving=serving)
+
+    if shape.kind == "train":
+        cfg = TrainStepConfig(remat=True)
+        step = make_train_step(model, cfg)
+        opt_s = jax.eval_shape(lambda p: init_optimizer(p, cfg), params_s)
+        batch_s = model.input_specs(shape)
+
+        def make(mesh):
+            ps = shardings(mesh)
+            os_ = tree_shardings(mesh, opt_s, n_experts=arch.n_experts)
+            bs = batch_shardings(mesh, batch_s)
+            return (step, (params_s, opt_s, batch_s), (ps, os_, bs),
+                    (ps, os_, None))
+        return make, {"arch": arch, "model": model, "kind": "train"}
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(model)
+        batch_s = model.input_specs(shape)
+
+        def make(mesh):
+            ps = shardings(mesh)
+            bs = batch_shardings(mesh, batch_s)
+            return step, (params_s, batch_s), (ps, bs), None
+        return make, {"arch": arch, "model": model, "kind": "prefill"}
+
+    # decode: one new token against a seq_len-deep cache
+    step = make_serve_step(model)
+    B = shape.global_batch
+    cache_s = jax.eval_shape(lambda: model.init_cache(B, shape.seq_len))
+    tok_s = jax.ShapeDtypeStruct((B,), np.int32)
+
+    def make(mesh):
+        ps = shardings(mesh, serving=True)
+        cs = cache_shardings(mesh, cache_s, B)
+        ts = batch_shardings(mesh, {"tokens": tok_s})["tokens"]
+        return step, (params_s, cache_s, tok_s), (ps, cs, ts), (None, cs)
+    return make, {"arch": arch, "model": model, "kind": "decode"}
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             force: bool = False, optimized: bool = False) -> dict:
+    """optimized=True enables the EXPERIMENTS.md §Perf layout knobs
+    (ATTN_GROUP_PAD + moe_expert_split) and writes *__opt.json artifacts —
+    machine evidence for the hillclimb numbers, kept separate from the
+    paper-faithful baseline sweep."""
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    suffix = "__opt" if optimized else ""
+    out_path = RESULT_DIR / f"{mesh_name}__{arch_name}__{shape_name}{suffix}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+    RESULT_DIR.mkdir(parents=True, exist_ok=True)
+
+    arch = build_by_name(arch_name)[0]
+    if shape_name == "long_500k" and not arch.subquadratic:
+        result = {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+                  "status": "skipped", "reason": "full-attn-quadratic"}
+        out_path.write_text(json.dumps(result, indent=1))
+        return result
+
+    t0 = time.time()
+    result = {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+              "optimized": optimized}
+    try:
+        from repro.models import settings
+        if optimized:
+            settings.ATTN_GROUP_PAD = True
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        make, meta = build_step(arch_name, shape_name,
+                                expert_split=2 if optimized else 1)
+        step, args, in_sh, out_sh = make(mesh)
+        with mesh, settings.activation_mesh(mesh):
+            jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        mem_d = {}
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            if mem is not None and hasattr(mem, attr):
+                mem_d[attr] = int(getattr(mem, attr))
+        cost = compiled.cost_analysis() or {}
+        cost_d = {k: float(v) for k, v in cost.items()
+                  if isinstance(v, (int, float)) and (
+                      "flops" in k or "bytes" in k or k in ("transcendentals",))}
+
+        hlo = compiled.as_text()
+        default_group = 16  # model-axis size (most collectives are TP)
+        from repro.launch.hloparse import analyze_hlo
+        analyzed = analyze_hlo(hlo, default_group)
+        n_devices = int(np.prod(list(mesh.shape.values())))
+
+        # persist the optimized HLO so estimators can be improved without
+        # recompiling (gzip ~10:1)
+        import gzip
+        hlo_dir = RESULT_DIR.parent / "hlo"
+        hlo_dir.mkdir(parents=True, exist_ok=True)
+        with gzip.open(hlo_dir / (out_path.stem + ".hlo.gz"), "wt") as f:
+            f.write(hlo)
+
+        result.update({
+            "status": "ok",
+            "kind": meta["kind"],
+            "n_devices": n_devices,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": mem_d,
+            "cost": cost_d,                      # raw XLA (loop bodies x1)
+            "hlo_flops": analyzed["flops"],      # trip-count-aware, per chip
+            "hlo_traffic_bytes": analyzed["traffic_bytes"],
+            "collectives": analyzed["collectives"],
+            "hlo_bytes": len(hlo),
+        })
+    except Exception as e:  # record failures — they are bugs to fix
+        result.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]})
+    result["wall_s"] = round(time.time() - t0, 1)
+    out_path.write_text(json.dumps(result, indent=1))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="enable §Perf layout knobs; writes *__opt.json")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    for a in archs:
+        arch = build_by_name(a)[0]
+        shapes = valid_cells(arch) + (
+            ["long_500k"] if not arch.subquadratic else [])
+        if args.shape:
+            shapes = [args.shape]
+        for s in shapes:
+            cells.append((a, s))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+    for mp in meshes:
+        for a, s in cells:
+            r = run_cell(a, s, mp, force=args.force,
+                         optimized=args.optimized)
+            status = r["status"]
+            extra = ""
+            if status == "ok":
+                flops = r["cost"].get("flops", 0)
+                extra = (f"compile={r.get('compile_s', 0):.0f}s "
+                         f"flops/dev={flops:.3e} "
+                         f"args/dev={r['memory'].get('argument_size_in_bytes', 0)/2**30:.2f}GiB")
+            elif status == "error":
+                extra = r["error"][:120]
+            elif status == "skipped":
+                extra = r["reason"]
+            print(f"[{'2x16x16' if mp else '16x16'}] {a} x {s}: {status} {extra}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

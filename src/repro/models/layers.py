@@ -1,0 +1,274 @@
+"""Common transformer layers in pure JAX: RMSNorm, RoPE, GQA attention
+(training, prefill, and cached decode), chunked flash-style attention for long
+sequences, and the MLP variants used across the assigned architectures.
+
+All params are plain dict pytrees; init_* functions take explicit dims so the
+whole model can be constructed under jax.eval_shape for the dry-run. Compute
+dtype is bf16 with fp32 softmax/normalization accumulation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+DTYPE = jnp.bfloat16
+
+
+def _init(key, shape, fan_in, dtype=DTYPE):
+    return (jax.random.normal(key, shape) * (fan_in ** -0.5)).astype(dtype)
+
+
+# ------------------------------------------------------------------ norms
+
+def rmsnorm_init(dim):
+    return {"scale": jnp.ones((dim,), DTYPE)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * p["scale"]
+
+
+# ------------------------------------------------------------------- rope
+
+def rope(x, positions, theta=1e4):
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention
+
+def attention_init(key, d_model, n_heads, n_kv, head_dim):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": _init(kq, (d_model, n_heads, head_dim), d_model),
+        "wk": _init(kk, (d_model, n_kv, head_dim), d_model),
+        "wv": _init(kv, (d_model, n_kv, head_dim), d_model),
+        "wo": _init(ko, (n_heads, head_dim, d_model), n_heads * head_dim),
+    }
+
+
+def _gqa_scores_softmax_v(q, k, v, mask_bias):
+    """q: (B,Sq,H,hd) k/v: (B,Sk,KV,hd). Full (non-chunked) path."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(hd)
+    scores = scores + mask_bias  # (B,KV,G,Sq,Sk) broadcastable bias
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd)
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_offset=0, kv_len=None,
+                      q_chunk: int = 1024, k_chunk: int = 1024,
+                      prefix_len: int = 0):
+    """Flash-style online-softmax attention, O(chunk^2) memory.
+
+    q: (B,Sq,H,hd); k/v: (B,Sk,KV,hd). causal compares absolute positions
+    (q_offset shifts query positions; prefix positions < prefix_len are
+    always visible — prefix-LM). kv_len (B,) masks the valid cache length
+    for decode. Falls back to a single chunk when sequences are short.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, Sk)
+    nq, nk = Sq // q_chunk, Sk // k_chunk
+    assert Sq % q_chunk == 0 and Sk % k_chunk == 0
+
+    qg = q.reshape(B, nq, q_chunk, KV, G, hd)
+    kc = k.reshape(B, nk, k_chunk, KV, hd)
+    vc = v.reshape(B, nk, k_chunk, KV, hd)
+    scale = hd ** -0.5
+
+    def q_block(qi, qb):
+        # qb: (B, q_chunk, KV, G, hd)
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            ki, kb, vb = inputs
+            kpos = ki * k_chunk + jnp.arange(k_chunk)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qb.astype(jnp.float32),
+                           kb.astype(jnp.float32)) * scale
+            bias = jnp.zeros((q_chunk, k_chunk), jnp.float32)
+            if causal:
+                vis = (kpos[None, :] <= qpos[:, None]) | (kpos[None, :] < prefix_len)
+                bias = jnp.where(vis, 0.0, -1e30)
+            s = s + bias
+            if kv_len is not None:
+                s = s + jnp.where(kpos[None, :] < kv_len[:, None], 0.0,
+                                  -1e30)[:, None, None, None, :]
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqs,bskh->bkgqh", p, vb.astype(jnp.float32))
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, q_chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return jnp.moveaxis(out, 3, 1)  # (B, q_chunk, KV, G, hd)
+
+    outs = lax.map(lambda args: q_block(*args),
+                   (jnp.arange(nq), jnp.moveaxis(qg, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+def _pad_groups(q, k, v, n_kv, target):
+    """Pad the GQA group dim to ``target`` so the model axis divides it.
+
+    Heads are rearranged (KV, G)-major so a contiguous head shard == whole
+    KV groups: each model rank then attends its own groups with zero
+    communication (pad groups are dead compute, sliced off afterwards)."""
+    from repro.models.settings import shard_activation
+    B, S, H, hd = q.shape
+    G = H // n_kv
+    qg = q.reshape(B, S, n_kv, G, hd)
+    pad = target - n_kv
+    qg = jnp.pad(qg, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    q = shard_activation(qg.reshape(B, S, target * G, hd), model_dim_axis=2)
+    k = shard_activation(jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))),
+                         model_dim_axis=2)
+    v = shard_activation(jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))),
+                         model_dim_axis=2)
+    return q, k, v, G
+
+
+def _unpad_groups(out, n_kv, target, G):
+    B, S, _, hd = out.shape
+    return out.reshape(B, S, target, G, hd)[:, :, :n_kv].reshape(
+        B, S, n_kv * G, hd)
+
+
+def attention_apply(p, x, positions, *, n_kv, head_dim, causal=True,
+                    rope_theta=1e4, q_chunk=1024, k_chunk=1024,
+                    prefix_len=0, use_rope=True):
+    """Self-attention over x: (B,S,D) for train/prefill."""
+    from repro.models.settings import attn_group_pad_target
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if use_rope:
+        q = rope(q, positions, rope_theta)
+        k = rope(k, positions, rope_theta)
+    target = attn_group_pad_target(n_kv, q.shape[2])
+    if target:
+        q, k, v, G = _pad_groups(q, k, v, n_kv, target)
+    out = chunked_attention(q, k, v, causal=causal, q_chunk=q_chunk,
+                            k_chunk=k_chunk, prefix_len=prefix_len)
+    if target:
+        out = _unpad_groups(out, n_kv, target, G)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def attention_decode(p, x, cache_k, cache_v, pos, *, n_kv, head_dim,
+                     rope_theta=1e4):
+    """Single-token decode. x: (B,1,D); cache_k/v: (B,S_max,KV,hd); pos: (B,).
+
+    Attention over the cache is a single masked softmax (no kv chunk scan):
+    with q_len=1 the score tensor is small even at 500k positions, and a flat
+    einsum lets GSPMD keep sequence-sharded caches local — the softmax
+    max/sum and the PV partial reduce over the sharded sequence dim become
+    byte-sized psums instead of cache all-gathers.
+
+    Returns (out (B,1,D), new_cache_k, new_cache_v).
+    """
+    B, S = cache_k.shape[0], cache_k.shape[1]
+    KV = cache_k.shape[2]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = rope(q, pos[:, None], rope_theta)
+    k = rope(k, pos[:, None], rope_theta)
+    # scatter new kv at pos
+    onehot = jax.nn.one_hot(pos, S, dtype=cache_k.dtype)
+    cache_k = cache_k + onehot[:, :, None, None] * (k - jnp.take_along_axis(
+        cache_k, pos[:, None, None, None].astype(jnp.int32), axis=1))
+    cache_v = cache_v + onehot[:, :, None, None] * (v - jnp.take_along_axis(
+        cache_v, pos[:, None, None, None].astype(jnp.int32), axis=1))
+    H = q.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, head_dim)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg.astype(jnp.float32),
+                        cache_k.astype(jnp.float32)) * (head_dim ** -0.5)
+    kpos = jnp.arange(S)
+    scores = scores + jnp.where(kpos[None, :] <= pos[:, None], 0.0,
+                                -1e30)[:, None, None, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs,
+                     cache_v.astype(jnp.float32))
+    out = out.reshape(B, 1, H, head_dim).astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache_k, cache_v
+
+
+# -------------------------------------------------------- cross-attention
+
+def cross_attention_apply(p, x, memory, *, n_kv, head_dim,
+                          q_chunk=1024, k_chunk=1024):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", memory, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", memory, p["wv"])
+    out = chunked_attention(q, k, v, causal=False, q_chunk=q_chunk,
+                            k_chunk=k_chunk)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# -------------------------------------------------------------------- mlp
+
+def mlp_init(key, d_model, d_ff, activation):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if activation in ("swiglu", "geglu"):
+        return {"wi": _init(k1, (d_model, d_ff), d_model),
+                "wg": _init(k2, (d_model, d_ff), d_model),
+                "wo": _init(k3, (d_ff, d_model), d_ff)}
+    return {"wi": _init(k1, (d_model, d_ff), d_model),
+            "wo": _init(k3, (d_ff, d_model), d_ff)}
+
+
+def mlp_apply(p, x, activation):
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    if activation == "swiglu":
+        h = jax.nn.silu(h) * jnp.einsum("bsd,df->bsf", x, p["wg"])
+    elif activation == "geglu":
+        h = jax.nn.gelu(h) * jnp.einsum("bsd,df->bsf", x, p["wg"])
+    elif activation == "sq_relu":          # nemotron squared ReLU
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+# -------------------------------------------------------------- embedding
+
+def embedding_init(key, vocab, d_model):
+    return {"table": _init(key, (vocab, d_model), 1.0) * 0.02}
+
+
+def embed(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p, x):
+    """Tied readout: (B,S,D) -> (B,S,V) logits."""
+    return jnp.einsum("bsd,vd->bsv", x, p["table"])

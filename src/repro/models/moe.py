@@ -1,0 +1,109 @@
+"""Mixture-of-Experts layer (grok-1: 8e top-2; granite: 40e top-8).
+
+GShard-style einsum dispatch, sequence-chunked so the (B, chunk, E, C)
+dispatch tensors stay small under batch sharding (DESIGN.md §5). Capacity is
+per chunk: C = ceil(chunk * k / E * capacity_factor). XLA SPMD partitions
+every einsum here (batch on 'data', expert-internal d_ff on 'model').
+
+The dispatch one-hot contraction is exactly a block-sparse SpMM; the
+single-host serving path can route it through repro.kernels.spmm with tile
+configs from the COGNATE KernelAutotuner (see examples/moe_kernel_serving.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import DTYPE, _init
+from repro.models.settings import pin
+
+CAPACITY_FACTOR = 1.25
+MOE_CHUNK = 1024
+
+
+def moe_init(key, arch: ArchConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    E, D, F = arch.n_experts, arch.d_model, arch.d_ff
+    s = arch.moe_expert_split
+    assert F % s == 0, (F, s)
+    # virtual experts: each real expert stored as s contiguous F-slices, so
+    # the leading axis (E*s) can be sharded on 'model' (expert parallelism)
+    return {
+        "router": (jax.random.normal(k1, (D, E)) * D ** -0.5).astype(jnp.float32),
+        "wi": _init(k2, (E * s, D, F // s), D),
+        "wg": _init(k3, (E * s, D, F // s), D),
+        "wo": _init(k4, (E * s, F // s, D), F),
+    }
+
+
+def _capacity(chunk: int, arch: ArchConfig) -> int:
+    return max(int(chunk * arch.experts_per_token / arch.n_experts
+                   * CAPACITY_FACTOR), arch.experts_per_token)
+
+
+def moe_chunk_apply(p, arch: ArchConfig, x):
+    """x: (B, T, D) one chunk -> (B, T, D)."""
+    E, k = arch.n_experts, arch.experts_per_token
+    B, T, D = x.shape
+    C = _capacity(T, arch)
+
+    logits = jnp.einsum("btd,de->bte", x.astype(jnp.float32), p["router"])
+    gates = jax.nn.softmax(logits, axis=-1)
+    topv, topi = lax.top_k(gates, k)                      # (B,T,k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, slot) within its expert's capacity buffer
+    onehot_e = jax.nn.one_hot(topi, E, dtype=jnp.float32)  # (B,T,k,E)
+    flat = onehot_e.reshape(B, T * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                  # (B,T*k,E)
+    pos = pos.reshape(B, T, k, E)
+    within = (pos < C) & (onehot_e > 0)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=DTYPE) \
+        * within[..., None].astype(DTYPE)                  # (B,T,k,E,C)
+    dispatch = pos_oh.sum(axis=2)                          # (B,T,E,C)
+    combine = (pos_oh * topv[..., None, None].astype(DTYPE)).sum(axis=2)
+
+    # virtual experts: route each token's slot to all s slices of its expert
+    s = arch.moe_expert_split
+    if s > 1:
+        dispatch = jnp.repeat(dispatch, s, axis=2)         # (B,T,E*s,C)
+        combine = jnp.repeat(combine, s, axis=2)
+    dispatch = pin(dispatch, ("batch", None, "model", None))
+    combine = pin(combine, ("batch", None, "model", None))
+    xin = jnp.einsum("btec,btd->ebcd", dispatch, x)        # (E*s,B,C,D)
+    xin = pin(xin, ("model", "batch", None, None))
+    h = jnp.einsum("ebcd,edf->ebcf", xin, p["wi"])
+    if arch.activation in ("swiglu", "geglu"):
+        g = jnp.einsum("ebcd,edf->ebcf", xin, p["wg"])
+        act = jax.nn.silu if arch.activation == "swiglu" else jax.nn.gelu
+        h = act(h) * g
+    else:
+        h = jax.nn.gelu(h)
+    h = pin(h, ("model", "batch", None, None))
+    out = jnp.einsum("ebcf,efd->ebcd", h, p["wo"])
+    out = pin(out, ("model", "batch", None, None))
+    # combine contracts the (possibly model-sharded) expert axis: with
+    # expert parallelism the reduction lands on the (B,T,D) tensor —
+    # capacity_factor * k smaller than reducing (E,B,C,D)
+    y = jnp.einsum("btec,ebcd->btd", combine, out)
+    return pin(y, ("batch", None, None))
+
+
+def moe_apply(p, arch: ArchConfig, x):
+    """x: (B, S, D). Scans MOE_CHUNK-token slices to bound dispatch memory."""
+    B, S, D = x.shape
+    chunk = min(MOE_CHUNK, S)
+    if S % chunk:
+        chunk = S  # fallback: single chunk (smoke tests with odd S)
+    n = S // chunk
+    if n == 1:
+        return moe_chunk_apply(p, arch, x)
+    xc = jnp.moveaxis(x.reshape(B, n, chunk, D), 1, 0)
+
+    def body(_, xb):
+        return None, moe_chunk_apply(p, arch, xb)
+
+    _, out = lax.scan(body, None, xc)
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, D)

@@ -1,0 +1,42 @@
+"""Architecture registry: --arch <id> -> (config, model builder)."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import DecoderLM, EncDecLM
+from repro.models.xlstm import XLSTM
+from repro.models.zamba import Zamba
+
+ARCH_IDS = [
+    "grok-1-314b", "granite-moe-3b-a800m", "deepseek-67b", "phi3-medium-14b",
+    "nemotron-4-340b", "yi-9b", "xlstm-350m", "paligemma-3b",
+    "seamless-m4t-large-v2", "zamba2-7b",
+]
+
+_MODULE_FOR = {a: "repro.configs." + a.replace("-", "_").replace(".", "_")
+               for a in ARCH_IDS}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in _MODULE_FOR:
+        raise KeyError(f"unknown arch '{name}'; available: {ARCH_IDS}")
+    mod = importlib.import_module(_MODULE_FOR[name])
+    return mod.ARCH
+
+
+def build_model(arch: ArchConfig):
+    if arch.family == "audio" and arch.n_enc_layers:
+        return EncDecLM(arch)
+    if arch.family == "ssm":
+        return XLSTM(arch)
+    if arch.family == "hybrid":
+        return Zamba(arch)
+    return DecoderLM(arch)   # dense | moe | vlm
+
+
+def build_by_name(name: str, reduced: bool = False):
+    arch = get_arch(name)
+    if reduced:
+        arch = arch.reduced()
+    return arch, build_model(arch)

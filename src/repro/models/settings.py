@@ -1,0 +1,140 @@
+"""Global model-tracing settings (read at trace time).
+
+REMAT: rematerialize each scanned layer's activations in the backward pass
+(activation checkpointing). Enabled by the train-step builder for the
+production shapes; left off for small CPU unit tests.
+
+ACTIVATION_MESH: when set (by the dry-run / launcher), models pin activation
+shardings at layer boundaries via with_sharding_constraint. Without these
+pins GSPMD may align activations to the weights' layout instead — replicating
+the batch across the data axis and multiplying compute by the axis size
+(observed on the 16x16 mesh; see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+REMAT = False
+ACTIVATION_MESH: dict | None = None    # {"sizes": {axis: size, ...}}
+
+# Perf experiment (EXPERIMENTS.md §Perf cell 2): when KV-group counts don't
+# divide the model axis, pad the GQA group dim inside attention so each rank
+# owns whole groups (62.5% util for phi3 vs 6.25% replicated). Off = paper-
+# faithful baseline.
+ATTN_GROUP_PAD = False
+
+
+def attn_group_pad_target(n_kv: int, n_heads: int = 0) -> int | None:
+    """Padded KV-group count, or None when padding is off/unnecessary.
+
+    Padding only pays when the Q-head axis itself cannot be sharded
+    (n_heads % model != 0, e.g. phi3's 40): if Q-heads already divide, the
+    attention flops are sharded and padding the groups would only add pad
+    waste (observed on grok-1: kv=8, H=48)."""
+    if not ATTN_GROUP_PAD or ACTIVATION_MESH is None:
+        return None
+    model = ACTIVATION_MESH["sizes"].get("model", 1)
+    if model <= 1 or n_kv % model == 0:
+        return None
+    if n_heads and n_heads % model == 0:
+        return None
+    if n_kv > model:
+        return ((n_kv + model - 1) // model) * model
+    return model
+
+
+def set_activation_mesh(mesh) -> None:
+    global ACTIVATION_MESH
+    if mesh is None:
+        ACTIVATION_MESH = None
+    else:
+        ACTIVATION_MESH = {"sizes": {k: int(v) for k, v in mesh.shape.items()}}
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh):
+    global ACTIVATION_MESH
+    old = ACTIVATION_MESH
+    set_activation_mesh(mesh)
+    try:
+        yield
+    finally:
+        ACTIVATION_MESH = old
+
+
+def _batch_axes(sizes):
+    return tuple(a for a in ("pod", "data") if a in sizes)
+
+
+def shard_activation(x, model_dim_axis: int | None = None):
+    """Pin (B, S, ...) activations: batch over ('pod','data'), falling back
+    to sequence sharding for batch-1 long-context shapes."""
+    if ACTIVATION_MESH is None or x.ndim < 2:
+        return x
+    sizes = ACTIVATION_MESH["sizes"]
+    ba = _batch_axes(sizes)
+    bsz = int(np.prod([sizes[a] for a in ba])) if ba else 1
+    spec = [None] * x.ndim
+    if ba and x.shape[0] % bsz == 0 and x.shape[0] > 1:
+        spec[0] = ba if len(ba) > 1 else ba[0]
+    elif "data" in sizes and x.shape[1] % sizes["data"] == 0 and x.shape[1] > 1:
+        spec[1] = "data"
+    if model_dim_axis is not None and "model" in sizes \
+            and x.shape[model_dim_axis] % sizes["model"] == 0:
+        spec[model_dim_axis] = "model"
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except RuntimeError:   # no mesh context (pure-numeric tests)
+        return x
+
+
+def shard_logits(x):
+    """(B, S, V) logits: batch over data axes, vocab over 'model'."""
+    if ACTIVATION_MESH is None:
+        return x
+    return shard_activation(x, model_dim_axis=x.ndim - 1)
+
+
+def pin(x, names):
+    """Explicit per-dim pin: names entries are None | 'batch' | 'model' |
+    'data'. Dims that don't divide their axis are left unsharded."""
+    if ACTIVATION_MESH is None:
+        return x
+    sizes = ACTIVATION_MESH["sizes"]
+    spec = []
+    for dim, name in zip(x.shape, names):
+        if name == "batch":
+            ba = _batch_axes(sizes)
+            bsz = int(np.prod([sizes[a] for a in ba])) if ba else 1
+            ok = ba and dim % bsz == 0 and dim > 1
+            spec.append((ba if len(ba) > 1 else ba[0]) if ok else None)
+        elif name in ("model", "data"):
+            ok = name in sizes and dim % sizes[name] == 0 and dim > 1
+            spec.append(name if ok else None)
+        else:
+            spec.append(None)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except RuntimeError:
+        return x
+
+
+def maybe_remat(fn):
+    if REMAT:
+        return jax.checkpoint(fn)
+    return fn
+
+
+@contextlib.contextmanager
+def remat(enabled: bool = True):
+    global REMAT
+    old = REMAT
+    REMAT = enabled
+    try:
+        yield
+    finally:
+        REMAT = old

@@ -1,0 +1,128 @@
+"""Linear-recurrence substrate: chunked gated linear attention (GLA/SSD form)
+shared by the mLSTM (xLSTM) and Mamba2 (zamba2) blocks, plus the sLSTM
+sequential cell.
+
+Recurrence (per head):   S_t = a_t * S_{t-1} + k_t v_t^T,   o_t = S_t^T q_t
+with scalar per-head decay a_t = exp(log_a_t) in (0,1]. The chunkwise-parallel
+form (Mamba2's SSD / GLA) computes within-chunk terms as masked attention and
+carries the (dk x dv) state across chunks with a lax.scan — O(S*L) work,
+TPU-friendly einsums, exact (no approximation).
+
+Decode is the one-step recurrence on a carried state — O(1) per token, which
+is what makes the long_500k shape feasible for the ssm/hybrid families.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def gla_chunked(q, k, v, log_a, *, chunk: int = 256, state0=None,
+                normalize: bool = True):
+    """q,k: (B,S,H,dk); v: (B,S,H,dv); log_a: (B,S,H) (<= 0).
+
+    Returns (o: (B,S,H,dv), final_state: (B,H,dk,dv), final_norm: (B,H,dk)).
+    """
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+
+    qc = q.reshape(B, n_chunks, chunk, H, dk)
+    kc = k.reshape(B, n_chunks, chunk, H, dk)
+    vc = v.reshape(B, n_chunks, chunk, H, dv)
+    la = log_a.reshape(B, n_chunks, chunk, H)
+
+    if state0 is None:
+        state0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+    norm0 = jnp.zeros((B, H, dk), jnp.float32)
+
+    def chunk_step(carry, inputs):
+        S_c, n_c = carry                       # (B,H,dk,dv), (B,H,dk)
+        qb, kb, vb, lab = inputs               # (B,chunk,H,*)
+        qb32 = qb.astype(jnp.float32)
+        kb32 = kb.astype(jnp.float32)
+        vb32 = vb.astype(jnp.float32)
+        A = jnp.cumsum(lab.astype(jnp.float32), axis=1)       # (B,chunk,H)
+        a_end = A[:, -1]                                       # (B,H)
+        # cross-chunk contribution: o_t += exp(A_t) * q_t^T S_in
+        q_dec = qb32 * jnp.exp(A)[..., None]
+        o_cross = jnp.einsum("bthk,bhkv->bthv", q_dec, S_c)
+        n_cross = jnp.einsum("bthk,bhk->bth", q_dec, n_c)
+        # within-chunk: masked decay attention exp(A_t - A_j) (j <= t)
+        gap = A[:, :, None, :] - A[:, None, :, :]              # (B,t,j,H)
+        t_idx = jnp.arange(chunk)
+        causal = t_idx[:, None] >= t_idx[None, :]
+        decay = jnp.where(causal[None, :, :, None], jnp.exp(gap), 0.0)
+        scores = jnp.einsum("bthk,bjhk->btjh", qb32, kb32) * decay
+        o_in = jnp.einsum("btjh,bjhv->bthv", scores, vb32)
+        n_in = scores.sum(axis=2)                              # (B,t,H)
+        o = o_cross + o_in
+        n = n_cross + n_in
+        # state update: S_out = exp(a_end) S_in + sum_j exp(a_end - A_j) k_j v_j^T
+        k_dec = kb32 * jnp.exp(a_end[:, None] - A)[..., None]
+        S_new = S_c * jnp.exp(a_end)[..., None, None] + \
+            jnp.einsum("bjhk,bjhv->bhkv", k_dec, vb32)
+        n_new = n_c * jnp.exp(a_end)[..., None] + jnp.einsum("bjhk->bhk", k_dec)
+        return (S_new, n_new), (o, n)
+
+    (S_f, n_f), (o_all, n_all) = lax.scan(
+        chunk_step, (state0, norm0),
+        (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(kc, 1, 0),
+         jnp.moveaxis(vc, 1, 0), jnp.moveaxis(la, 1, 0)))
+    o = jnp.moveaxis(o_all, 0, 1).reshape(B, S, H, dv)
+    n = jnp.moveaxis(n_all, 0, 1).reshape(B, S, H)
+    if normalize:
+        o = o / jnp.maximum(jnp.abs(n)[..., None], 1.0)
+    return o.astype(q.dtype), S_f, n_f
+
+
+def gla_step(state, norm, q, k, v, log_a, normalize: bool = True):
+    """One decode step. q,k: (B,H,dk); v: (B,H,dv); log_a: (B,H).
+
+    Returns (o: (B,H,dv), new_state, new_norm)."""
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    state = state * a + jnp.einsum("bhk,bhv->bhkv", k.astype(jnp.float32),
+                                   v.astype(jnp.float32))
+    norm = norm * a[..., 0] + k.astype(jnp.float32)
+    o = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), state)
+    if normalize:
+        nrm = jnp.einsum("bhk,bhk->bh", q.astype(jnp.float32), norm)
+        o = o / jnp.maximum(jnp.abs(nrm)[..., None], 1.0)
+    return o.astype(q.dtype), state, norm
+
+
+# ------------------------------------------------------------------ sLSTM
+
+def slstm_step(carry, g, r_weight):
+    """One sLSTM step with exponential gating + recurrent mixing.
+
+    carry: (h, c, n, m) each (B,H,dh) fp32; g: (B,H,4dh) input
+    pre-activations; r_weight: (H, dh, 4dh) head-local recurrent kernel."""
+    h, c, n, m = carry
+    g = g.astype(jnp.float32) + jnp.einsum("bhd,hdf->bhf", h, r_weight)
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+    log_f = -jax.nn.softplus(-gf)            # log sigmoid(f)
+    m_new = jnp.maximum(log_f + m, gi)
+    i = jnp.exp(gi - m_new)
+    f = jnp.exp(log_f + m - m_new)
+    c_new = f * c + i * jnp.tanh(gz)
+    n_new = f * n + i
+    h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1.0)
+    return (h_new, c_new, n_new, m_new), h_new
+
+
+def slstm_scan(x_gates, r_weight, carry0):
+    """Sequential sLSTM (xLSTM eq. 14-19) over (B,S,H,4dh) pre-activations.
+
+    The hidden-to-gate recurrence (r_weight) is what makes sLSTM inherently
+    sequential — no chunked parallel form exists (xLSTM §2.1)."""
+    r32 = r_weight.astype(jnp.float32)
+
+    def step(carry, g):
+        return slstm_step(carry, g, r32)
+
+    carry, hs = lax.scan(step, carry0, jnp.moveaxis(x_gates, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), carry

@@ -1,0 +1,304 @@
+"""Decoder-only transformer family (dense, MoE, prefix-LM) and the enc-dec
+variant — covers grok-1, granite-moe, deepseek, phi3, nemotron, yi,
+paligemma (vision-prefix) and seamless (audio enc-dec).
+
+Layers are scanned (stacked params with a leading L axis) so the lowered HLO
+is size-O(1) in depth; remat is applied per layer by the train-step builder.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models.layers import DTYPE
+from repro.models.moe import moe_init, moe_apply
+from repro.models.settings import maybe_remat, shard_activation, shard_logits
+
+
+# --------------------------------------------------------------- one layer
+
+def layer_init(key, arch: ArchConfig, cross: bool = False):
+    hd = arch.resolved_head_dim
+    ks = jax.random.split(key, 5)
+    p = {
+        "ln1": L.rmsnorm_init(arch.d_model),
+        "attn": L.attention_init(ks[0], arch.d_model, arch.n_heads,
+                                 arch.n_kv_heads, hd),
+        "ln2": L.rmsnorm_init(arch.d_model),
+    }
+    if arch.n_experts:
+        p["moe"] = moe_init(ks[1], arch)
+    else:
+        p["mlp"] = L.mlp_init(ks[1], arch.d_model, arch.d_ff, arch.activation)
+    if cross:
+        p["ln_x"] = L.rmsnorm_init(arch.d_model)
+        p["xattn"] = L.attention_init(ks[2], arch.d_model, arch.n_heads,
+                                      arch.n_kv_heads, hd)
+    return p
+
+
+def layer_apply(p, arch: ArchConfig, x, positions, *, prefix_len=0,
+                memory=None, q_chunk=1024, k_chunk=1024):
+    hd = arch.resolved_head_dim
+    x = shard_activation(x)
+    # pinning each projection output anchors the TP partial-sum all-reduce at
+    # the bf16 tensor (before the fp32 norm converts) — halves wire bytes
+    x = x + shard_activation(L.attention_apply(
+        p["attn"], L.rmsnorm(p["ln1"], x, arch.norm_eps), positions,
+        n_kv=arch.n_kv_heads, head_dim=hd, causal=True,
+        rope_theta=arch.rope_theta, prefix_len=prefix_len,
+        q_chunk=q_chunk, k_chunk=k_chunk))
+    if memory is not None:
+        x = x + shard_activation(L.cross_attention_apply(
+            p["xattn"], L.rmsnorm(p["ln_x"], x, arch.norm_eps), memory,
+            n_kv=arch.n_kv_heads, head_dim=hd, q_chunk=q_chunk, k_chunk=k_chunk))
+    h = L.rmsnorm(p["ln2"], x, arch.norm_eps)
+    if arch.n_experts:
+        x = x + shard_activation(moe_apply(p["moe"], arch, h))
+    else:
+        x = x + shard_activation(L.mlp_apply(p["mlp"], h, arch.activation))
+    return shard_activation(x)
+
+
+def layer_decode(p, arch: ArchConfig, x, cache, pos, *, memory=None):
+    """x: (B,1,D); cache: {"k","v"} (B,Smax,KV,hd). Returns (x, cache)."""
+    hd = arch.resolved_head_dim
+    h = L.rmsnorm(p["ln1"], x, arch.norm_eps)
+    attn_out, ck, cv = L.attention_decode(
+        p["attn"], h, cache["k"], cache["v"], pos, n_kv=arch.n_kv_heads,
+        head_dim=hd, rope_theta=arch.rope_theta)
+    x = x + attn_out
+    if memory is not None:
+        x = x + L.cross_attention_apply(
+            p["xattn"], L.rmsnorm(p["ln_x"], x, arch.norm_eps), memory,
+            n_kv=arch.n_kv_heads, head_dim=hd, q_chunk=1)
+    h = L.rmsnorm(p["ln2"], x, arch.norm_eps)
+    if arch.n_experts:
+        x = x + moe_apply(p["moe"], arch, h)
+    else:
+        x = x + L.mlp_apply(p["mlp"], h, arch.activation)
+    return x, {"k": ck, "v": cv}
+
+
+# ----------------------------------------------------------- decoder stack
+
+def _stacked_init(key, n, init_fn):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+class DecoderLM:
+    """Dense / MoE / prefix-LM decoder. Prefix embeddings (vision patches,
+    precomputed frames) are injected before the token embeddings and made
+    bidirectionally visible (prefix-LM masking), per the assignment's stub
+    rule for [vlm] frontends."""
+
+    def __init__(self, arch: ArchConfig):
+        self.arch = arch
+
+    # ---- params
+    def init(self, key):
+        arch = self.arch
+        k1, k2, k3 = jax.random.split(key, 3)
+        params = {
+            "embed": L.embedding_init(k1, arch.vocab, arch.d_model),
+            "layers": _stacked_init(k2, arch.n_layers,
+                                    lambda k: layer_init(k, arch)),
+            "final_norm": L.rmsnorm_init(arch.d_model),
+        }
+        if arch.n_prefix_tokens:
+            params["prefix_proj"] = {
+                "w": (jax.random.normal(k3, (arch.prefix_dim or arch.d_model,
+                                             arch.d_model)) * 0.02).astype(DTYPE)}
+        return params
+
+    # ---- shared trunk
+    def _hidden(self, params, tokens, prefix_embed=None, q_chunk=1024,
+                k_chunk=1024):
+        arch = self.arch
+        x = shard_activation(L.embed(params["embed"], tokens))
+        prefix_len = 0
+        if prefix_embed is not None:
+            pe = jnp.einsum("bpe,ed->bpd", prefix_embed.astype(DTYPE),
+                            params["prefix_proj"]["w"])
+            x = jnp.concatenate([pe, x], axis=1)
+            prefix_len = pe.shape[1]
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        def body(x, lp):
+            return layer_apply(lp, arch, x, positions, prefix_len=prefix_len,
+                               q_chunk=q_chunk, k_chunk=k_chunk), None
+
+        x, _ = lax.scan(maybe_remat(body), x, params["layers"])
+        return L.rmsnorm(params["final_norm"], x, arch.norm_eps), prefix_len
+
+    # ---- training
+    def train_loss(self, params, batch):
+        arch = self.arch
+        x, prefix_len = self._hidden(params, batch["tokens"],
+                                     batch.get("prefix"))
+        x = x[:, prefix_len:]
+        logits = shard_logits(L.unembed(params["embed"], x))
+        targets = batch["targets"]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        mask = (targets >= 0).astype(jnp.float32)
+        loss = jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0)
+        return loss, {"loss": loss}
+
+    # ---- prefill: full forward producing last-position logits + KV cache
+    def prefill_step(self, params, batch):
+        x, prefix_len = self._hidden(params, batch["tokens"],
+                                     batch.get("prefix"))
+        logits = L.unembed(params["embed"], x[:, -1:])
+        return logits[:, 0]
+
+    # ---- cached decode
+    def init_cache(self, batch: int, max_len: int):
+        arch = self.arch
+        hd = arch.resolved_head_dim
+        shape = (arch.n_layers, batch, max_len, arch.n_kv_heads, hd)
+        return {"k": jnp.zeros(shape, DTYPE), "v": jnp.zeros(shape, DTYPE),
+                "pos": jnp.zeros((batch,), jnp.int32)}
+
+    def serve_step(self, params, cache, tokens):
+        """tokens: (B,) -> (logits (B,V), new cache). One decode step."""
+        arch = self.arch
+        x = L.embed(params["embed"], tokens[:, None])
+        pos = cache["pos"]
+
+        def body(x, scanned):
+            lp, ck, cv = scanned
+            x, new = layer_decode(lp, arch, x, {"k": ck, "v": cv}, pos)
+            return x, (new["k"], new["v"])
+
+        x, (nk, nv) = lax.scan(body, x, (params["layers"], cache["k"],
+                                         cache["v"]))
+        x = L.rmsnorm(params["final_norm"], x, arch.norm_eps)
+        logits = L.unembed(params["embed"], x)[:, 0]
+        return logits, {"k": nk, "v": nv, "pos": pos + 1}
+
+    # ---- dry-run input specs
+    def input_specs(self, shape: ShapeConfig):
+        arch = self.arch
+        B, S = shape.global_batch, shape.seq_len
+        P = arch.n_prefix_tokens
+        tok = jax.ShapeDtypeStruct((B, max(S - P, 1)), jnp.int32)
+        specs = {"tokens": tok}
+        if P:
+            specs["prefix"] = jax.ShapeDtypeStruct(
+                (B, P, arch.prefix_dim or arch.d_model), DTYPE)
+        if shape.kind == "train":
+            specs["targets"] = jax.ShapeDtypeStruct((B, max(S - P, 1)), jnp.int32)
+        return specs
+
+
+# ----------------------------------------------------------------- enc-dec
+
+class EncDecLM:
+    """Encoder-decoder (seamless-m4t): stub audio frame embeddings in, text
+    tokens out. Encoder is bidirectional; decoder adds cross-attention."""
+
+    SRC_FRACTION = 4   # source frames = seq_len // 4 (documented in DESIGN.md)
+
+    def __init__(self, arch: ArchConfig):
+        self.arch = arch
+
+    def init(self, key):
+        arch = self.arch
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {
+            "embed": L.embedding_init(k1, arch.vocab, arch.d_model),
+            "enc_layers": _stacked_init(k2, arch.n_enc_layers,
+                                        lambda k: layer_init(k, arch)),
+            "enc_norm": L.rmsnorm_init(arch.d_model),
+            "dec_layers": _stacked_init(
+                k3, arch.n_layers, lambda k: layer_init(k, arch, cross=True)),
+            "final_norm": L.rmsnorm_init(arch.d_model),
+        }
+
+    def _encode(self, params, frames, q_chunk=1024, k_chunk=1024):
+        arch = self.arch
+        x = shard_activation(frames.astype(DTYPE))
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        def body(x, lp):
+            # bidirectional: prefix_len = S makes everything visible
+            return layer_apply(lp, arch, x, positions, prefix_len=S,
+                               q_chunk=q_chunk, k_chunk=k_chunk), None
+
+        x, _ = lax.scan(maybe_remat(body), x, params["enc_layers"])
+        return L.rmsnorm(params["enc_norm"], x, arch.norm_eps)
+
+    def _decode_train(self, params, tokens, memory, q_chunk=1024):
+        arch = self.arch
+        x = shard_activation(L.embed(params["embed"], tokens))
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        def body(x, lp):
+            return layer_apply(lp, arch, x, positions, memory=memory,
+                               q_chunk=q_chunk), None
+
+        x, _ = lax.scan(maybe_remat(body), x, params["dec_layers"])
+        return L.rmsnorm(params["final_norm"], x, arch.norm_eps)
+
+    def train_loss(self, params, batch):
+        memory = self._encode(params, batch["src_frames"])
+        x = self._decode_train(params, batch["tokens"], memory)
+        logits = shard_logits(L.unembed(params["embed"], x))
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, batch["targets"][..., None],
+                                   axis=-1)[..., 0]
+        mask = (batch["targets"] >= 0).astype(jnp.float32)
+        loss = jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0)
+        return loss, {"loss": loss}
+
+    def prefill_step(self, params, batch):
+        memory = self._encode(params, batch["src_frames"])
+        x = self._decode_train(params, batch["tokens"], memory)
+        return L.unembed(params["embed"], x[:, -1:])[:, 0]
+
+    def init_cache(self, batch: int, max_len: int):
+        arch = self.arch
+        hd = arch.resolved_head_dim
+        src = max(max_len // self.SRC_FRACTION, 1)
+        shape = (arch.n_layers, batch, max_len, arch.n_kv_heads, hd)
+        return {"k": jnp.zeros(shape, DTYPE), "v": jnp.zeros(shape, DTYPE),
+                "memory": jnp.zeros((batch, src, arch.d_model), DTYPE),
+                "pos": jnp.zeros((batch,), jnp.int32)}
+
+    def serve_step(self, params, cache, tokens):
+        arch = self.arch
+        x = L.embed(params["embed"], tokens[:, None])
+        pos = cache["pos"]
+        memory = cache["memory"]
+
+        def body(x, scanned):
+            lp, ck, cv = scanned
+            x, new = layer_decode(lp, arch, x, {"k": ck, "v": cv}, pos,
+                                  memory=memory)
+            return x, (new["k"], new["v"])
+
+        x, (nk, nv) = lax.scan(body, x, (params["dec_layers"], cache["k"],
+                                         cache["v"]))
+        x = L.rmsnorm(params["final_norm"], x, arch.norm_eps)
+        logits = L.unembed(params["embed"], x)[:, 0]
+        return logits, {"k": nk, "v": nv, "memory": memory, "pos": pos + 1}
+
+    def input_specs(self, shape: ShapeConfig):
+        arch = self.arch
+        B, S = shape.global_batch, shape.seq_len
+        src = max(S // self.SRC_FRACTION, 1)
+        specs = {"src_frames": jax.ShapeDtypeStruct((B, src, arch.d_model), DTYPE),
+                 "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if shape.kind == "train":
+            specs["targets"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return specs

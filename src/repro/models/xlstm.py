@@ -1,0 +1,241 @@
+"""xLSTM-350M: mLSTM blocks (chunked matrix-memory linear recurrence) with an
+sLSTM block every ``slstm_every`` positions (xLSTM[7:1] ratio).
+
+mLSTM is attention-free and O(S) — it runs the long_500k cell. Decode carries
+per-head (dk x dv) matrix states; there is no KV cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models.layers import DTYPE, _init
+from repro.models.ssm import gla_chunked, gla_step, slstm_scan, slstm_step
+from repro.models.settings import maybe_remat, shard_activation, shard_logits
+
+
+# ----------------------------------------------------------------- mLSTM
+
+def mlstm_init(key, arch: ArchConfig):
+    D = arch.d_model
+    H = arch.n_heads
+    dh = arch.resolved_head_dim
+    up = 2 * D                       # xLSTM up-projection factor 2
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": L.rmsnorm_init(D),
+        "w_up": _init(ks[0], (D, up), D),
+        "w_gate": _init(ks[1], (D, up), D),
+        "wq": _init(ks[2], (up, H, dh), up),
+        "wk": _init(ks[3], (up, H, dh), up),
+        "wv": _init(ks[4], (up, H, dh), up),
+        "w_if": (jax.random.normal(ks[5], (D, 2 * H)) * 0.02).astype(jnp.float32),
+        "b_if": jnp.zeros((2 * H,), jnp.float32),
+        "out_norm": L.rmsnorm_init(H * dh),
+        "w_down": _init(ks[6], (H * dh, D), H * dh),
+    }
+
+
+def _mlstm_qkv(p, arch, xn):
+    u = jnp.einsum("bsd,du->bsu", xn, p["w_up"])
+    q = jnp.einsum("bsu,uhk->bshk", u, p["wq"])
+    k = jnp.einsum("bsu,uhk->bshk", u, p["wk"]) * (arch.resolved_head_dim ** -0.5)
+    v = jnp.einsum("bsu,uhk->bshk", u, p["wv"])
+    gif = jnp.einsum("bsd,dh->bsh", xn.astype(jnp.float32), p["w_if"]) + p["b_if"]
+    H = arch.n_heads
+    gi, gf = gif[..., :H], gif[..., H:]
+    log_f = -jax.nn.softplus(-gf)            # log sigmoid forget gate
+    # input gate folded into k (exponential gating, stabilized by sigmoid)
+    k = k * jax.nn.sigmoid(gi)[..., None].astype(k.dtype)
+    gate = jax.nn.silu(jnp.einsum("bsd,du->bsu", xn, p["w_gate"]))
+    return q, k, v, log_f, gate, u
+
+
+def mlstm_apply(p, arch: ArchConfig, x, chunk=256):
+    x = shard_activation(x)
+    xn = L.rmsnorm(p["ln"], x, arch.norm_eps)
+    q, k, v, log_f, gate, _ = _mlstm_qkv(p, arch, xn)
+    o, _, _ = gla_chunked(q, k, v, log_f, chunk=min(chunk, x.shape[1]))
+    B, S, H, dh = o.shape
+    o = L.rmsnorm(p["out_norm"], o.reshape(B, S, H * dh), arch.norm_eps)
+    o = o * gate[..., :H * dh]
+    return x + jnp.einsum("bsu,ud->bsd", o, p["w_down"])
+
+
+def mlstm_decode(p, arch: ArchConfig, x, state, norm):
+    """x: (B,1,D); state: (B,H,dk,dv); norm: (B,H,dk)."""
+    xn = L.rmsnorm(p["ln"], x, arch.norm_eps)
+    q, k, v, log_f, gate, _ = _mlstm_qkv(p, arch, xn)
+    o, state, norm = gla_step(state, norm, q[:, 0], k[:, 0], v[:, 0],
+                              log_f[:, 0])
+    B, H, dh = o.shape
+    o = L.rmsnorm(p["out_norm"], o.reshape(B, 1, H * dh), arch.norm_eps)
+    o = o * gate[:, :1, :H * dh]
+    return x + jnp.einsum("bsu,ud->bsd", o, p["w_down"]), state, norm
+
+
+# ----------------------------------------------------------------- sLSTM
+
+def slstm_init(key, arch: ArchConfig):
+    D = arch.d_model
+    H = arch.n_heads
+    dh = arch.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": L.rmsnorm_init(D),
+        "w_gates": _init(ks[0], (D, H, 4 * dh), D),
+        "r": (jax.random.normal(ks[1], (H, dh, 4 * dh)) * dh ** -0.5
+              ).astype(jnp.float32),
+        "w_down": _init(ks[2], (H * dh, D), H * dh),
+        "out_norm": L.rmsnorm_init(H * dh),
+    }
+
+
+def _slstm_carry0(B, H, dh):
+    z = jnp.zeros((B, H, dh), jnp.float32)
+    return (z, z, z, z - 10.0)   # m0 low so early exp() doesn't saturate
+
+
+def slstm_apply(p, arch: ArchConfig, x):
+    xn = L.rmsnorm(p["ln"], x, arch.norm_eps)
+    gates = jnp.einsum("bsd,dhf->bshf", xn, p["w_gates"])
+    B, S, H, _ = gates.shape
+    dh = arch.resolved_head_dim
+    h, _ = slstm_scan(gates, p["r"], _slstm_carry0(B, H, dh))
+    h = L.rmsnorm(p["out_norm"], h.reshape(B, S, H * dh).astype(DTYPE),
+                  arch.norm_eps)
+    return x + jnp.einsum("bsu,ud->bsd", h, p["w_down"])
+
+
+def slstm_decode(p, arch: ArchConfig, x, carry):
+    xn = L.rmsnorm(p["ln"], x, arch.norm_eps)
+    gates = jnp.einsum("bsd,dhf->bshf", xn, p["w_gates"])[:, 0]
+    carry, h = slstm_step(carry, gates, p["r"].astype(jnp.float32))
+    B, H, dh = h.shape
+    h = L.rmsnorm(p["out_norm"], h.reshape(B, 1, H * dh).astype(DTYPE),
+                  arch.norm_eps)
+    return x + jnp.einsum("bsu,ud->bsd", h, p["w_down"]), carry
+
+
+# ------------------------------------------------------------------ model
+
+class XLSTM:
+    def __init__(self, arch: ArchConfig):
+        self.arch = arch
+        k = arch.slstm_every or 0
+        self.slstm_idx = [i for i in range(arch.n_layers)
+                          if k and (i % k == k - 1)]
+        self.mlstm_idx = [i for i in range(arch.n_layers)
+                          if i not in self.slstm_idx]
+
+    def init(self, key):
+        arch = self.arch
+        k1, k2, k3 = jax.random.split(key, 3)
+        keys_m = jax.random.split(k2, max(len(self.mlstm_idx), 1))
+        params = {
+            "embed": L.embedding_init(k1, arch.vocab, arch.d_model),
+            "mlstm": jax.vmap(lambda k: mlstm_init(k, arch))(keys_m),
+            "final_norm": L.rmsnorm_init(arch.d_model),
+        }
+        if self.slstm_idx:
+            keys_s = jax.random.split(k3, len(self.slstm_idx))
+            params["slstm"] = jax.vmap(lambda k: slstm_init(k, arch))(keys_s)
+        return params
+
+    def _hidden(self, params, tokens):
+        arch = self.arch
+        x = shard_activation(L.embed(params["embed"], tokens))
+
+        # scan contiguous mLSTM groups, interleave sLSTM blocks (unrolled —
+        # there are only n_layers/slstm_every of them, weights differ)
+        def m_body(x, lp):
+            return mlstm_apply(lp, arch, x), None
+
+        m_body = maybe_remat(m_body)
+
+        if not self.slstm_idx:
+            x, _ = lax.scan(m_body, x, params["mlstm"])
+        else:
+            per_group = arch.slstm_every - 1
+            m_off = 0
+            for si in range(len(self.slstm_idx)):
+                group = jax.tree_util.tree_map(
+                    lambda a, o=m_off: a[o:o + per_group], params["mlstm"])
+                x, _ = lax.scan(m_body, x, group)
+                m_off += per_group
+                sp = jax.tree_util.tree_map(lambda a, i=si: a[i],
+                                            params["slstm"])
+                x = slstm_apply(sp, arch, x)
+            rem = len(self.mlstm_idx) - m_off
+            if rem:
+                group = jax.tree_util.tree_map(lambda a: a[m_off:], params["mlstm"])
+                x, _ = lax.scan(m_body, x, group)
+        return L.rmsnorm(params["final_norm"], x, arch.norm_eps)
+
+    def train_loss(self, params, batch):
+        x = self._hidden(params, batch["tokens"])
+        logits = shard_logits(L.unembed(params["embed"], x))
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, batch["targets"][..., None],
+                                   axis=-1)[..., 0]
+        mask = (batch["targets"] >= 0).astype(jnp.float32)
+        loss = jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0)
+        return loss, {"loss": loss}
+
+    def prefill_step(self, params, batch):
+        x = self._hidden(params, batch["tokens"])
+        return L.unembed(params["embed"], x[:, -1:])[:, 0]
+
+    def init_cache(self, batch: int, max_len: int):
+        arch = self.arch
+        H, dh = arch.n_heads, arch.resolved_head_dim
+        nm, ns = len(self.mlstm_idx), len(self.slstm_idx)
+        cache = {
+            "m_state": jnp.zeros((nm, batch, H, dh, dh), jnp.float32),
+            "m_norm": jnp.zeros((nm, batch, H, dh), jnp.float32),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+        if ns:
+            z = jnp.zeros((ns, batch, H, dh), jnp.float32)
+            cache["s_carry"] = (z, z, z, z - 10.0)
+        return cache
+
+    def serve_step(self, params, cache, tokens):
+        arch = self.arch
+        x = L.embed(params["embed"], tokens[:, None])
+        m_states, m_norms = [], []
+        s_carries = []
+        mi = si = 0
+        for layer in range(arch.n_layers):
+            if layer in self.slstm_idx:
+                sp = jax.tree_util.tree_map(lambda a, i=si: a[i], params["slstm"])
+                carry = jax.tree_util.tree_map(lambda a, i=si: a[i],
+                                               cache["s_carry"])
+                x, carry = slstm_decode(sp, arch, x, carry)
+                s_carries.append(carry)
+                si += 1
+            else:
+                lp = jax.tree_util.tree_map(lambda a, i=mi: a[i], params["mlstm"])
+                x, st, nr = mlstm_decode(lp, arch, x,
+                                         cache["m_state"][mi], cache["m_norm"][mi])
+                m_states.append(st)
+                m_norms.append(nr)
+                mi += 1
+        x = L.rmsnorm(params["final_norm"], x, arch.norm_eps)
+        logits = L.unembed(params["embed"], x)[:, 0]
+        new = {"m_state": jnp.stack(m_states), "m_norm": jnp.stack(m_norms),
+               "pos": cache["pos"] + 1}
+        if s_carries:
+            new["s_carry"] = tuple(jnp.stack([c[i] for c in s_carries])
+                                   for i in range(4))
+        return logits, new
+
+    def input_specs(self, shape: ShapeConfig):
+        B, S = shape.global_batch, shape.seq_len
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if shape.kind == "train":
+            specs["targets"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return specs

@@ -1,0 +1,247 @@
+"""Zamba2-7B: Mamba2 backbone + shared full-attention blocks (hybrid).
+
+81 Mamba2 blocks; after every ``attn_every`` blocks one of two *weight-shared*
+transformer blocks is applied (alternating), following Zamba2's
+shared-attention design. Mamba2's SSD recurrence is the same chunked GLA
+substrate as mLSTM (scalar per-head decay a_t = exp(-dt * A)).
+
+Decode state = per-block (conv window, GLA state) + one KV cache per shared
+attention *site* (weights shared, caches not) — sub-quadratic in compute, so
+this arch runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models.layers import DTYPE, _init
+from repro.models.ssm import gla_chunked, gla_step
+from repro.models.transformer import layer_init, layer_apply, layer_decode
+from repro.models.settings import maybe_remat, shard_activation, shard_logits
+
+CONV_K = 4
+
+
+def _dims(arch: ArchConfig):
+    d_inner = 2 * arch.d_model
+    heads = d_inner // arch.ssm_head_dim
+    return d_inner, heads, arch.ssm_state
+
+
+def mamba_init(key, arch: ArchConfig):
+    D = arch.d_model
+    d_inner, H, N = _dims(arch)
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": L.rmsnorm_init(D),
+        "w_z": _init(ks[0], (D, d_inner), D),
+        "w_x": _init(ks[1], (D, d_inner), D),
+        "w_B": _init(ks[2], (D, N), D),
+        "w_C": _init(ks[3], (D, N), D),
+        "w_dt": (jax.random.normal(ks[4], (D, H)) * 0.02).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),      # A = exp(A_log) > 0
+        "conv_w": (jax.random.normal(ks[5], (CONV_K, d_inner)) *
+                   CONV_K ** -0.5).astype(DTYPE),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "out_norm": L.rmsnorm_init(d_inner),
+        "w_out": _init(ks[6], (d_inner, D), d_inner),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv, x: (B,S,C), w: (K,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return out
+
+
+def _mamba_core(p, arch, xn):
+    d_inner, H, N = _dims(arch)
+    z = jnp.einsum("bsd,di->bsi", xn, p["w_z"])
+    xs = jnp.einsum("bsd,di->bsi", xn, p["w_x"])
+    xs = jax.nn.silu(_causal_conv(xs, p["conv_w"]))
+    Bv = jnp.einsum("bsd,dn->bsn", xn, p["w_B"])
+    Cv = jnp.einsum("bsd,dn->bsn", xn, p["w_C"])
+    dt = jax.nn.softplus(jnp.einsum("bsd,dh->bsh", xn.astype(jnp.float32),
+                                    p["w_dt"]) + p["dt_bias"])
+    log_a = -dt * jnp.exp(p["A_log"])                       # (B,S,H)
+    B_, S, _ = xs.shape
+    v = xs.reshape(B_, S, H, arch.ssm_head_dim)
+    k = jnp.broadcast_to(Bv[:, :, None, :], (B_, S, H, N)) * \
+        dt[..., None].astype(Bv.dtype)
+    q = jnp.broadcast_to(Cv[:, :, None, :], (B_, S, H, N))
+    return z, v, k, q, log_a
+
+
+def _mamba_out(p, arch, x, y, v, z):
+    d_inner, H, _ = _dims(arch)
+    B_, S = y.shape[0], y.shape[1]
+    y = y + v * p["D_skip"][None, None, :, None].astype(v.dtype)
+    y = y.reshape(B_, S, d_inner)
+    y = L.rmsnorm(p["out_norm"], y * jax.nn.silu(z), arch.norm_eps)
+    return x + jnp.einsum("bsi,id->bsd", y, p["w_out"])
+
+
+def mamba_apply(p, arch: ArchConfig, x, chunk=256):
+    x = shard_activation(x)
+    xn = L.rmsnorm(p["ln"], x, arch.norm_eps)
+    z, v, k, q, log_a = _mamba_core(p, arch, xn)
+    y, _, _ = gla_chunked(q, k, v, log_a, chunk=min(chunk, x.shape[1]),
+                          normalize=False)
+    return _mamba_out(p, arch, x, y, v, z)
+
+
+def mamba_decode(p, arch: ArchConfig, x, conv_state, gla_state):
+    """x: (B,1,D); conv_state: (B,K-1,d_inner); gla_state: (B,H,N,hd)."""
+    d_inner, H, N = _dims(arch)
+    xn = L.rmsnorm(p["ln"], x, arch.norm_eps)
+    z = jnp.einsum("bsd,di->bsi", xn, p["w_z"])
+    xs = jnp.einsum("bsd,di->bsi", xn, p["w_x"])
+    window = jnp.concatenate([conv_state, xs], axis=1)       # (B,K,d_inner)
+    new_conv = window[:, 1:]
+    xs = jax.nn.silu(jnp.einsum("bki,ki->bi", window, p["conv_w"]))[:, None]
+    Bv = jnp.einsum("bsd,dn->bsn", xn, p["w_B"])
+    Cv = jnp.einsum("bsd,dn->bsn", xn, p["w_C"])
+    dt = jax.nn.softplus(jnp.einsum("bsd,dh->bsh", xn.astype(jnp.float32),
+                                    p["w_dt"]) + p["dt_bias"])
+    log_a = -dt * jnp.exp(p["A_log"])
+    B_ = x.shape[0]
+    v = xs.reshape(B_, 1, H, arch.ssm_head_dim)
+    k = jnp.broadcast_to(Bv[:, :, None, :], (B_, 1, H, N)) * \
+        dt[..., None].astype(Bv.dtype)
+    q = jnp.broadcast_to(Cv[:, :, None, :], (B_, 1, H, N))
+    y, gla_state, _ = gla_step(gla_state, jnp.zeros_like(gla_state[..., 0]),
+                               q[:, 0], k[:, 0], v[:, 0], log_a[:, 0],
+                               normalize=False)
+    y = y[:, None]
+    x = _mamba_out(p, arch, x, y, v, z)
+    return x, new_conv, gla_state
+
+
+# ------------------------------------------------------------------ model
+
+class Zamba:
+    N_SHARED = 2   # two alternating shared transformer blocks
+
+    def __init__(self, arch: ArchConfig):
+        self.arch = arch
+        self.n_groups = arch.n_layers // arch.attn_every  # shared-attn sites
+
+    def init(self, key):
+        arch = self.arch
+        k1, k2, k3 = jax.random.split(key, 3)
+        keys_m = jax.random.split(k2, arch.n_layers)
+        keys_s = jax.random.split(k3, self.N_SHARED)
+        return {
+            "embed": L.embedding_init(k1, arch.vocab, arch.d_model),
+            "mamba": jax.vmap(lambda k: mamba_init(k, arch))(keys_m),
+            "shared": jax.vmap(lambda k: layer_init(k, arch))(keys_s),
+            "final_norm": L.rmsnorm_init(arch.d_model),
+        }
+
+    def _group(self, params, g):
+        ae = self.arch.attn_every
+        return jax.tree_util.tree_map(lambda a: a[g * ae:(g + 1) * ae],
+                                      params["mamba"])
+
+    def _hidden(self, params, tokens, q_chunk=1024, k_chunk=1024):
+        arch = self.arch
+        x = shard_activation(L.embed(params["embed"], tokens))
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        def m_body(x, lp):
+            return mamba_apply(lp, arch, x), None
+
+        m_body = maybe_remat(m_body)
+        for g in range(self.n_groups):
+            x, _ = lax.scan(m_body, x, self._group(params, g))
+            sp = jax.tree_util.tree_map(lambda a: a[g % self.N_SHARED],
+                                        params["shared"])
+            x = layer_apply(sp, arch, x, positions, q_chunk=q_chunk,
+                            k_chunk=k_chunk)
+        rem = arch.n_layers - self.n_groups * arch.attn_every
+        if rem:
+            tail = jax.tree_util.tree_map(
+                lambda a: a[self.n_groups * arch.attn_every:], params["mamba"])
+            x, _ = lax.scan(m_body, x, tail)
+        return L.rmsnorm(params["final_norm"], x, arch.norm_eps)
+
+    def train_loss(self, params, batch):
+        x = self._hidden(params, batch["tokens"])
+        logits = shard_logits(L.unembed(params["embed"], x))
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, batch["targets"][..., None],
+                                   axis=-1)[..., 0]
+        mask = (batch["targets"] >= 0).astype(jnp.float32)
+        loss = jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0)
+        return loss, {"loss": loss}
+
+    def prefill_step(self, params, batch):
+        x = self._hidden(params, batch["tokens"])
+        return L.unembed(params["embed"], x[:, -1:])[:, 0]
+
+    def init_cache(self, batch: int, max_len: int):
+        arch = self.arch
+        d_inner, H, N = _dims(arch)
+        hd = arch.resolved_head_dim
+        nL, nG = arch.n_layers, self.n_groups
+        return {
+            "conv": jnp.zeros((nL, batch, CONV_K - 1, d_inner), DTYPE),
+            "gla": jnp.zeros((nL, batch, H, N, arch.ssm_head_dim), jnp.float32),
+            "k": jnp.zeros((nG, batch, max_len, arch.n_kv_heads, hd), DTYPE),
+            "v": jnp.zeros((nG, batch, max_len, arch.n_kv_heads, hd), DTYPE),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def serve_step(self, params, cache, tokens):
+        arch = self.arch
+        ae = arch.attn_every
+        x = L.embed(params["embed"], tokens[:, None])
+        pos = cache["pos"]
+
+        def m_body(x, scanned):
+            lp, conv, gla = scanned
+            x, nconv, ngla = mamba_decode(lp, arch, x, conv, gla)
+            return x, (nconv, ngla)
+
+        convs, glas, ks, vs = [], [], [], []
+        for g in range(self.n_groups):
+            sl = lambda a: a[g * ae:(g + 1) * ae]
+            x, (nc, ng) = lax.scan(m_body, x, (self._group(params, g),
+                                               sl(cache["conv"]),
+                                               sl(cache["gla"])))
+            convs.append(nc)
+            glas.append(ng)
+            sp = jax.tree_util.tree_map(lambda a: a[g % self.N_SHARED],
+                                        params["shared"])
+            x, site = layer_decode(sp, arch, x,
+                                   {"k": cache["k"][g], "v": cache["v"][g]}, pos)
+            ks.append(site["k"])
+            vs.append(site["v"])
+        rem = arch.n_layers - self.n_groups * ae
+        if rem:
+            sl = lambda a: a[self.n_groups * ae:]
+            x, (nc, ng) = lax.scan(m_body, x, (
+                jax.tree_util.tree_map(sl, params["mamba"]),
+                sl(cache["conv"]), sl(cache["gla"])))
+            convs.append(nc)
+            glas.append(ng)
+        x = L.rmsnorm(params["final_norm"], x, arch.norm_eps)
+        logits = L.unembed(params["embed"], x)[:, 0]
+        return logits, {"conv": jnp.concatenate(convs),
+                        "gla": jnp.concatenate(glas),
+                        "k": jnp.stack(ks), "v": jnp.stack(vs),
+                        "pos": pos + 1}
+
+    def input_specs(self, shape: ShapeConfig):
+        B, S = shape.global_batch, shape.seq_len
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if shape.kind == "train":
+            specs["targets"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return specs

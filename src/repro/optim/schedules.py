@@ -1,0 +1,19 @@
+"""Learning-rate schedules (scalar step -> lr multiplier, jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant():
+    return lambda step: jnp.ones((), jnp.float32)
+
+
+def warmup_cosine(warmup_steps: int, total_steps: int, min_ratio: float = 0.1):
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return warm * cos
+    return f

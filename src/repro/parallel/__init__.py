@@ -1,0 +1,3 @@
+from repro.parallel.sharding import (param_shardings, batch_shardings,
+                                     cache_shardings, spec_for_leaf,
+                                     tree_shardings, SHARDING_OVERRIDES)

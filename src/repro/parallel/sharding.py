@@ -1,0 +1,258 @@
+"""Sharding policy: parameter / batch / cache PartitionSpecs for any mesh.
+
+Logical axes:
+  fsdp   -> ('pod','data')   weight shard dim (ZeRO-3-style: params, grads,
+                             and optimizer moments are all fully sharded)
+  tp     -> 'model'          Megatron tensor parallelism (heads / d_ff / vocab)
+  ep     -> 'model'          expert dim, used only when n_experts divides it
+  batch  -> ('pod','data')   activation batch dim (DP)
+  seq    -> 'data'           sequence dim (SP): long-context KV caches and
+                             batch=1 activations shard the sequence instead
+
+Parameter rules are *trailing-aligned* per leaf name (stacked layer params
+have a leading L scan axis that is never sharded). Any logical axis whose
+mesh extent does not divide the dim is dropped (replicated) rather than
+padded, so memory analysis stays honest. Unmatched leaves fall back to a
+greedy largest-dim assignment (tp then fsdp).
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Perf experiment knob (EXPERIMENTS.md §Perf cell 2): pad-shard 'tp' dims
+# that don't divide the model axis (GSPMD pads, e.g. phi3's 40 heads -> 48)
+# instead of replicating. Off by default (paper-faithful baseline).
+TP_PAD = False
+
+# (regex on leaf path, trailing-aligned logical axes)
+SHARDING_OVERRIDES = [
+    (r"embed/table$", ("tp", "fsdp")),
+    (r"(attn|xattn)/w[qkv]$", ("fsdp", "tp", None)),
+    (r"(attn|xattn)/wo$", ("tp", None, "fsdp")),
+    (r"mlp/w[ig]$", ("fsdp", "tp")),
+    (r"mlp/wo$", ("tp", "fsdp")),
+    (r"moe/router$", ("fsdp", None)),
+    (r"moe/w[ig]$", ("ep", "fsdp", "tp")),
+    (r"moe/wo$", ("ep", "tp", "fsdp")),
+    (r"(w_up|w_gate)$", ("fsdp", "tp")),
+    (r"w_down$", ("tp", "fsdp")),
+    (r"w_if$", ("fsdp", "tp")),
+    (r"\br$", ("tp", None, None)),
+    (r"w_gates$", ("fsdp", "tp", None)),
+    (r"(w_z|w_x)$", ("fsdp", "tp")),
+    (r"(w_B|w_C)$", ("fsdp", None)),
+    (r"w_dt$", ("fsdp", "tp")),
+    (r"conv_w$", (None, "tp")),
+    (r"(A_log|dt_bias|D_skip)$", ("tp",)),
+    (r"w_out$", ("tp", "fsdp")),
+    (r"prefix_proj/w$", (None, "fsdp")),
+    (r"(scale|b_if|bias)$", None),          # norms & biases: replicated
+]
+
+
+def _logical_axes(mesh: Mesh, serving_1d: bool = False):
+    names = mesh.axis_names
+    fsdp = tuple(n for n in ("pod", "data") if n in names)
+    return {
+        # serving_1d drops the weight-shard axis: decode regathers fsdp
+        # shards every token, so models that fit HBM under TP-only sharding
+        # keep weights stationary instead (EXPERIMENTS.md §Perf)
+        "fsdp": None if serving_1d else (fsdp if fsdp else None),
+        "batch": fsdp if fsdp else None,
+        "tp": "model" if "model" in names else None,
+        "ep": "model" if "model" in names else None,
+        "seq": "data" if "data" in names else None,
+    }
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _resolve(mesh: Mesh, shape, logical, n_experts=0, serving_1d=False):
+    """Trailing-aligned logical names -> PartitionSpec for a leaf shape."""
+    axes = _logical_axes(mesh, serving_1d)
+    spec = [None] * len(shape)
+    if logical is None:
+        return P(*spec)
+    offset = len(shape) - len(logical)
+    used = set()
+    dropped = []
+    for i, name in enumerate(logical):
+        if name is None:
+            continue
+        mesh_axis = axes.get(name)
+        if mesh_axis is None:
+            continue
+        flat = mesh_axis if isinstance(mesh_axis, tuple) else (mesh_axis,)
+        if any(a in used for a in flat):
+            continue
+        if name == "ep" and (n_experts == 0 or
+                             n_experts % _axis_size(mesh, mesh_axis) != 0):
+            continue
+        dim = shape[offset + i]
+        if dim % _axis_size(mesh, mesh_axis) != 0:
+            # Divisibility-only policy: a dropped axis means REPLICATION of
+            # that dim's compute across the axis (e.g. phi3's 40 heads on
+            # model=16). Alternatives (pad-sharding heads, head-dim sharding)
+            # trade pad waste or score-contraction collectives — evaluated in
+            # EXPERIMENTS.md §Perf; the baseline keeps the faithful simple
+            # rule and reports the waste in the useful-compute ratio.
+            if not (TP_PAD and name == "tp"
+                    and dim >= _axis_size(mesh, mesh_axis) // 2):
+                dropped.append(name)
+                continue
+        spec[offset + i] = mesh_axis
+        used.update(flat)
+    del dropped
+    return P(*spec)
+
+
+def spec_for_leaf(mesh: Mesh, path: str, shape, n_experts=0,
+                  serving_1d=False) -> P:
+    for pattern, logical in SHARDING_OVERRIDES:
+        if re.search(pattern, path):
+            if logical is not None and len(logical) > len(shape):
+                logical = logical[-len(shape):]
+            return _resolve(mesh, shape, logical, n_experts, serving_1d)
+    # fallback: greedy — tp on the largest divisible dim, fsdp on the next
+    axes = _logical_axes(mesh, serving_1d)
+    spec = [None] * len(shape)
+    order = np.argsort(shape)[::-1]
+    remaining = [a for a in ("tp", "fsdp") if axes.get(a)]
+    start = 1 if len(shape) > 1 else 0   # skip a leading stack/scan axis
+    for d in order:
+        if d < start or not remaining:
+            continue
+        name = remaining[0]
+        if shape[d] % _axis_size(mesh, axes[name]) == 0 and shape[d] > 1:
+            spec[d] = axes[name]
+            remaining.pop(0)
+    return P(*spec)
+
+
+def _paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+             for path, _ in flat]
+    return flat, treedef, names
+
+
+def tree_shardings(mesh: Mesh, tree, n_experts=0, serving_1d=False):
+    """NamedShardings for a pytree of arrays/ShapeDtypeStructs (params or
+    optimizer moments — moments inherit the param spec = ZeRO sharding)."""
+    flat, treedef, names = _paths(tree)
+    out = []
+    for name, (path, leaf) in zip(names, flat):
+        if not hasattr(leaf, "shape") or len(getattr(leaf, "shape", ())) == 0:
+            out.append(NamedSharding(mesh, P()))
+            continue
+        out.append(NamedSharding(mesh,
+                                 spec_for_leaf(mesh, name, leaf.shape,
+                                               n_experts, serving_1d)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+HBM_SERVE_BUDGET = 10 * 2**30    # leave headroom for caches + activations
+
+
+def param_shardings(mesh: Mesh, params, arch=None, serving: bool = False):
+    """serving=True: weights stay stationary (TP-only) when the per-chip
+    footprint under 1D sharding fits ``HBM_SERVE_BUDGET``; oversized models
+    (grok-1, nemotron-340b) fall back to 2D fsdp x tp with per-step gathers.
+    """
+    n_experts = getattr(arch, "n_experts", 0)
+    if serving:
+        from repro.utils.tree import tree_size_bytes
+        model_sz = mesh.shape.get("model", 1)
+        per_chip = tree_size_bytes(params) / max(model_sz, 1)
+        if per_chip <= HBM_SERVE_BUDGET:
+            return tree_shardings(mesh, params, n_experts, serving_1d=True)
+    return tree_shardings(mesh, params, n_experts)
+
+
+# ------------------------------------------------------------- activations
+
+def _batch_dim_spec(mesh: Mesh, batch: int, seq: int | None):
+    """Pick (batch_axes, seq_axes): DP when the batch divides, else SP."""
+    axes = _logical_axes(mesh)
+    bd = axes["batch"]
+    if bd is not None and batch % _axis_size(mesh, bd) == 0:
+        return bd, None
+    if "data" in mesh.axis_names and batch % mesh.shape["data"] == 0 \
+            and batch > 1:
+        return "data", None
+    if seq is not None and "data" in mesh.axis_names \
+            and seq % mesh.shape["data"] == 0:
+        return None, "data"       # sequence sharding (long_500k, batch=1)
+    return None, None
+
+
+def batch_shardings(mesh: Mesh, specs: dict):
+    """Shardings for a model input_specs dict (tokens/targets/prefix/frames)."""
+    out = {}
+    for k, v in specs.items():
+        if len(v.shape) == 0:
+            out[k] = NamedSharding(mesh, P())
+            continue
+        B = v.shape[0]
+        S = v.shape[1] if len(v.shape) > 1 else None
+        bd, sd = _batch_dim_spec(mesh, B, S)
+        spec = [bd] + [None] * (len(v.shape) - 1)
+        if sd is not None and len(v.shape) > 1:
+            spec[1] = sd
+        out[k] = NamedSharding(mesh, P(*spec))
+    return out
+
+
+def cache_shardings(mesh: Mesh, cache, batch: int):
+    """KV/state cache shardings for decode.
+
+    Policy: batch dim over the batch axes; the SEQUENCE dim (the longest
+    remaining dim) over 'model' — and additionally over 'data' when the
+    batch is too small to use it (long_500k, batch=1). Sequence sharding
+    keeps each chip's attention local to its cache slice; the softmax
+    statistics and PV partials then reduce with tiny psums (flash-decoding
+    dataflow), instead of all-gathering multi-GB caches per token. Head/state
+    dims stay unsharded.
+    """
+    axes = _logical_axes(mesh)
+    batch_sz = _axis_size(mesh, axes["batch"]) if axes["batch"] else 1
+
+    def leaf_spec(leaf):
+        shape = leaf.shape
+        if len(shape) <= 1:
+            return P(*([None] * len(shape)))
+        spec = [None] * len(shape)
+        b_axis = next((i for i in (1, 0) if i < len(shape)
+                       and shape[i] == batch), None)
+        batch_used = False
+        if b_axis is not None and axes["batch"] and batch % batch_sz == 0 \
+                and batch > 1:
+            spec[b_axis] = axes["batch"]
+            batch_used = True
+        # sequence dim: longest free dim
+        seq_axes = []
+        if not batch_used and axes["batch"]:
+            seq_axes.extend(axes["batch"])
+        if "model" in mesh.axis_names:
+            seq_axes.append("model")
+        if seq_axes:
+            cand = int(np.argmax([s if spec[i] is None and i != b_axis else 0
+                                  for i, s in enumerate(shape)]))
+            size = int(np.prod([mesh.shape[a] for a in seq_axes]))
+            if shape[cand] % size == 0 and shape[cand] > 1:
+                spec[cand] = tuple(seq_axes) if len(seq_axes) > 1 else seq_axes[0]
+        return P(*spec)
+
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(mesh, leaf_spec(leaf))
+        if hasattr(leaf, "shape") else NamedSharding(mesh, P()), cache)

@@ -1,0 +1,84 @@
+"""Step builders: training (grad + AdamW + optional accumulation + remat) and
+serving (prefill / cached decode). These are the functions the dry-run lowers
+and the launcher jits — sharding is supplied by the caller via in_shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import settings
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedules import warmup_cosine
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    optimizer: AdamWConfig = AdamWConfig(lr=3e-4, weight_decay=0.1)
+    remat: bool = True
+    accum_steps: int = 1          # gradient accumulation microbatches
+    warmup_steps: int = 100
+    total_steps: int = 10000
+
+
+def make_train_step(model, cfg: TrainStepConfig = TrainStepConfig()):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    With accum_steps > 1 the batch's leading dim is split into microbatches
+    scanned sequentially — same global batch, 1/accum activation memory (the
+    standard throughput/memory trade at scale).
+    """
+    sched = warmup_cosine(cfg.warmup_steps, cfg.total_steps)
+
+    def loss_fn(params, batch):
+        with settings.remat(cfg.remat):
+            loss, metrics = model.train_loss(params, batch)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        if cfg.accum_steps > 1:
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            split = lambda x: x.reshape((cfg.accum_steps,
+                                         x.shape[0] // cfg.accum_steps)
+                                        + x.shape[1:])
+            mbs = jax.tree_util.tree_map(split, batch)
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(micro, (zeros, 0.0), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / cfg.accum_steps, grads)
+            loss = loss / cfg.accum_steps
+        else:
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        lr_scale = sched(opt_state["step"] + 1)   # step is 0-based pre-update
+        params, opt_state, om = adamw_update(params, grads, opt_state,
+                                             cfg.optimizer, lr_scale=lr_scale)
+        return params, opt_state, {"loss": loss, **om}
+
+    return train_step
+
+
+def init_optimizer(params, cfg: TrainStepConfig = TrainStepConfig()):
+    return adamw_init(params, cfg.optimizer)
+
+
+def make_serve_step(model):
+    def serve_step(params, cache, tokens):
+        return model.serve_step(params, cache, tokens)
+    return serve_step
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch):
+        with settings.remat(False):
+            return model.prefill_step(params, batch)
+    return prefill_step

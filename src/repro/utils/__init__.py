@@ -1,0 +1,2 @@
+from repro.utils.tree import tree_size_bytes, tree_num_params, map_leaves_with_path
+from repro.utils.registry import Registry

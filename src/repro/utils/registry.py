@@ -1,0 +1,30 @@
+"""Tiny name->factory registry used for architectures, platforms, benchmarks."""
+from __future__ import annotations
+
+
+class Registry:
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._entries: dict[str, object] = {}
+
+    def register(self, name: str, obj=None):
+        if obj is not None:
+            self._entries[name] = obj
+            return obj
+
+        def deco(fn):
+            self._entries[name] = fn
+            return fn
+        return deco
+
+    def get(self, name: str):
+        if name not in self._entries:
+            raise KeyError(
+                f"Unknown {self.kind} '{name}'. Available: {sorted(self._entries)}")
+        return self._entries[name]
+
+    def names(self):
+        return sorted(self._entries)
+
+    def __contains__(self, name):
+        return name in self._entries

@@ -1,0 +1,40 @@
+"""Small pytree utilities used across the framework (no flax dependency)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_num_params(tree) -> int:
+    """Total number of scalar parameters in a pytree of arrays."""
+    return int(sum(np.prod(x.shape) for x in jax.tree_util.tree_leaves(tree)
+                   if hasattr(x, "shape")))
+
+
+def tree_size_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays / ShapeDtypeStructs."""
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        if hasattr(x, "shape") and hasattr(x, "dtype"):
+            total += int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+    return total
+
+
+def map_leaves_with_path(fn, tree):
+    """tree_map with the flattened key-path string passed as first arg."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append(fn(name, leaf))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def cast_floating(tree, dtype):
+    """Cast floating-point leaves of a pytree to ``dtype`` (ints untouched)."""
+    def _cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(_cast, tree)

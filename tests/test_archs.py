@@ -1,0 +1,86 @@
+"""Per-architecture smoke tests: reduced config, one train step + one decode
+step on CPU, asserting output shapes and no NaNs (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.models import ARCH_IDS, build_by_name
+
+
+def _batch_for(model, shape, key):
+    specs = model.input_specs(shape)
+    batch = {}
+    for k, v in specs.items():
+        if v.dtype == jnp.int32:
+            batch[k] = jnp.ones(v.shape, jnp.int32)
+        else:
+            batch[k] = jax.random.normal(key, v.shape, v.dtype)
+    return batch
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_arch_forward_and_decode(name):
+    arch, model = build_by_name(name, reduced=True)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    shape = SHAPES["train_4k"].reduced(seq=64, batch=2)
+    batch = _batch_for(model, shape, key)
+    loss, metrics = jax.jit(model.train_loss)(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+
+    cache = model.init_cache(2, 128)
+    logits, cache2 = jax.jit(model.serve_step)(
+        params, cache, jnp.ones((2,), jnp.int32))
+    assert logits.shape == (2, arch.vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    assert int(cache2["pos"][0]) == 1
+    # second step advances
+    logits3, cache3 = jax.jit(model.serve_step)(
+        params, cache2, jnp.ones((2,), jnp.int32))
+    assert int(cache3["pos"][0]) == 2
+
+
+@pytest.mark.parametrize("name", ["yi-9b", "granite-moe-3b-a800m", "xlstm-350m"])
+def test_arch_train_step_reduces_loss(name):
+    """A few SGD steps on a fixed batch must reduce the loss (gradients flow
+    through every block type: dense attn, MoE dispatch, recurrence)."""
+    arch, model = build_by_name(name, reduced=True)
+    key = jax.random.PRNGKey(1)
+    params = model.init(key)
+    shape = SHAPES["train_4k"].reduced(seq=32, batch=2)
+    batch = _batch_for(model, shape, key)
+
+    @jax.jit
+    def step(p):
+        (l, _), g = jax.value_and_grad(model.train_loss, has_aux=True)(p, batch)
+        p = jax.tree_util.tree_map(
+            lambda w, gr: (w - 0.3 * gr.astype(jnp.float32)).astype(w.dtype)
+            if jnp.issubdtype(w.dtype, jnp.floating) else w, p, g)
+        return p, l
+
+    losses = []
+    for _ in range(5):
+        params, l = step(params)
+        losses.append(float(l))
+    assert losses[-1] < losses[0], losses
+
+
+def test_prefill_matches_decode_xlstm():
+    """Recurrent decode must agree with the parallel (chunked) prefill path —
+    the chunked GLA and the step recurrence are the same operator."""
+    arch, model = build_by_name("xlstm-350m", reduced=True)
+    key = jax.random.PRNGKey(2)
+    params = model.init(key)
+    toks = jax.random.randint(key, (1, 8), 0, arch.vocab)
+    # prefill logits at final position
+    logits_par = model.prefill_step(params, {"tokens": toks})
+    # sequential decode over the same tokens
+    cache = model.init_cache(1, 16)
+    for t in range(8):
+        logits_seq, cache = model.serve_step(params, cache, toks[:, t])
+    np.testing.assert_allclose(np.asarray(logits_par, np.float32),
+                               np.asarray(logits_seq, np.float32),
+                               rtol=0.1, atol=0.15)

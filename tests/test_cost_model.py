@@ -1,0 +1,134 @@
+"""COGNATE cost-model tests: components, losses, metrics, transfer pipeline,
+search, autotune — at tiny scale (seconds, CPU)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CostModelConfig, apply_cost_model, evaluate,
+                        finetune_target, geomean, init_cost_model,
+                        kendall_tau, make_codec, ordered_pair_accuracy,
+                        pairwise_ranking_loss, pretrain_source, topk_speedup)
+from repro.core.search import hamming_neighbors, simulated_annealing, topk_exhaustive
+from repro.data import collect_dataset, split_suite
+from repro.hw import get_platform
+
+CFG = CostModelConfig(ch_scale=0.25)
+
+
+def _tiny_datasets():
+    train, evl = split_suite(6, 4, seed=0, size_range=(256, 2048))
+    cpu, spade = get_platform("cpu"), get_platform("spade")
+    src = collect_dataset(cpu, train, "spmm", 16, seed=1, resolution=16)
+    tgt = collect_dataset(spade, train[:3], "spmm", 16, seed=2, resolution=16)
+    ev = collect_dataset(spade, evl, "spmm", 0, seed=3, resolution=16)
+    return src, tgt, ev
+
+
+def test_model_forward_shapes():
+    key = jax.random.PRNGKey(0)
+    for pred in ("mlp", "lstm", "gru", "tf"):
+        cfg = dataclasses.replace(CFG, predictor=pred)
+        p = init_cost_model(key, cfg)
+        pyr = jnp.zeros((2, 4, 16, 16))
+        hom = jnp.zeros((2, 5, 53))
+        z = jnp.zeros((2, 5, cfg.latent_dim))
+        scores = apply_cost_model(p, cfg, pyr, hom, z)
+        assert scores.shape == (2, 5)
+
+
+def test_ranking_loss_behaviour():
+    # perfectly ordered scores (higher=slower) give zero hinge beyond margin
+    t = jnp.asarray([[1.0, 2.0, 3.0]])
+    good = jnp.asarray([[-10.0, 0.0, 10.0]])
+    bad = -good
+    assert float(pairwise_ranking_loss(good, t)) == 0.0
+    assert float(pairwise_ranking_loss(bad, t)) > 1.0
+
+
+def test_metrics():
+    t = np.asarray([[1.0, 2.0, 3.0, 4.0]])
+    s = np.asarray([[0.1, 0.2, 0.3, 0.4]])
+    assert ordered_pair_accuracy(s, t) == 1.0
+    assert kendall_tau(s, t) == 1.0
+    sp, ape = topk_speedup(s, t, default_index=3, k=1)
+    assert sp[0] == 4.0 and ape[0] == 0.0
+    assert abs(geomean([2.0, 8.0]) - 4.0) < 1e-9
+
+
+def test_codecs():
+    het = np.random.default_rng(0).random((40, 13)).astype(np.float32)
+    for kind in ("ae", "vae", "pca", "fa", "none"):
+        codec = make_codec(kind, het, epochs=20, fa_platform="spade")
+        z = codec.encode(het)
+        assert z.shape == (40, codec.latent_dim)
+        assert np.isfinite(z).all()
+    # AE learns to reconstruct (loss decreases)
+    codec = make_codec("ae", het, epochs=60)
+    losses = codec.history["loss"]
+    assert losses[-1] < losses[0]
+
+
+def test_transfer_pipeline_end_to_end():
+    src, tgt, ev = _tiny_datasets()
+    pre = pretrain_source(CFG, src, epochs=3, ae_epochs=20)
+    assert pre.history["loss"][-1] <= pre.history["loss"][0] * 1.2
+    ft = finetune_target(pre, tgt, epochs=3, ae_epochs=20)
+    m = evaluate(ft, ev)
+    for k in ("top1_geomean", "top5_geomean", "optimal_geomean", "opa"):
+        assert np.isfinite(m[k])
+    # top-5 can't be worse than top-1; oracle bounds both
+    assert m["top5_geomean"] >= m["top1_geomean"] - 1e-9
+    assert m["optimal_geomean"] >= m["top5_geomean"] - 1e-6
+
+
+def test_freeze_prefixes_keep_params_fixed():
+    from repro.core.trainer import TrainConfig, train_cost_model
+    src, tgt, _ = _tiny_datasets()
+    codec = make_codec("ae", tgt.het, epochs=10)
+    p0 = init_cost_model(jax.random.PRNGKey(0), CFG)
+    cfg = TrainConfig(epochs=2, freeze_prefixes=("featurizer/blocks/0",),
+                      batch_matrices=3)
+    p1, _ = train_cost_model(CFG, tgt, codec, cfg, init_params=p0)
+    frozen0 = jax.tree_util.tree_leaves(p0["featurizer"]["blocks"][0])
+    frozen1 = jax.tree_util.tree_leaves(p1["featurizer"]["blocks"][0])
+    for a, b in zip(frozen0, frozen1):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # non-frozen parts moved
+    moved0 = jax.tree_util.tree_leaves(p0["predictor"])
+    moved1 = jax.tree_util.tree_leaves(p1["predictor"])
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(moved0, moved1))
+
+
+def test_search():
+    scores = np.asarray([5.0, 1.0, 3.0, 0.5, 2.0])
+    assert list(topk_exhaustive(scores, 2)) == [3, 1]
+    space = get_platform("spade").space
+    nbrs = hamming_neighbors(space, 0)
+    assert len(nbrs) == (3 + 3 + 1 + 1 + 1 + 1)   # sum over param fan-outs
+    # SA converges toward the optimum of a smooth objective
+    target = np.arange(256, dtype=np.float64)
+    best, best_s, trace = simulated_annealing(
+        lambda idx: target[idx], 256, steps=300, seed=0)
+    assert best_s <= 10
+
+
+def test_autotuner_api():
+    from repro.core.autotune import Autotuner, KernelAutotuner
+    from repro.data import generate_matrix
+    src, tgt, _ = _tiny_datasets()
+    pre = pretrain_source(CFG, src, epochs=2, ae_epochs=10)
+    ft = finetune_target(pre, tgt, epochs=2, ae_epochs=10)
+    tuner = Autotuner("spade", "spmm", ft.params, ft.model_cfg, ft.codec,
+                      resolution=16)
+    mat = generate_matrix("banded", seed=42, n_rows=512, n_cols=512)
+    cands = tuner.best_configs(mat, k=3)
+    assert len(cands) == 3 and "row_panels" in cands[0]
+    picked = tuner.tune(mat, k=3)
+    assert picked["runtime_ms"] > 0
+    kt = KernelAutotuner()
+    cfg = kt.select(mat)
+    assert cfg["block_m"] in (8, 16, 32, 64, 128)

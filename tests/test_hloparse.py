@@ -1,0 +1,58 @@
+"""Unit tests for the trip-count-aware HLO cost analyzer — the foundation of
+every roofline number in EXPERIMENTS.md."""
+import jax
+import jax.numpy as jnp
+from jax import lax
+import numpy as np
+
+from repro.launch.hloparse import HloModule, analyze_hlo
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_trip_counts_multiply_flops():
+    def scanned(x, ws):
+        def body(x, w):
+            return x @ w, None
+        y, _ = lax.scan(body, x, ws)
+        return y
+
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    ws = jax.ShapeDtypeStruct((7, 256, 256), jnp.float32)
+    r = analyze_hlo(_compile(scanned, x, ws))
+    expect = 7 * 2 * 256 ** 3
+    assert abs(r["flops"] - expect) / expect < 0.01
+
+
+def test_single_dot_flops_exact():
+    a = jax.ShapeDtypeStruct((128, 512), jnp.float32)
+    b = jax.ShapeDtypeStruct((512, 64), jnp.float32)
+    r = analyze_hlo(_compile(lambda a, b: a @ b, a, b))
+    assert r["flops"] == 2 * 128 * 512 * 64
+
+
+def test_traffic_counts_results_once():
+    a = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    r = analyze_hlo(_compile(lambda a: a @ a, a))
+    # one dot result materialized: 64KiB <= traffic <= a few results
+    assert 128 * 128 * 4 <= r["traffic_bytes"] <= 10 * 128 * 128 * 4
+
+
+def test_batched_dot_contraction_dims():
+    """dot_general with batch dims: flops = 2 * prod(result) * contract."""
+    a = jax.ShapeDtypeStruct((4, 32, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 64, 16), jnp.float32)
+    r = analyze_hlo(_compile(lambda a, b: jnp.einsum("bij,bjk->bik", a, b),
+                             a, b))
+    assert r["flops"] == 2 * (4 * 32 * 16) * 64
+
+
+def test_entry_detection_and_no_collectives_on_host():
+    a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    hlo = _compile(lambda a: jnp.tanh(a @ a), a)
+    mod = HloModule(hlo)
+    assert mod.entry is not None
+    r = analyze_hlo(hlo)
+    assert r["collectives"] == {}

@@ -1,0 +1,130 @@
+"""Substrate tests: matrix generation, featurization, config spaces, mapping
+functions, and the analytical platform models (+ hypothesis invariants)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import generate_matrix, density_pyramid, matrix_stats, FAMILIES
+from repro.data.features import STAT_NAMES
+from repro.hw import get_platform, PLATFORMS
+from repro.hw import mapping
+from repro.hw.mapping import UNIFIED_DIM, encode_unified
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_matrix_generation(family):
+    m = generate_matrix(family, seed=3, n_rows=512, n_cols=512,
+                        target_nnz=4000)
+    assert m.nnz > 0
+    assert m.rows.max() < m.n_rows and m.cols.max() < m.n_cols
+    # sorted + deduplicated
+    key = m.rows.astype(np.int64) * m.n_cols + m.cols
+    assert np.all(np.diff(key) > 0)
+
+
+def test_pyramid_shape_and_range():
+    m = generate_matrix("powerlaw", seed=5)
+    p = density_pyramid(m, 32)
+    assert p.shape == (4, 32, 32)
+    assert np.isfinite(p).all()
+    assert (p >= 0).all()
+    assert p[1].max() <= 1.0   # presence channel is binary
+
+
+def test_stats_vector():
+    m = generate_matrix("banded", seed=7, n_rows=1024, n_cols=1024)
+    s = matrix_stats(m)
+    assert s.shape == (len(STAT_NAMES),)
+    d = dict(zip(STAT_NAMES, s))
+    assert d["bandwidth"] < 0.2          # banded => near-diagonal
+    assert np.isfinite(s).all()
+
+
+def test_spade_space_is_paper_exact():
+    sp = get_platform("spade").space
+    assert sp.n_configs == 256           # paper §4.1
+    assert sorted(set(sp.params["row_panels"])) == [4, 32, 256, 2048]
+    assert sorted(set(sp.params["col_panels"])) == [-1, 1024, 16384, 65536]
+    assert sorted(set(sp.params["split"])) == [32, 256]
+
+
+def test_unified_encoding_dims():
+    for name in PLATFORMS:
+        sp = get_platform(name).space
+        h = sp.homogeneous(4096)
+        assert h.shape == (sp.n_configs, UNIFIED_DIM)   # 53, Table 6
+        # each of the 7 loop slots is a valid one-hot
+        slots = h[:, 3:52].reshape(-1, 7, 7)
+        np.testing.assert_allclose(slots.sum(-1), 1.0)
+
+
+def test_phi_spade_appendix_e_example():
+    """App. E: (row=4, col=1024, split(idx)->32, b=0) ->
+    i,j,k = 4,1024,32 and order [k2,k3,i2,j2,i1,j1,k1]."""
+    I, J, K, order = mapping.phi_spade(
+        np.array([4]), np.array([1024]), np.array([32]), np.array([0]), 65536)
+    assert (I[0], J[0], K[0]) == (4, 1024, 32)
+    names = [mapping.LOOP_NAMES[i] for i in order[0]]
+    assert names == ["k2", "k3", "i2", "j2", "i1", "j1", "k1"]
+    # barrier flips i2/j2 (paper §3.2)
+    _, _, _, order_b = mapping.phi_spade(
+        np.array([4]), np.array([1024]), np.array([32]), np.array([1]), 65536)
+    names_b = [mapping.LOOP_NAMES[i] for i in order_b[0]]
+    assert names_b == ["k2", "k3", "j2", "i2", "i1", "j1", "k1"]
+
+
+def test_pi_a1_inserts_k3_after_k2():
+    out = mapping.pi_a1([0, 2, 4, 1, 3, 5])
+    assert out.index(mapping.K3) == out.index(mapping.K2) + 1
+    assert len(out) == 7
+
+
+@pytest.mark.parametrize("platform", PLATFORMS)
+@pytest.mark.parametrize("op", ["spmm", "sddmm"])
+def test_platform_runtimes(platform, op):
+    p = get_platform(platform)
+    m = generate_matrix("rmat", seed=11, n_rows=2048, n_cols=2048,
+                        target_nnz=30000)
+    rt = p.runtime(matrix_stats(m), op, n_cols=m.n_cols)
+    assert rt.shape == (p.space.n_configs,)
+    assert np.isfinite(rt).all() and (rt > 0).all()
+    # configuration matters: nontrivial spread
+    assert rt.max() / rt.min() > 1.05
+
+
+def test_platform_determinism_and_noise():
+    p = get_platform("spade")
+    m = generate_matrix("uniform", seed=13)
+    s = matrix_stats(m)
+    a = p.runtime(s, "spmm", matrix_key=5, n_cols=m.n_cols)
+    b = p.runtime(s, "spmm", matrix_key=5, n_cols=m.n_cols)
+    np.testing.assert_array_equal(a, b)                 # deterministic
+    c = p.runtime(s, "spmm", matrix_key=5, n_cols=m.n_cols, noise=False)
+    assert np.abs(np.log(a / c)).mean() < 0.2           # noise is mild
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       family=st.sampled_from(sorted(FAMILIES)))
+def test_runtime_positive_property(seed, family):
+    """Platform models must stay positive/finite over the input family mix."""
+    m = generate_matrix(family, seed=seed, n_rows=512, n_cols=512,
+                        target_nnz=5000)
+    rt = get_platform("spade").runtime(matrix_stats(m), "spmm",
+                                       n_cols=m.n_cols, noise=False)
+    assert np.isfinite(rt).all() and (rt > 0).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_more_work_costs_more_property(seed):
+    """2x the nnz (same structure family/size) should not be cheaper at the
+    per-matrix optimum — a monotonicity invariant of the cost models."""
+    m1 = generate_matrix("uniform", seed=seed, n_rows=1024, n_cols=1024,
+                         target_nnz=8000)
+    m2 = generate_matrix("uniform", seed=seed, n_rows=1024, n_cols=1024,
+                         target_nnz=32000)
+    p = get_platform("spade")
+    r1 = p.runtime(matrix_stats(m1), "spmm", n_cols=1024, noise=False).min()
+    r2 = p.runtime(matrix_stats(m2), "spmm", n_cols=1024, noise=False).min()
+    assert r2 >= r1 * 0.9

@@ -1,0 +1,134 @@
+"""Pallas kernel validation: shape/dtype sweeps + hypothesis property tests,
+all against the pure-jnp oracles in repro.kernels.ref (interpret mode)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+
+
+def _rand_sparse(rng, m, k, density):
+    return ((rng.random((m, k)) < density) *
+            rng.normal(size=(m, k))).astype(np.float32)
+
+
+# ------------------------------------------------------------ shape sweeps
+
+@pytest.mark.parametrize("block_m", [8, 32, 64])
+@pytest.mark.parametrize("n_major", [True, False])
+def test_spmm_block_sweep(block_m, n_major):
+    rng = np.random.default_rng(block_m)
+    dense = _rand_sparse(rng, 128, 256, 0.07)
+    a = ops.bsr_from_dense(dense, block_m=block_m)
+    b = rng.normal(size=(256, 128)).astype(np.float32)
+    got = np.asarray(ops.spmm(a, jnp.asarray(b), n_major=n_major))
+    want = np.asarray(ops.spmm_ref(a, jnp.asarray(b)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(32, 128, 128), (96, 384, 256),
+                                   (160, 128, 512)])
+def test_spmm_shape_sweep(shape):
+    m, k, n = shape
+    rng = np.random.default_rng(m + k)
+    a = ops.bsr_from_dense(_rand_sparse(rng, m, k, 0.05), block_m=32)
+    b = rng.normal(size=(k, n)).astype(np.float32)
+    got = np.asarray(ops.spmm(a, jnp.asarray(b)))
+    want = np.asarray(ops.spmm_ref(a, jnp.asarray(b)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_spmm_dtypes(dtype):
+    rng = np.random.default_rng(7)
+    a = ops.bsr_from_dense(_rand_sparse(rng, 64, 256, 0.08), block_m=32,
+                           dtype=dtype)
+    b = jnp.asarray(rng.normal(size=(256, 128)), dtype)
+    got = np.asarray(ops.spmm(a, b), np.float32)
+    want = np.asarray(ops.spmm_ref(a, b), np.float32)
+    tol = 1e-4 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_spmm_vs_dense_matmul():
+    """BSR path must agree with a plain dense matmul on the padded operand."""
+    rng = np.random.default_rng(3)
+    m, k, n = 100, 200, 96          # deliberately unaligned
+    dense = _rand_sparse(rng, m, k, 0.1)
+    a = ops.bsr_from_dense(dense, block_m=32)
+    b = rng.normal(size=(k, n)).astype(np.float32)
+    got = np.asarray(ops.spmm(a, jnp.asarray(b), block_n=32))
+    padded = np.zeros(a.shape, np.float32)
+    padded[:m, :k] = dense
+    want = padded @ np.pad(b, ((0, a.shape[1] - k), (0, 0)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_spmm_empty_rows():
+    """Block-rows with no nonzeros must produce exact zeros (pad blocks)."""
+    rng = np.random.default_rng(9)
+    dense = np.zeros((96, 256), np.float32)
+    dense[:32] = _rand_sparse(rng, 32, 256, 0.2)   # only first block-row
+    a = ops.bsr_from_dense(dense, block_m=32)
+    b = rng.normal(size=(256, 128)).astype(np.float32)
+    out = np.asarray(ops.spmm(a, jnp.asarray(b)))
+    assert np.abs(out[32:]).max() == 0.0
+    np.testing.assert_allclose(out[:32], dense[:32] @ b, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("block_k", [64, 128])
+@pytest.mark.parametrize("block_m", [16, 32])
+def test_sddmm_sweep(block_k, block_m):
+    rng = np.random.default_rng(block_k + block_m)
+    m, kd, n = 64, 256, 256
+    mask = (rng.random((m, n)) < 0.1).astype(np.float32)
+    mk = ops.bsr_from_dense(mask, block_m=block_m)
+    b = rng.normal(size=(m, kd)).astype(np.float32)
+    c = rng.normal(size=(kd, n)).astype(np.float32)
+    got = np.asarray(ops.sddmm(mk, jnp.asarray(b), jnp.asarray(c),
+                               block_k=block_k))
+    want = np.asarray(ops.sddmm_ref(mk, jnp.asarray(b), jnp.asarray(c)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_sddmm_respects_mask():
+    rng = np.random.default_rng(11)
+    mask = (rng.random((64, 128)) < 0.05).astype(np.float32)
+    mk = ops.bsr_from_dense(mask, block_m=32)
+    b = rng.normal(size=(64, 128)).astype(np.float32)
+    c = rng.normal(size=(128, 128)).astype(np.float32)
+    out = np.asarray(ops.sddmm(mk, jnp.asarray(b), jnp.asarray(c)))
+    md = np.asarray(mk.data)
+    assert np.all(out[md == 0] == 0.0)
+
+
+# --------------------------------------------------------------- property
+
+@settings(max_examples=10, deadline=None)
+@given(density=st.floats(0.01, 0.3),
+       seed=st.integers(0, 2**16),
+       block_m=st.sampled_from([8, 32]))
+def test_spmm_property(density, seed, block_m):
+    """For random patterns/densities the kernel equals the oracle."""
+    rng = np.random.default_rng(seed)
+    dense = _rand_sparse(rng, 64, 128, density)
+    a = ops.bsr_from_dense(dense, block_m=block_m)
+    b = rng.normal(size=(128, 128)).astype(np.float32)
+    got = np.asarray(ops.spmm(a, jnp.asarray(b)))
+    want = np.asarray(ops.spmm_ref(a, jnp.asarray(b)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_spmm_linearity_property(seed):
+    """spmm(a, b1 + b2) == spmm(a, b1) + spmm(a, b2) (linearity invariant)."""
+    rng = np.random.default_rng(seed)
+    a = ops.bsr_from_dense(_rand_sparse(rng, 64, 128, 0.1), block_m=32)
+    b1 = rng.normal(size=(128, 128)).astype(np.float32)
+    b2 = rng.normal(size=(128, 128)).astype(np.float32)
+    s = np.asarray(ops.spmm(a, jnp.asarray(b1 + b2)))
+    s1 = np.asarray(ops.spmm(a, jnp.asarray(b1)))
+    s2 = np.asarray(ops.spmm(a, jnp.asarray(b2)))
+    np.testing.assert_allclose(s, s1 + s2, rtol=1e-4, atol=1e-3)
