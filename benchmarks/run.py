@@ -34,6 +34,7 @@ def main() -> None:
         ("fig12", "benchmarks.fig12_finetune_samples"),
         ("table2", "benchmarks.table2_dce"),
         ("kernel", "benchmarks.kernel_bench"),
+        ("bsr_preproc", "benchmarks.bsr_preproc"),
     ]
     only = set(sys.argv[1:])
     failures = []

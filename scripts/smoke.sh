@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Smoke check: the tier-1 suite plus the serving example, so the
+# pattern -> tuned-kernel fast path (format conversion, autotune cache,
+# Pallas SpMM) can't silently rot. Run from the repo root:
+#   bash scripts/smoke.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== MoE kernel serving example =="
+python examples/moe_kernel_serving.py
+
+echo "== bsr_preproc benchmark =="
+python -m benchmarks.run bsr_preproc
+
+echo "smoke OK"

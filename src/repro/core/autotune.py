@@ -7,10 +7,20 @@ run with?". ``KernelAutotuner`` specializes it to the Pallas BSR kernels in
 dispatch mask or a block-sparse attention mask) and returns kernel tile
 parameters, falling back to a deterministic heuristic when no trained model
 is available — so the LM stack can always call it.
+
+Serving fast path: the query loop (featurize -> score -> build BSR) is
+amortized two ways.  ``Autotuner.scores_batch``/``best_configs_batch`` stack
+density pyramids and push a whole batch of matrices through the jitted
+embed/score in one dispatch.  ``KernelAutotuner.get`` keys an LRU cache on a
+digest of (rows, cols, shape): a repeated pattern is served its tuned config
+*and* its prebuilt ``BsrPlan`` without re-featurizing, so per-request work
+collapses to one O(nnz) value scatter.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+from collections import OrderedDict
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +32,48 @@ from repro.core.search import topk_exhaustive
 from repro.data.features import density_pyramid, matrix_stats
 from repro.data.matrices import SparseMatrix
 from repro.hw.platforms import get_platform
+from repro.kernels.format import BsrMatrix, BsrPlan, plan_from_coo
 
+__all__ = ["Autotuner", "KernelAutotuner", "AutotuneCache", "TunedKernel",
+           "pattern_digest", "matrix_digest", "cached_matrix_stats"]
+
+
+# ------------------------------------------------------------ pattern keying
+
+def pattern_digest(rows, cols, shape) -> str:
+    """Stable digest of a sparsity pattern (coordinates + logical shape)."""
+    h = hashlib.sha1()
+    h.update(np.asarray(shape, np.int64).tobytes())
+    h.update(np.ascontiguousarray(np.asarray(rows, np.int64)).tobytes())
+    h.update(np.ascontiguousarray(np.asarray(cols, np.int64)).tobytes())
+    return h.hexdigest()
+
+
+def matrix_digest(mat: SparseMatrix) -> str:
+    return pattern_digest(mat.rows, mat.cols, (mat.n_rows, mat.n_cols))
+
+
+_STATS_MEMO: OrderedDict = OrderedDict()
+_STATS_MEMO_MAX = 256
+
+
+def cached_matrix_stats(mat: SparseMatrix, digest: str | None = None) -> np.ndarray:
+    """``matrix_stats`` memoized on the pattern digest — ``Autotuner.tune``
+    and ``KernelAutotuner.heuristic`` share one featurization per pattern.
+    Pass ``digest`` when already computed to skip re-hashing the pattern."""
+    key = digest or matrix_digest(mat)
+    hit = _STATS_MEMO.get(key)
+    if hit is not None:
+        _STATS_MEMO.move_to_end(key)
+        return hit
+    stats = matrix_stats(mat)
+    _STATS_MEMO[key] = stats
+    while len(_STATS_MEMO) > _STATS_MEMO_MAX:
+        _STATS_MEMO.popitem(last=False)
+    return stats
+
+
+# ------------------------------------------------------------ learned tuner
 
 @dataclasses.dataclass
 class Autotuner:
@@ -43,26 +94,92 @@ class Autotuner:
             lambda sm, hom, z: score_configs(self.params, self.model_cfg,
                                              sm, hom, z))
 
-    def scores(self, mat: SparseMatrix) -> np.ndarray:
-        pyr = density_pyramid(mat, self.resolution)[None]
+    def scores_batch(self, mats: list[SparseMatrix]) -> np.ndarray:
+        """(B, n_configs) predicted costs for a batch of matrices — one
+        jitted embed + one jitted score dispatch for the whole batch."""
+        pyr = np.stack([density_pyramid(m, self.resolution) for m in mats])
         sm = self._emb(jnp.asarray(pyr))
-        hom = jnp.asarray(self.space.homogeneous(mat.n_cols))[None]
-        return np.asarray(self._score(sm, hom, self._z[None])[0])
+        hom = jnp.asarray(np.stack([self.space.homogeneous(m.n_cols)
+                                    for m in mats]))
+        z = jnp.broadcast_to(self._z[None], (len(mats),) + self._z.shape)
+        return np.asarray(self._score(sm, hom, z))
 
-    def best_configs(self, mat: SparseMatrix, k: int = 5) -> list[dict]:
-        idx = topk_exhaustive(self.scores(mat), k=k)
+    def scores(self, mat: SparseMatrix) -> np.ndarray:
+        return self.scores_batch([mat])[0]
+
+    def _configs_from_scores(self, scores: np.ndarray, k: int) -> list[dict]:
+        idx = topk_exhaustive(scores, k=k)
         return [{name: self.space.params[name][i].item()
                  for name in self.space.params} | {"index": int(i)}
                 for i in idx]
+
+    def best_configs(self, mat: SparseMatrix, k: int = 5) -> list[dict]:
+        return self._configs_from_scores(self.scores(mat), k)
+
+    def best_configs_batch(self, mats: list[SparseMatrix],
+                           k: int = 5) -> list[list[dict]]:
+        return [self._configs_from_scores(s, k) for s in self.scores_batch(mats)]
 
     def tune(self, mat: SparseMatrix, k: int = 5) -> dict:
         """Top-k predict, then measure the k candidates and keep the best —
         exactly the paper's deployment loop (k target executions)."""
         cands = self.best_configs(mat, k=k)
-        stats = matrix_stats(mat)
+        stats = cached_matrix_stats(mat)
         rts = self.platform.runtime(stats, self.op, n_cols=mat.n_cols)
         best = min(cands, key=lambda c: rts[c["index"]])
         return best | {"runtime_ms": float(rts[best["index"]])}
+
+
+# ------------------------------------------------------------- kernel tuner
+
+@dataclasses.dataclass
+class TunedKernel:
+    """One autotune-cache entry: everything a serving loop needs to launch a
+    tuned kernel for a known pattern with fresh values."""
+    digest: str
+    op: str
+    config: dict            # kwargs for repro.kernels.ops.spmm / sddmm
+    plan: BsrPlan           # structure-only BSR conversion (reusable)
+    hits: int = 0
+
+    def build(self, values, dtype=jnp.float32, reuse: bool = False) -> BsrMatrix:
+        """O(nnz) value scatter through the cached plan -> BsrMatrix.
+
+        ``reuse=True`` scatters into plan-owned storage (the result aliases
+        it and is valid until the next reusing build) — the per-request cost
+        for a cached pattern collapses to one warm fancy-indexed write."""
+        return self.plan.build(values, dtype, reuse=reuse)
+
+
+class AutotuneCache:
+    """Pattern-keyed LRU of ``TunedKernel`` entries."""
+
+    def __init__(self, maxsize: int = 128):
+        self.maxsize = maxsize
+        self._entries: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self):
+        return len(self._entries)
+
+    def get(self, key) -> TunedKernel | None:
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        entry.hits += 1
+        return entry
+
+    def put(self, key, entry: TunedKernel) -> None:
+        if self.maxsize <= 0:
+            return
+        self._entries[key] = entry
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
 
 
 class KernelAutotuner:
@@ -72,33 +189,54 @@ class KernelAutotuner:
     the transfer-learned cost model; otherwise a deterministic structural
     heuristic keyed on the block-fill curve is used. Returns kwargs for
     ``repro.kernels.ops.spmm`` / ``sddmm``.
+
+    ``get`` is the cached serving entry point; ``featurize_calls`` counts how
+    many times a pattern was actually featurized+scored (cache misses).
     """
 
-    def __init__(self, tuner: Autotuner | None = None):
+    def __init__(self, tuner: Autotuner | None = None, cache_size: int = 128):
         self.tuner = tuner
+        self.cache = AutotuneCache(cache_size)
+        self.featurize_calls = 0
 
-    def select(self, mat: SparseMatrix, op: str = "spmm") -> dict:
+    def select(self, mat: SparseMatrix, op: str = "spmm",
+               digest: str | None = None) -> dict:
+        self.featurize_calls += 1
         if self.tuner is not None and self.tuner.op == op:
             cfg = self.tuner.best_configs(mat, k=1)[0]
             return {"block_m": int(cfg["bm"]), "block_n": int(cfg["bn"]),
                     "n_major": bool(cfg["n_major"])}
-        return self.heuristic(mat)
+        return self.heuristic(mat, digest=digest)
+
+    def get(self, mat: SparseMatrix, op: str = "spmm") -> TunedKernel:
+        """Cached pattern -> (config, BsrPlan). A repeated pattern is served
+        without re-featurizing or re-sorting its coordinates."""
+        digest = matrix_digest(mat)
+        entry = self.cache.get((op, digest))
+        if entry is None:
+            config = self.select(mat, op, digest=digest)
+            plan = plan_from_coo(mat.rows, mat.cols,
+                                 (mat.n_rows, mat.n_cols),
+                                 block_m=config["block_m"],
+                                 assume_unique=True)   # SparseMatrix invariant
+            entry = TunedKernel(digest, op, config, plan)
+            self.cache.put((op, digest), entry)
+        return entry
 
     @staticmethod
-    def heuristic(mat: SparseMatrix) -> dict:
+    def heuristic(mat: SparseMatrix, digest: str | None = None) -> dict:
         """Pick the block height whose padded-work x step-count product is
         minimal under the measured fill curve (same physics as the platform
         model; used when no learned model is available)."""
-        stats = matrix_stats(mat)
+        stats = cached_matrix_stats(mat, digest=digest)
         from repro.data.features import STAT_NAMES
         s = dict(zip(STAT_NAMES, stats))
         fills = {8: s["block8_fill"] * 8, 32: s["block32_fill"] * 32,
                  128: s["block128_fill"] * 128}
         best_bm, best_cost = 32, float("inf")
         for bm in (8, 16, 32, 64, 128):
-            import numpy as _np
-            lb = _np.log2(_np.sqrt(bm * 128))
-            f = _np.interp(lb, [3, 5, 7], [fills[8], fills[32], fills[128]])
+            lb = np.log2(np.sqrt(bm * 128))
+            f = np.interp(lb, [3, 5, 7], [fills[8], fills[32], fills[128]])
             touched = max(mat.nnz / max(f, 1.0), 1.0)
             cost = touched * bm * 128 + touched * 3e3   # padded work + steps
             if cost < best_cost:

@@ -1,5 +1,7 @@
 # Pallas TPU kernels for the sparse tensor programs the paper optimizes
 # (SpMM, SDDMM) in block-sparse (BSR) form, validated in interpret mode
-# against the pure-jnp oracles in ref.py.
-from repro.kernels.ops import (BsrMatrix, bsr_from_dense, bsr_from_coo,
-                               spmm, sddmm, spmm_ref, sddmm_ref)
+# against the pure-jnp oracles in ref.py. Format conversion (vectorized
+# O(nnz) COO/dense/block-coordinate -> BSR) lives in format.py.
+from repro.kernels.format import (BsrMatrix, BsrPlan, bsr_from_blocks,
+                                  bsr_from_coo, bsr_from_dense, plan_from_coo)
+from repro.kernels.ops import spmm, sddmm, spmm_ref, sddmm_ref

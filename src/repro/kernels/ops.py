@@ -5,78 +5,19 @@
 with tile parameters supplied by the caller — typically from
 ``repro.core.autotune.KernelAutotuner`` (the paper's technique driving real
 kernel configuration).
+
+``BsrMatrix`` and the constructors live in ``repro.kernels.format`` (the
+vectorized O(nnz) path); they are re-exported here for compatibility.
 """
 from __future__ import annotations
 
-import dataclasses
-
-import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.kernels.format import (BsrMatrix, BsrPlan, bsr_from_blocks,
+                                  bsr_from_coo, bsr_from_dense, plan_from_coo)
 from repro.kernels.sddmm import BW, sddmm_pallas
 from repro.kernels.spmm import BK, spmm_pallas
 from repro.kernels import ref
-
-
-@dataclasses.dataclass
-class BsrMatrix:
-    """Flattened BSR: blocks sorted by (block-row, block-col); every block-row
-    is represented (empty rows get one zero pad block), so the kernels' flush
-    predicate is exact."""
-    data: jnp.ndarray       # (nnzb, bm, BK)
-    rowids: jnp.ndarray     # (nnzb,) int32, sorted
-    colids: jnp.ndarray     # (nnzb,) int32
-    n_blockrows: int
-    n_blockcols: int
-
-    @property
-    def block_m(self) -> int:
-        return self.data.shape[1]
-
-    @property
-    def nnzb(self) -> int:
-        return self.data.shape[0]
-
-    @property
-    def shape(self):
-        return (self.n_blockrows * self.block_m, self.n_blockcols * BK)
-
-
-def bsr_from_dense(dense: np.ndarray, block_m: int = 32,
-                   dtype=jnp.float32) -> BsrMatrix:
-    """Convert a dense (M, K) array (zeros = absent) to flattened BSR.
-
-    M and K are zero-padded up to multiples of (block_m, 128).
-    """
-    m, k = dense.shape
-    pm, pk = (-m) % block_m, (-k) % BK
-    if pm or pk:
-        dense = np.pad(dense, ((0, pm), (0, pk)))
-    m, k = dense.shape
-    nbr, nbc = m // block_m, k // BK
-    blocks = dense.reshape(nbr, block_m, nbc, BK).transpose(0, 2, 1, 3)
-    nz = np.abs(blocks).sum(axis=(2, 3)) > 0
-    rowids, colids, data = [], [], []
-    for r in range(nbr):
-        cols = np.flatnonzero(nz[r])
-        if cols.size == 0:
-            cols = np.array([0])          # pad block keeps the row present
-        for c in cols:
-            rowids.append(r)
-            colids.append(c)
-            data.append(blocks[r, c])
-    return BsrMatrix(jnp.asarray(np.stack(data), dtype),
-                     jnp.asarray(rowids, jnp.int32),
-                     jnp.asarray(colids, jnp.int32), nbr, nbc)
-
-
-def bsr_from_coo(rows, cols, values, shape, block_m: int = 32,
-                 dtype=jnp.float32) -> BsrMatrix:
-    m, k = shape
-    dense = np.zeros((m, k), np.float32)
-    dense[rows, cols] = values
-    return bsr_from_dense(dense, block_m, dtype)
 
 
 def spmm(a: BsrMatrix, b, *, block_n: int = 128, n_major: bool = True,

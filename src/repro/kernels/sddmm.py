@@ -17,6 +17,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 BW = 128  # pattern block width (lane dimension)
 
 
@@ -64,6 +68,6 @@ def sddmm_pallas(mask_data, rowids, colids, b, c, *, block_k: int = 128,
     return pl.pallas_call(
         kernel, grid_spec=grid_spec, out_shape=out_shape,
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("arbitrary", "arbitrary")),
     )(rowids, colids, mask_data, b, c)

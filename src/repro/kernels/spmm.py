@@ -22,6 +22,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 BK = 128  # fixed sparse-block width (TPU lane dimension)
 
 
@@ -116,6 +120,6 @@ def spmm_pallas(data, rowids, colids, b, *, n_blockrows: int,
     return pl.pallas_call(
         kernel, grid_spec=grid_spec, out_shape=out_shape,
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("arbitrary", "arbitrary")),
     )(rowids, colids, data, b)

@@ -132,3 +132,14 @@ def test_autotuner_api():
     kt = KernelAutotuner()
     cfg = kt.select(mat)
     assert cfg["block_m"] in (8, 16, 32, 64, 128)
+    # batched scoring is one jitted dispatch and matches per-matrix calls
+    mats = [mat, generate_matrix("uniform", seed=7, n_rows=256, n_cols=256),
+            generate_matrix("powerlaw", seed=8, n_rows=512, n_cols=384)]
+    batched = tuner.scores_batch(mats)
+    assert batched.shape == (3, tuner.space.n_configs)
+    for i, m in enumerate(mats):
+        np.testing.assert_allclose(batched[i], tuner.scores(m),
+                                   rtol=1e-5, atol=1e-5)
+    cands_b = tuner.best_configs_batch(mats, k=3)
+    assert len(cands_b) == 3
+    assert cands_b[0] == tuner.best_configs(mats[0], k=3)

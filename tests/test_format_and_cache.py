@@ -1,0 +1,209 @@
+"""Equivalence tests for the vectorized BSR fast path + autotune cache.
+
+The vectorized ``bsr_from_coo``/``bsr_from_dense`` must produce bit-identical
+``(data, rowids, colids)`` to the seed dense-roundtrip implementation
+(reproduced verbatim below as the oracle), including empty block-rows,
+duplicate COO entries (last-write-wins), explicit zero values, and shapes
+that are not multiples of the block size.  Cached autotune results must match
+uncached ones and must not re-featurize on a hit.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from _compat import given, settings, st
+
+from repro.core.autotune import (AutotuneCache, KernelAutotuner,
+                                 matrix_digest, pattern_digest)
+from repro.data import generate_matrix
+from repro.data.matrices import SparseMatrix
+from repro.kernels.format import (_dense_roundtrip_reference, bsr_from_blocks,
+                                  bsr_from_coo, bsr_from_dense, plan_from_coo)
+
+
+def _assert_matches_oracle(bsr, dense, block_m):
+    data, rowids, colids, nbr, nbc = _dense_roundtrip_reference(dense, block_m)
+    np.testing.assert_array_equal(np.asarray(bsr.data), data)
+    np.testing.assert_array_equal(np.asarray(bsr.rowids), rowids)
+    np.testing.assert_array_equal(np.asarray(bsr.colids), colids)
+    assert (bsr.n_blockrows, bsr.n_blockcols) == (nbr, nbc)
+
+
+# ----------------------------------------------------------- equivalence
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       m=st.integers(1, 300), k=st.integers(1, 500),
+       block_m=st.sampled_from([8, 16, 32, 64]),
+       nnz=st.integers(0, 2000))
+def test_coo_equivalence_property(seed, m, k, block_m, nnz):
+    """Random COO (duplicates + explicit zeros + ragged shapes) matches the
+    dense-roundtrip oracle bit for bit."""
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, m, nnz)
+    cols = rng.integers(0, k, nnz)
+    values = rng.normal(size=nnz).astype(np.float32)
+    values[rng.random(nnz) < 0.15] = 0.0
+    dense = np.zeros((m, k), np.float32)
+    dense[rows, cols] = values
+    a = bsr_from_coo(rows, cols, values, (m, k), block_m=block_m)
+    _assert_matches_oracle(a, dense, block_m)
+    b = bsr_from_dense(dense, block_m=block_m)
+    _assert_matches_oracle(b, dense, block_m)
+
+
+def test_empty_rows_get_pad_blocks():
+    rows = np.array([2, 3])
+    cols = np.array([0, 400])
+    a = bsr_from_coo(rows, cols, np.ones(2, np.float32), (200, 512),
+                     block_m=32)
+    # 7 block-rows (200 -> 224 padded), all represented
+    assert a.n_blockrows == 7
+    assert set(np.asarray(a.rowids).tolist()) == set(range(7))
+    dense = np.zeros((200, 512), np.float32)
+    dense[rows, cols] = 1.0
+    _assert_matches_oracle(a, dense, 32)
+
+
+def test_duplicates_last_write_wins():
+    rows = np.array([5, 5, 5])
+    cols = np.array([7, 7, 7])
+    vals = np.array([1.0, 2.0, 3.0], np.float32)
+    a = bsr_from_coo(rows, cols, vals, (64, 128), block_m=32)
+    assert np.asarray(a.data)[0, 5, 7] == 3.0
+
+
+def test_explicit_zero_values_do_not_create_blocks():
+    rows = np.array([0, 40])
+    cols = np.array([0, 0])
+    vals = np.array([0.0, 1.0], np.float32)
+    a = bsr_from_coo(rows, cols, vals, (64, 128), block_m=32)
+    dense = np.zeros((64, 128), np.float32)
+    dense[rows, cols] = vals
+    _assert_matches_oracle(a, dense, 32)   # block-row 0 is a zero pad block
+    assert float(np.abs(np.asarray(a.data)[0]).sum()) == 0.0
+
+
+def test_all_empty_pattern():
+    a = bsr_from_coo(np.array([], np.int32), np.array([], np.int32),
+                     np.array([], np.float32), (100, 100), block_m=32)
+    _assert_matches_oracle(a, np.zeros((100, 100), np.float32), 32)
+
+
+def test_out_of_range_raises():
+    with pytest.raises(ValueError):
+        bsr_from_coo(np.array([100]), np.array([0]), np.ones(1),
+                     (100, 128), block_m=32)
+
+
+def test_large_grid_sort_fallback():
+    """Huge logical shape forces the sort-based assembly path."""
+    rng = np.random.default_rng(0)
+    m = k = 300_000
+    rows = rng.integers(0, m, 300)
+    cols = rng.integers(0, k, 300)
+    plan = plan_from_coo(rows, cols, (m, k), block_m=32)
+    assert plan.n_blockrows * plan.n_blockcols > 1 << 22
+    a = plan.build(np.ones(300, np.float32))
+    key = (np.asarray(a.rowids).astype(np.int64) * plan.n_blockcols
+           + np.asarray(a.colids))
+    assert np.all(np.diff(key) > 0)                      # sorted, unique
+    assert set(np.asarray(a.rowids).tolist()) == set(range(plan.n_blockrows))
+
+
+def test_plan_reuse_and_take_indices():
+    """A plan built once serves fresh values; reuse=True overwrites in
+    place; last-write-wins maps through ``take``."""
+    rows = np.array([0, 5, 5, 40, 0])
+    cols = np.array([0, 200, 200, 3, 0])
+    plan = plan_from_coo(rows, cols, (64, 256), block_m=32)
+    v1 = np.array([1., 2., 3., 4., 5.], np.float32)
+    m1 = plan.build(v1)
+    d1 = np.asarray(m1.data)
+    assert d1[np.asarray(m1.rowids) == 0][0][0, 0] == 5.0    # last dup wins
+    m2 = plan.build(2 * v1, reuse=True)
+    m3 = plan.build(3 * v1, reuse=True)
+    assert np.asarray(m3.data)[np.asarray(m3.rowids) == 0][0][0, 0] == 15.0
+
+
+def test_bsr_from_blocks_matches_coo():
+    """Block-coordinate construction == element-level construction."""
+    rng = np.random.default_rng(3)
+    bm, E, T = 32, 4, 128
+    pairs_t = np.repeat(np.arange(T), 2)
+    pairs_e = np.stack([rng.permutation(E)[:2] for _ in range(T)]).reshape(-1)
+    x = rng.normal(size=(T, 128)).astype(np.float32)
+    # element level
+    rows = np.repeat(pairs_t, 128).astype(np.int32)
+    cols = (pairs_e[:, None] * 128 + np.arange(128)).reshape(-1)
+    vals = x[pairs_t].reshape(-1)
+    a = bsr_from_coo(rows, cols, vals, (T, E * 128), block_m=bm)
+    # block level
+    bkey = (pairs_t // bm) * E + pairs_e
+    ub, inv = np.unique(bkey, return_inverse=True)
+    blocks = np.zeros((ub.size, bm, 128), np.float32)
+    blocks[inv, pairs_t % bm, :] = x[pairs_t]
+    b = bsr_from_blocks(ub // E, ub % E, blocks, T // bm, E)
+    np.testing.assert_array_equal(np.asarray(a.data), np.asarray(b.data))
+    np.testing.assert_array_equal(np.asarray(a.rowids), np.asarray(b.rowids))
+    np.testing.assert_array_equal(np.asarray(a.colids), np.asarray(b.colids))
+
+
+def test_bsr_from_blocks_rejects_duplicates():
+    blocks = np.zeros((2, 32, 128), np.float32)
+    with pytest.raises(ValueError):
+        bsr_from_blocks([0, 0], [1, 1], blocks, 2, 2)
+
+
+# -------------------------------------------------------- autotune cache
+
+def test_cached_config_matches_uncached():
+    for fam in ("banded", "uniform", "blockdiag"):
+        mat = generate_matrix(fam, seed=5, n_rows=512, n_cols=512,
+                              target_nnz=6000)
+        fresh = KernelAutotuner().heuristic(mat)
+        cached = KernelAutotuner().get(mat).config
+        assert fresh == cached
+
+
+def test_cache_hit_skips_featurization():
+    mat = generate_matrix("powerlaw", seed=9, n_rows=512, n_cols=512,
+                          target_nnz=5000)
+    kt = KernelAutotuner()
+    e1 = kt.get(mat)
+    e2 = kt.get(mat)
+    assert e1 is e2
+    assert kt.featurize_calls == 1
+    assert kt.cache.hits == 1 and kt.cache.misses == 1
+    # the cached plan produces the same matrix as a fresh conversion
+    vals = np.ones(mat.nnz, np.float32)
+    a = e2.build(vals)
+    b = plan_from_coo(mat.rows, mat.cols, (mat.n_rows, mat.n_cols),
+                      block_m=e2.config["block_m"]).build(vals)
+    np.testing.assert_array_equal(np.asarray(a.data), np.asarray(b.data))
+
+
+def test_cache_lru_eviction():
+    cache = AutotuneCache(maxsize=2)
+    for i in range(3):
+        mat = generate_matrix("uniform", seed=i, n_rows=256, n_cols=256,
+                              target_nnz=1000)
+        cache.put(("spmm", matrix_digest(mat)), object())
+    assert len(cache) == 2
+
+
+def test_pattern_digest_sensitivity():
+    r = np.array([0, 1]); c = np.array([2, 3])
+    base = pattern_digest(r, c, (10, 10))
+    assert pattern_digest(r, c, (10, 11)) != base        # shape matters
+    assert pattern_digest(c, r, (10, 10)) != base        # coords matter
+    assert pattern_digest(r.astype(np.int32), c, (10, 10)) == base  # dtype no
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       family=st.sampled_from(["uniform", "banded", "blockdiag", "powerlaw"]))
+def test_cache_equivalence_property(seed, family):
+    """Cache round-trips any generated pattern to the uncached config."""
+    mat = generate_matrix(family, seed=seed, n_rows=384, n_cols=384,
+                          target_nnz=3000)
+    assert KernelAutotuner().get(mat).config == KernelAutotuner.heuristic(mat)

@@ -2,7 +2,7 @@
 functions, and the analytical platform models (+ hypothesis invariants)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _compat import given, settings, st
 
 from repro.data import generate_matrix, density_pyramid, matrix_stats, FAMILIES
 from repro.data.features import STAT_NAMES

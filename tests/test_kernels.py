@@ -3,7 +3,7 @@ all against the pure-jnp oracles in repro.kernels.ref (interpret mode)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _compat import given, settings, st
 
 from repro.kernels import ops
 
