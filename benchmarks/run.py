@@ -35,6 +35,7 @@ def main() -> None:
         ("table2", "benchmarks.table2_dce"),
         ("kernel", "benchmarks.kernel_bench"),
         ("bsr_preproc", "benchmarks.bsr_preproc"),
+        ("serving", "benchmarks.serving_engine"),
     ]
     only = set(sys.argv[1:])
     failures = []

@@ -1,0 +1,209 @@
+"""Serving-engine benchmark (ours): batched tuning + steady-state serving.
+
+Measures what ``repro.serving`` buys over the PR-1 one-pattern-at-a-time
+loop:
+
+* **Batched-miss path** — a 32-request cold batch tuned via one
+  ``KernelAutotuner.get_batch`` (a single jitted cost-model embed+score
+  dispatch for all misses) vs 32 sequential ``KernelAutotuner.get`` calls.
+  Both paths use the same learned ``Autotuner`` (randomly initialized
+  tpu_pallas cost model — prediction quality is irrelevant to the dispatch
+  cost being measured) with jits warmed, so the measured gap is the
+  amortization, not compilation.  Acceptance bar: >= 3x.
+* **Traffic mixes** — steady-state requests/sec and per-step p50/p99 latency
+  through the full engine (partition -> batched score -> arena build) on
+  three mixes: ``repeated`` (one hot 32-pattern working set served every
+  step — hot LRU, pure slot rotation), ``shifting`` (the working set slides
+  4 patterns per step), and ``cold`` (every pattern new — pure miss
+  traffic).
+* **Warm start** — the populated cache round-trips through
+  ``repro.serving.persist``; a restarted engine serves the repeated mix with
+  zero featurizations (asserted via ``featurize_calls``).
+
+``python benchmarks/serving_engine.py --quick`` runs a reduced protocol for
+smoke checks; ``python -m benchmarks.run serving`` runs the full one.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+if __package__ in (None, ""):   # `python benchmarks/serving_engine.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks import common
+from repro.core.autotune import Autotuner, KernelAutotuner
+from repro.core.cognate import CostModelConfig, init_cost_model
+from repro.core.latent import zero_codec
+from repro.data import generate_matrix
+from repro.serving import KernelRequest, SparseKernelEngine
+
+FAMILIES = ("uniform", "banded", "powerlaw", "blockdiag")
+
+
+def _make_tuner(resolution: int = 8) -> Autotuner:
+    """A learned tpu_pallas Autotuner with randomly initialized weights —
+    the dispatch/batching economics of scoring are identical to a trained
+    model's, without paying for training in a benchmark.  Sized small
+    (ch_scale 0.125, res 8) so per-call dispatch overhead — the cost batching
+    removes — dominates over raw conv FLOPs, which on this 1-core container
+    do not amortize with batch size (on a real accelerator they would: one
+    kernel launch for the whole batch)."""
+    cfg = CostModelConfig(ch_scale=0.125)
+    params = init_cost_model(jax.random.PRNGKey(0), cfg)
+    return Autotuner("tpu_pallas", "spmm", params, cfg, zero_codec(),
+                     resolution=resolution)
+
+
+def _warm_buckets(tuner, pool, up_to: int):
+    """Compile every power-of-two scoring shape once, outside timed loops."""
+    b = 1
+    while b <= up_to:
+        tuner.scores_batch(pool[:b])
+        b *= 2
+
+
+def _matrices(n, seed0=0, n_rows=512, nnz=4000):
+    return [generate_matrix(FAMILIES[i % len(FAMILIES)], seed=seed0 + i,
+                            n_rows=n_rows, n_cols=n_rows, target_nnz=nnz)
+            for i in range(n)]
+
+
+def _bench_cold_batch(rows, batch: int, reps: int):
+    """Sequential ``get`` loop vs one ``get_batch`` on a cold batch."""
+    tuner = _make_tuner()
+    warm = _matrices(batch, seed0=10_000)
+    _warm_buckets(tuner, warm, batch)               # compile scoring shapes
+
+    # best-of-reps on one fixed matrix set: each rep is a fresh (cold)
+    # KernelAutotuner, so both paths re-tune every pattern every rep
+    mats = _matrices(batch, seed0=20_000)
+    t_seq = t_bat = float("inf")
+    for _ in range(reps):
+        kt = KernelAutotuner(tuner)
+        t0 = time.perf_counter()
+        seq_entries = [kt.get(m) for m in mats]
+        t_seq = min(t_seq, time.perf_counter() - t0)
+
+        kt2 = KernelAutotuner(tuner)
+        t0 = time.perf_counter()
+        bat_entries = kt2.get_batch(mats)
+        t_bat = min(t_bat, time.perf_counter() - t0)
+        same = all(a.config == b.config
+                   for a, b in zip(seq_entries, bat_entries))
+        assert kt2.featurize_calls == batch
+    speedup = t_seq / t_bat
+    rows.append((f"serving/cold{batch}/sequential_ms", f"{t_seq * 1e3:.1f}",
+                 "", f"{batch} x KernelAutotuner.get"))
+    rows.append((f"serving/cold{batch}/batched_ms", f"{t_bat * 1e3:.1f}", "",
+                 f"one get_batch dispatch speedup={speedup:.1f}x "
+                 f"configs_match={same} (bar: >=3x)"))
+    return speedup
+
+
+def _traffic(mix: str, n_steps: int, batch: int):
+    """Per-step pattern indices.  Patterns within a micro-batch are distinct
+    (one request per layer/expert/mask); repetition happens *across* steps —
+    the double-buffered steady state the arena is built for."""
+    for step in range(n_steps):
+        if mix == "repeated":          # one hot working set, every step
+            yield [j for j in range(batch)]
+        elif mix == "shifting":        # working set slides 4 patterns/step
+            yield [step * 4 + j for j in range(batch)]
+        elif mix == "cold":            # every pattern brand new
+            yield [step * batch + j for j in range(batch)]
+        else:
+            raise ValueError(mix)
+
+
+def _values_for(pool):
+    rng = np.random.default_rng(1)
+    return {i: rng.normal(size=pool[i].nnz).astype(np.float32)
+            for i in range(len(pool))}
+
+
+def _bench_mix(rows, mix: str, tuner, n_steps: int, batch: int, pool):
+    engine = SparseKernelEngine(KernelAutotuner(tuner, cache_size=256))
+    values = _values_for(pool)
+    t0 = time.perf_counter()
+    for idxs in _traffic(mix, n_steps, batch):
+        engine.step([KernelRequest(pool[i], values[i]) for i in idxs])
+    elapsed = time.perf_counter() - t0
+    engine.flush()
+    s = engine.stats()
+
+    # the PR-1 shape on identical traffic: one get + reuse-build per request,
+    # no batched scoring, no arena, no telemetry
+    kt = KernelAutotuner(tuner, cache_size=256)
+    t0 = time.perf_counter()
+    n = 0
+    for idxs in _traffic(mix, n_steps, batch):
+        for i in idxs:
+            kt.get(pool[i]).build(values[i], reuse=True)
+            n += 1
+    t_base = time.perf_counter() - t0
+
+    step_h = s["stages"]["step"]
+    rows.append((
+        f"serving/{mix}/engine_requests_per_s",
+        f"{s['requests'] / elapsed:.0f}", "",
+        f"hit_rate={s['hit_rate']:.2f} p50={step_h['p50_ms']:.2f}ms "
+        f"p99={step_h['p99_ms']:.2f}ms featurize={s['featurize_calls']} "
+        f"fallbacks={s['arena_fallbacks']}"))
+    rows.append((
+        f"serving/{mix}/pr1_loop_requests_per_s", f"{n / t_base:.0f}", "",
+        f"sequential get + reuse build; engine speedup="
+        f"{t_base / elapsed:.2f}x"))
+    return s
+
+
+def _bench_warm_start(rows, tuner, pool, batch: int):
+    path = os.path.join(tempfile.mkdtemp(prefix="serving_bench_"),
+                        "autotune_cache.npz")
+    engine = SparseKernelEngine(KernelAutotuner(tuner, cache_size=256),
+                                persist_path=path)
+    engine.step([KernelRequest(pool[i]) for i in range(batch)])
+    engine.flush()
+    engine.save()
+    t0 = time.perf_counter()
+    engine2 = SparseKernelEngine(KernelAutotuner(tuner, cache_size=256),
+                                 persist_path=path)
+    t_load = time.perf_counter() - t0
+    engine2.step([KernelRequest(pool[i]) for i in range(batch)])
+    engine2.flush()
+    s = engine2.stats()
+    zero_featurize = s["featurize_calls"] == 0
+    rows.append(("serving/warm_start/restore_ms", f"{t_load * 1e3:.1f}", "",
+                 f"{s['warm_start_entries']} entries; repeat traffic "
+                 f"featurize_calls={s['featurize_calls']} "
+                 f"zero_featurize={zero_featurize}"))
+    assert zero_featurize, "warm-started engine re-featurized known traffic"
+
+
+def run(quick: bool = False):
+    rows = []
+    batch = 32
+    n_steps = 10 if quick else 40
+    reps = 4 if quick else 8
+
+    speedup = _bench_cold_batch(rows, batch=batch, reps=reps)
+
+    tuner = _make_tuner()
+    pool = _matrices(n_steps * batch + batch, seed0=0)
+    _warm_buckets(tuner, pool, batch)   # compile shapes outside timed loops
+    for mix in ("repeated", "shifting", "cold"):
+        _bench_mix(rows, mix, tuner, n_steps, batch, pool)
+    _bench_warm_start(rows, tuner, pool, batch)
+    common.emit(rows)
+    if speedup < 3.0:
+        print(f"# WARNING: batched-miss speedup {speedup:.1f}x below 3x bar")
+
+
+if __name__ == "__main__":
+    run(quick="--quick" in sys.argv[1:])

@@ -1,27 +1,30 @@
-"""MoE dispatch as a block-sparse SpMM through the Pallas kernel, served via
-the COGNATE autotune cache — the paper's technique driving a real kernel
-inside the LM stack, on the O(nnz) fast path.
+"""MoE dispatch served through ``repro.serving.SparseKernelEngine`` — the
+COGNATE deployment loop as a batched, double-buffered, warm-startable
+serving runtime driving a real Pallas kernel.
 
-The token->expert dispatch pattern is built directly in BSR block
-coordinates: with d_model == 128 (the BSR lane width) every (token, routed
-expert) pair is exactly one (block_m x 128) block column, so we never
-materialize the dense (T, E*D) dispatch matrix and never loop over tokens in
-Python.  A multi-batch serving loop drives ``KernelAutotuner.get``: routing
-patterns repeat across batches (steady-state serving), so after the first
-sighting a pattern's featurization, tile config, and BSR construction plan
-all come from the pattern-keyed LRU cache and each request pays only one
-O(nnz) value scatter + the kernel launch.
+The token->expert dispatch pattern is built directly in element COO (with
+d_model == 128, the BSR lane width, every (token, routed expert) pair is one
+(block_m x 128) block column).  Each engine step serves a *micro-batch* of
+dispatch requests: routing patterns repeat across steps (steady-state
+serving), so after first sighting a pattern's featurization, tile config,
+and BSR construction plan all come from the pattern-keyed LRU — cache misses
+within a step are scored in ONE batched cost-model dispatch, and each
+request's value scatter lands in a double-buffered plan arena slot so the
+next batch's host-side build can overlap this batch's in-flight kernel.
+
+The run then persists the tuned cache and restarts the engine from disk:
+the warm-started engine serves the same traffic with ZERO featurizations.
 
 Run:  PYTHONPATH=src python examples/moe_kernel_serving.py
 """
-import time
+import os
+import tempfile
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.autotune import KernelAutotuner
 from repro.data.matrices import SparseMatrix
-from repro.kernels import bsr_from_blocks, spmm, spmm_ref
+from repro.serving import KernelRequest, SparseKernelEngine
 
 
 def route(rng, T, E, K):
@@ -44,84 +47,88 @@ def dispatch_pattern(topk, T, E, D):
     return SparseMatrix("dispatch", "moe", T, E * D, rows, cols)
 
 
-def build_dispatch_bsr(topk, x, block_m, T, E, D):
-    """BSR of the dispatch matrix straight from block coordinates.
+def make_request(topk, x, T, E, D, K, w_dev):
+    """One engine request: the routing pattern + this batch's activations.
 
-    One (block_m x D) block per (token-tile, expert) pair that any token in
-    the tile routes to; token t's activation lands in row t % block_m.
+    Plan entries follow the pattern's (row-major, column-sorted) element
+    order, where token t's K routed blocks each carry x[t] — so the aligned
+    values array is x tiled K times per token.
     """
-    K = topk.shape[1]
-    pairs_t = np.repeat(np.arange(T, dtype=np.int64), K)    # (T*K,)
-    pairs_e = topk.reshape(-1).astype(np.int64)
-    bkey = (pairs_t // block_m) * E + pairs_e
-    ublocks, inv = np.unique(bkey, return_inverse=True)
-    blocks = np.zeros((ublocks.size, block_m, D), np.float32)
-    blocks[inv, pairs_t % block_m, :] = x[pairs_t]
-    n_blockrows = (T + block_m - 1) // block_m
-    return bsr_from_blocks(ublocks // E, ublocks % E, blocks,
-                           n_blockrows=n_blockrows, n_blockcols=E)
+    mat = dispatch_pattern(topk, T, E, D)
+    values = np.repeat(x, K, axis=0).reshape(-1)
+    return mat, KernelRequest(mat, values, "spmm", w_dev)
 
 
 def main():
     rng = np.random.default_rng(0)
     T, D, E, K = 256, 128, 4, 2          # tokens, d_model(=BK), experts, top-k
     F = 64                               # expert output width
-    n_batches, n_routing_patterns = 8, 3  # patterns repeat across batches
+    n_steps, reqs_per_step = 6, 2        # micro-batched serving traffic
+    n_routing_patterns = 3               # patterns repeat across requests
 
     # expert weights stacked on the contraction axis: (E*D, F)
     w = rng.normal(size=(E * D, F)).astype(np.float32) * 0.1
     w_dev = jnp.asarray(w)
     w_gathered = w.reshape(E, D, F)       # for the dense cross-check
 
-    tuner = KernelAutotuner()
+    cache_path = os.path.join(tempfile.mkdtemp(prefix="moe_serving_"),
+                              "autotune_cache.npz")
+    engine = SparseKernelEngine(persist_path=cache_path)
     routings = [route(np.random.default_rng(100 + i), T, E, K)
                 for i in range(n_routing_patterns)]
 
-    for step in range(n_batches):
-        topk = routings[step % n_routing_patterns]
-        x = rng.normal(size=(T, D)).astype(np.float32)
+    def serve(engine, label):
+        req_i = 0
+        for step in range(n_steps):
+            batch, xs, topks = [], [], []
+            for _ in range(reqs_per_step):
+                topk = routings[req_i % n_routing_patterns]
+                x = rng.normal(size=(T, D)).astype(np.float32)
+                _, req = make_request(topk, x, T, E, D, K, w_dev)
+                batch.append(req)
+                xs.append(x)
+                topks.append(topk)
+                req_i += 1
+            responses = engine.step(batch)
+            for resp, x, topk in zip(responses, xs, topks):
+                out = np.asarray(resp.output)
+                # dense cross-check without a (T, E*D) intermediate: gather
+                # each token's routed expert weights and contract directly.
+                want = np.einsum("td,tkdf->tf", x, w_gathered[topk])
+                err = np.abs(out[:T] - want).max()
+                assert err < 1e-3, err
+            marks = "".join("H" if r.cache_hit else "M" for r in responses)
+            cfg = responses[0].config
+            print(f"{label} step {step}: [{marks}] bm={cfg['block_m']} "
+                  f"nnzb={responses[0].matrix.nnzb} "
+                  f"arena={'/'.join('y' if r.arena_slot else 'n' for r in responses)}")
+        engine.flush()
 
-        # featurize-or-hit: config + BSR plan from the pattern-keyed cache
-        mat = dispatch_pattern(topk, T, E, D)
-        t0 = time.perf_counter()
-        entry = tuner.get(mat, op="spmm")
-        cfg = entry.config
-        # per-batch work: scatter this batch's activations through the plan.
-        # plan entries follow mat's (row-major, column-sorted) element order,
-        # where token t's K routed blocks each carry x[t] — so the aligned
-        # values array is x tiled K times per token.
-        values = np.repeat(x, K, axis=0).reshape(-1)
-        a = entry.build(values)
-        t_build = time.perf_counter() - t0
+    serve(engine, "cold")
+    s = engine.stats()
+    print(f"cold engine: {s['requests']} requests, hit_rate="
+          f"{s['hit_rate']:.2f}, featurize_calls={s['featurize_calls']}, "
+          f"score_dispatches={s['score_dispatches']}, "
+          f"step p50={s['stages']['step']['p50_ms']:.2f}ms "
+          f"p99={s['stages']['step']['p99_ms']:.2f}ms")
+    assert s["featurize_calls"] == n_routing_patterns
+    assert s["misses"] == n_routing_patterns
+    assert s["hits"] == n_steps * reqs_per_step - n_routing_patterns
+    engine.save()
 
-        out = np.asarray(spmm(a, w_dev, block_n=cfg["block_n"],
-                              n_major=cfg["n_major"]))
-        want = np.asarray(spmm_ref(a, w_dev))
-        err = np.abs(out - want).max()
-
-        # dense cross-check without a (T, E*D) intermediate: gather each
-        # token's routed expert weights and contract directly.
-        dense_out = np.einsum("td,tkdf->tf", x, w_gathered[topk])
-        err2 = np.abs(out[:T] - dense_out).max()
-        hit = "hit " if entry.hits > 0 else "miss"
-        print(f"batch {step}: pattern={entry.digest[:8]} cache={hit} "
-              f"bm={cfg['block_m']} nnzb={a.nnzb} "
-              f"build={t_build * 1e3:.2f}ms maxerr={err:.2e}/{err2:.2e}")
-        assert err < 1e-4 and err2 < 1e-3
-
-        # the block-coordinate constructor produces the identical BsrMatrix
-        b = build_dispatch_bsr(topk, x, cfg["block_m"], T, E, D)
-        assert np.array_equal(np.asarray(a.data), np.asarray(b.data))
-        assert np.array_equal(np.asarray(a.rowids), np.asarray(b.rowids))
-        assert np.array_equal(np.asarray(a.colids), np.asarray(b.colids))
-
-    c = tuner.cache
-    print(f"served {n_batches} batches from {c.misses} featurizations "
-          f"({c.hits} cache hits, {len(c)} patterns resident)")
-    assert c.misses == n_routing_patterns
-    assert c.hits == n_batches - n_routing_patterns
-    assert tuner.featurize_calls == n_routing_patterns
-    print("MoE-dispatch-through-Pallas OK")
+    # restart: a warm-started engine re-serves known traffic with zero
+    # featurizations — the persisted (digest -> config + plan) map replaces
+    # re-tuning entirely.
+    engine2 = SparseKernelEngine(persist_path=cache_path)
+    serve(engine2, "warm")
+    s2 = engine2.stats()
+    print(f"warm engine: warm_start_entries={s2['warm_start_entries']}, "
+          f"featurize_calls={s2['featurize_calls']}, "
+          f"hit_rate={s2['hit_rate']:.2f}")
+    assert s2["warm_start_entries"] == n_routing_patterns
+    assert s2["featurize_calls"] == 0
+    assert s2["misses"] == 0
+    print("MoE-dispatch-through-serving-engine OK")
 
 
 if __name__ == "__main__":

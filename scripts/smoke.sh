@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
-# Smoke check: the tier-1 suite plus the serving example, so the
+# Smoke check: the tier-1 suite plus the serving stack, so the
 # pattern -> tuned-kernel fast path (format conversion, autotune cache,
-# Pallas SpMM) can't silently rot. Run from the repo root:
+# Pallas SpMM) and the serving engine (batched scoring, plan arena, cache
+# persistence) can't silently rot. Run from the repo root:
 #   bash scripts/smoke.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -11,10 +12,16 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
-echo "== MoE kernel serving example =="
+echo "== slow stress tests (persistence/arena/threading) =="
+python -m pytest -q -m slow
+
+echo "== MoE kernel serving example (engine-driven) =="
 python examples/moe_kernel_serving.py
 
 echo "== bsr_preproc benchmark =="
 python -m benchmarks.run bsr_preproc
+
+echo "== serving engine benchmark (quick) =="
+python benchmarks/serving_engine.py --quick
 
 echo "smoke OK"

@@ -20,13 +20,16 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 from collections import OrderedDict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cognate import CostModelConfig, matrix_embedding, score_configs
+from repro.core.cognate import (CostModelConfig, config_first_layer,
+                                matrix_embedding, score_configs,
+                                score_configs_from_parts)
 from repro.core.latent import LatentCodec
 from repro.core.search import topk_exhaustive
 from repro.data.features import density_pyramid, matrix_stats
@@ -35,17 +38,36 @@ from repro.hw.platforms import get_platform
 from repro.kernels.format import BsrMatrix, BsrPlan, plan_from_coo
 
 __all__ = ["Autotuner", "KernelAutotuner", "AutotuneCache", "TunedKernel",
-           "pattern_digest", "matrix_digest", "cached_matrix_stats"]
+           "StatsMemo", "pattern_digest", "matrix_digest",
+           "cached_matrix_stats"]
 
 
 # ------------------------------------------------------------ pattern keying
 
+_I32_MIN, _I32_MAX = np.iinfo(np.int32).min, np.iinfo(np.int32).max
+
+
+def _coord_bytes(a) -> bytes:
+    """Canonical byte view of a coordinate array: int32 when the values fit
+    (zero-copy for ``SparseMatrix``'s native int32 — no per-request int64
+    upcast), int64 only for coordinates that genuinely need it.  Same
+    coordinates hash identically whatever dtype the caller passes."""
+    a = np.ascontiguousarray(a)
+    if a.dtype == np.int32:
+        return a.tobytes()
+    if a.size == 0 or (_I32_MIN <= a.min() and a.max() <= _I32_MAX):
+        return a.astype(np.int32).tobytes()
+    return np.asarray(a, np.int64).tobytes()
+
+
 def pattern_digest(rows, cols, shape) -> str:
-    """Stable digest of a sparsity pattern (coordinates + logical shape)."""
+    """Stable digest of a sparsity pattern (coordinates + logical shape).
+    Dtype-insensitive: int32 and int64 views of the same coordinates digest
+    equal, and the int32 fast path hashes the array's own buffer."""
     h = hashlib.sha1()
     h.update(np.asarray(shape, np.int64).tobytes())
-    h.update(np.ascontiguousarray(np.asarray(rows, np.int64)).tobytes())
-    h.update(np.ascontiguousarray(np.asarray(cols, np.int64)).tobytes())
+    h.update(_coord_bytes(rows))
+    h.update(_coord_bytes(cols))
     return h.hexdigest()
 
 
@@ -53,24 +75,65 @@ def matrix_digest(mat: SparseMatrix) -> str:
     return pattern_digest(mat.rows, mat.cols, (mat.n_rows, mat.n_cols))
 
 
-_STATS_MEMO: OrderedDict = OrderedDict()
-_STATS_MEMO_MAX = 256
+class StatsMemo:
+    """Thread-safe LRU memo of ``matrix_stats`` vectors keyed by pattern
+    digest.  ``maxsize`` is adjustable at runtime (shrinking trims oldest
+    entries); ``clear()`` drops everything — long-lived serving processes can
+    bound or reset the footprint explicitly."""
+
+    def __init__(self, maxsize: int = 256):
+        self._maxsize = int(maxsize)
+        self._entries: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
+
+    def __len__(self):
+        with self._lock:
+            return len(self._entries)
+
+    @property
+    def maxsize(self) -> int:
+        return self._maxsize
+
+    @maxsize.setter
+    def maxsize(self, n: int) -> None:
+        with self._lock:
+            self._maxsize = int(n)
+            self._trim()
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+
+    def _trim(self) -> None:
+        while len(self._entries) > max(self._maxsize, 0):
+            self._entries.popitem(last=False)
+
+    def get_or_compute(self, mat: SparseMatrix,
+                       digest: str | None = None) -> np.ndarray:
+        key = digest or matrix_digest(mat)
+        with self._lock:
+            hit = self._entries.get(key)
+            if hit is not None:
+                self._entries.move_to_end(key)
+                return hit
+        stats = matrix_stats(mat)          # compute outside the lock
+        with self._lock:
+            self._entries[key] = stats
+            self._entries.move_to_end(key)
+            self._trim()
+        return stats
+
+
+_STATS_MEMO = StatsMemo(256)
 
 
 def cached_matrix_stats(mat: SparseMatrix, digest: str | None = None) -> np.ndarray:
     """``matrix_stats`` memoized on the pattern digest — ``Autotuner.tune``
     and ``KernelAutotuner.heuristic`` share one featurization per pattern.
-    Pass ``digest`` when already computed to skip re-hashing the pattern."""
-    key = digest or matrix_digest(mat)
-    hit = _STATS_MEMO.get(key)
-    if hit is not None:
-        _STATS_MEMO.move_to_end(key)
-        return hit
-    stats = matrix_stats(mat)
-    _STATS_MEMO[key] = stats
-    while len(_STATS_MEMO) > _STATS_MEMO_MAX:
-        _STATS_MEMO.popitem(last=False)
-    return stats
+    Pass ``digest`` when already computed to skip re-hashing the pattern.
+    The module-global memo is ``_STATS_MEMO`` (a ``StatsMemo``); use its
+    ``clear()``/``maxsize`` to manage the footprint."""
+    return _STATS_MEMO.get_or_compute(mat, digest)
 
 
 # ------------------------------------------------------------ learned tuner
@@ -88,21 +151,77 @@ class Autotuner:
         self.platform = get_platform(self.platform_name)
         self.space = self.platform.space
         self._z = jnp.asarray(self.codec.encode(self.space.heterogeneous()))
+        self._hom: OrderedDict = OrderedDict()   # n_cols -> homogeneous enc
+        self._cfg_parts: OrderedDict = OrderedDict()  # n_cols -> (G, H0)
         self._emb = jax.jit(
             lambda pyr: matrix_embedding(self.params, self.model_cfg, pyr))
         self._score = jax.jit(
             lambda sm, hom, z: score_configs(self.params, self.model_cfg,
                                              sm, hom, z))
+        # serving fast path (MLP predictor): the config-side half of the
+        # trunk's first layer is a pure function of n_cols — precompute it
+        # once per shape instead of per (matrix, config) per request
+        self._fast = self.model_cfg.predictor == "mlp"
+        self._cfg_first = jax.jit(
+            lambda hom, z: config_first_layer(self.params, self.model_cfg,
+                                              hom, z))
+        self._score_fast = jax.jit(
+            lambda sm, part: score_configs_from_parts(
+                self.params, self.model_cfg, sm, part))
+
+    def _homogeneous(self, n_cols: int) -> np.ndarray:
+        """``space.homogeneous`` memoized on ``n_cols`` — it re-encodes the
+        whole config space per call (~ms) but is a pure function of the
+        matrix's column count, which serving traffic repeats endlessly."""
+        h = self._hom.get(n_cols)
+        if h is None:
+            h = self.space.homogeneous(n_cols)
+            self._hom[n_cols] = h
+            while len(self._hom) > 64:
+                self._hom.popitem(last=False)
+        return h
+
+    def _config_part(self, n_cols: int):
+        """(G, H0) first-layer config contribution, memoized on n_cols."""
+        part = self._cfg_parts.get(n_cols)
+        if part is None:
+            hom = jnp.asarray(self._homogeneous(n_cols))[None]
+            part = self._cfg_first(hom, self._z[None])[0]
+            self._cfg_parts[n_cols] = part
+            while len(self._cfg_parts) > 64:
+                self._cfg_parts.popitem(last=False)
+        return part
 
     def scores_batch(self, mats: list[SparseMatrix]) -> np.ndarray:
         """(B, n_configs) predicted costs for a batch of matrices — one
-        jitted embed + one jitted score dispatch for the whole batch."""
-        pyr = np.stack([density_pyramid(m, self.resolution) for m in mats])
+        jitted embed + one jitted score dispatch for the whole batch.
+
+        The batch is padded (by repeating the last matrix) to the next
+        power-of-two bucket so a serving loop with varying miss counts
+        compiles at most log2(B_max) shapes instead of one per count."""
+        if not mats:
+            return np.zeros((0, self.space.n_configs), np.float32)
+        B = len(mats)
+        bucket = 1 << max(B - 1, 0).bit_length()
+        pyrs = [density_pyramid(m, self.resolution) for m in mats]
+        pyr = np.stack(pyrs + [pyrs[-1]] * (bucket - B))
         sm = self._emb(jnp.asarray(pyr))
-        hom = jnp.asarray(np.stack([self.space.homogeneous(m.n_cols)
-                                    for m in mats]))
-        z = jnp.broadcast_to(self._z[None], (len(mats),) + self._z.shape)
-        return np.asarray(self._score(sm, hom, z))
+        if self._fast:
+            cols = {m.n_cols for m in mats}
+            if len(cols) == 1:      # one shape: share a single (G, H0) part
+                part = self._config_part(cols.pop())
+            else:
+                part = jnp.stack([self._config_part(m.n_cols)
+                                  for m in mats]
+                                 + [self._config_part(mats[-1].n_cols)]
+                                 * (bucket - B))
+            return np.asarray(self._score_fast(sm, part))[:B]
+        hom = jnp.asarray(np.stack([self._homogeneous(m.n_cols)
+                                    for m in mats]
+                                   + [self._homogeneous(mats[-1].n_cols)]
+                                   * (bucket - B)))
+        z = jnp.broadcast_to(self._z[None], (bucket,) + self._z.shape)
+        return np.asarray(self._score(sm, hom, z))[:B]
 
     def scores(self, mat: SparseMatrix) -> np.ndarray:
         return self.scores_batch([mat])[0]
@@ -152,34 +271,56 @@ class TunedKernel:
 
 
 class AutotuneCache:
-    """Pattern-keyed LRU of ``TunedKernel`` entries."""
+    """Pattern-keyed LRU of ``TunedKernel`` entries.
+
+    All operations (including the hit/miss/eviction counters and LRU
+    reordering) hold an internal lock, so concurrent engine steps from
+    multiple threads can't corrupt the ordering or drop entries."""
 
     def __init__(self, maxsize: int = 128):
         self.maxsize = maxsize
         self._entries: OrderedDict = OrderedDict()
+        self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def __len__(self):
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
+
+    def __contains__(self, key) -> bool:
+        """Membership peek that touches neither the LRU order nor the
+        hit/miss counters."""
+        with self._lock:
+            return key in self._entries
 
     def get(self, key) -> TunedKernel | None:
-        entry = self._entries.get(key)
-        if entry is None:
-            self.misses += 1
-            return None
-        self._entries.move_to_end(key)
-        self.hits += 1
-        entry.hits += 1
-        return entry
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.hits += 1
+            entry.hits += 1
+            return entry
 
     def put(self, key, entry: TunedKernel) -> None:
-        if self.maxsize <= 0:
-            return
-        self._entries[key] = entry
-        self._entries.move_to_end(key)
-        while len(self._entries) > self.maxsize:
-            self._entries.popitem(last=False)
+        with self._lock:
+            if self.maxsize <= 0:
+                return
+            self._entries[key] = entry
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.maxsize:
+                self._entries.popitem(last=False)
+                self.evictions += 1
+
+    def items(self) -> list[tuple]:
+        """Snapshot of (key, entry) pairs in LRU order (oldest first) —
+        what ``repro.serving.persist`` serializes."""
+        with self._lock:
+            return list(self._entries.items())
 
 
 class KernelAutotuner:
@@ -199,14 +340,28 @@ class KernelAutotuner:
         self.cache = AutotuneCache(cache_size)
         self.featurize_calls = 0
 
+    @staticmethod
+    def _kernel_kwargs(cfg: dict) -> dict:
+        """Learned-space config row -> kwargs for ``repro.kernels.ops``."""
+        return {"block_m": int(cfg["bm"]), "block_n": int(cfg["bn"]),
+                "n_major": bool(cfg["n_major"])}
+
     def select(self, mat: SparseMatrix, op: str = "spmm",
                digest: str | None = None) -> dict:
         self.featurize_calls += 1
         if self.tuner is not None and self.tuner.op == op:
-            cfg = self.tuner.best_configs(mat, k=1)[0]
-            return {"block_m": int(cfg["bm"]), "block_n": int(cfg["bn"]),
-                    "n_major": bool(cfg["n_major"])}
+            return self._kernel_kwargs(self.tuner.best_configs(mat, k=1)[0])
         return self.heuristic(mat, digest=digest)
+
+    def _install(self, mat: SparseMatrix, op: str, digest: str,
+                 config: dict) -> TunedKernel:
+        plan = plan_from_coo(mat.rows, mat.cols,
+                             (mat.n_rows, mat.n_cols),
+                             block_m=config["block_m"],
+                             assume_unique=True)   # SparseMatrix invariant
+        entry = TunedKernel(digest, op, config, plan)
+        self.cache.put((op, digest), entry)
+        return entry
 
     def get(self, mat: SparseMatrix, op: str = "spmm") -> TunedKernel:
         """Cached pattern -> (config, BsrPlan). A repeated pattern is served
@@ -214,14 +369,44 @@ class KernelAutotuner:
         digest = matrix_digest(mat)
         entry = self.cache.get((op, digest))
         if entry is None:
-            config = self.select(mat, op, digest=digest)
-            plan = plan_from_coo(mat.rows, mat.cols,
-                                 (mat.n_rows, mat.n_cols),
-                                 block_m=config["block_m"],
-                                 assume_unique=True)   # SparseMatrix invariant
-            entry = TunedKernel(digest, op, config, plan)
-            self.cache.put((op, digest), entry)
+            entry = self._install(mat, op, digest,
+                                  self.select(mat, op, digest=digest))
         return entry
+
+    def get_batch(self, mats: list[SparseMatrix], op: str = "spmm",
+                  digests: list[str] | None = None) -> list[TunedKernel]:
+        """Batched ``get``: all cache misses are featurized and scored in a
+        single ``Autotuner.scores_batch`` dispatch (one jitted embed + score
+        for the whole batch instead of one per miss).  Duplicate patterns
+        within the batch are tuned once.  ``featurize_calls`` still counts
+        one per *unique* pattern actually featurized, so warm-start
+        accounting is unchanged."""
+        if digests is None:
+            digests = [matrix_digest(m) for m in mats]
+        out: list[TunedKernel | None] = [None] * len(mats)
+        miss: OrderedDict = OrderedDict()   # digest -> first miss index
+        for i, d in enumerate(digests):
+            entry = self.cache.get((op, d))
+            if entry is not None:
+                out[i] = entry
+            elif d not in miss:
+                miss[d] = i
+        if miss:
+            idx = list(miss.values())
+            if self.tuner is not None and self.tuner.op == op:
+                rows = self.tuner.best_configs_batch(
+                    [mats[i] for i in idx], k=1)
+                configs = [self._kernel_kwargs(r[0]) for r in rows]
+                self.featurize_calls += len(idx)
+            else:
+                configs = [self.select(mats[i], op, digest=digests[i])
+                           for i in idx]
+            fresh = {digests[i]: self._install(mats[i], op, digests[i], cfg)
+                     for i, cfg in zip(idx, configs)}
+            for i, d in enumerate(digests):
+                if out[i] is None:
+                    out[i] = fresh[d]
+        return out
 
     @staticmethod
     def heuristic(mat: SparseMatrix, digest: str | None = None) -> dict:

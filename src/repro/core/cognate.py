@@ -118,6 +118,43 @@ def score_configs(p, cfg: CostModelConfig, s_m, homog, z):
     return _predict(p, cfg, trunk).reshape(B, G)
 
 
+def config_first_layer(p, cfg: CostModelConfig, homog, z):
+    """Config-side contribution to the MLP predictor's first layer.
+
+    The trunk is ``concat([s_m, pj, z])``, so the first dense layer splits
+    algebraically into a matrix part (``s_m @ W[:128]``) and a config part
+    (``concat([pj, z]) @ W[128:] + b``).  The config part is a pure function
+    of the config space and ``n_cols`` — serving caches it per shape and
+    shares it across every matrix in every batch.  MLP predictor only.
+
+    homog: (B, G, 53); z: (B, G, L) -> (B, G, H0).
+    """
+    B, G, _ = homog.shape
+    if cfg.use_mapper:
+        pj = nn.mlp(p["mapper"], homog.reshape(B * G, -1)).reshape(B, G, -1)
+    else:
+        pj = jnp.zeros((B, G, CONFIG_EMBED_DIM))
+    if not cfg.use_latent:
+        z = jnp.zeros((B, G, cfg.latent_dim))
+    first = p["predictor"][0]
+    return jnp.concatenate([pj, z], axis=-1) @ first["w"][MATRIX_EMBED_DIM:] \
+        + first["b"]
+
+
+def score_configs_from_parts(p, cfg: CostModelConfig, s_m, cfg_first):
+    """``score_configs`` with the config-side first-layer contribution
+    precomputed (``config_first_layer``).  Same math up to floating-point
+    reassociation; skips the per-(matrix, config) mapper and most of the
+    widest dense layer.  s_m: (B, 128); cfg_first: (B, G, H0), or (G, H0)
+    broadcast across the batch when every matrix shares n_cols -> (B, G)."""
+    first = p["predictor"][0]
+    h = jax.nn.relu(
+        (s_m @ first["w"][:MATRIX_EMBED_DIM])[:, None, :] + cfg_first)
+    B, G, H = h.shape
+    return nn.mlp(p["predictor"][1:], h.reshape(B * G, H))[..., 0] \
+        .reshape(B, G)
+
+
 def apply_cost_model(p, cfg: CostModelConfig, pyramid, homog, z):
     """End-to-end scoring: pyramid (B,C,R,R), homog (B,G,53), z (B,G,L)."""
     return score_configs(p, cfg, matrix_embedding(p, cfg, pyramid), homog, z)

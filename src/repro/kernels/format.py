@@ -83,6 +83,29 @@ class BsrPlan:
     def nnzb(self) -> int:
         return int(self.rowids.shape[0])
 
+    def alloc_buffer(self, buf_dtype=np.float32) -> np.ndarray:
+        """A zeroed (nnzb, bm, BK) block-data buffer this plan scatters into.
+        External holders (e.g. ``repro.serving.arena.PlanArena`` slots) own
+        their buffers; ``reuse=True`` builds use a single plan-owned one."""
+        return np.zeros((self.nnzb, self.block_m, BK), buf_dtype)
+
+    def scatter_into(self, values, data: np.ndarray) -> np.ndarray:
+        """O(nnz) fancy-indexed write of ``values`` into ``data`` (a buffer
+        from ``alloc_buffer``).  Every build writes the exact same positions,
+        so a once-zeroed buffer never needs refilling between builds."""
+        v = np.asarray(values).reshape(-1)
+        data[self.slot, self.rloc, self.cloc] = v[self.take]
+        return data
+
+    def wrap(self, data: np.ndarray, dtype=jnp.float32) -> BsrMatrix:
+        """Block data -> ``BsrMatrix`` with this plan's structure (rowids /
+        colids converted to device arrays once and cached)."""
+        if self._jids is None:
+            self._jids = (jnp.asarray(self.rowids, jnp.int32),
+                          jnp.asarray(self.colids, jnp.int32))
+        return BsrMatrix(_as_jax(data, dtype), *self._jids,
+                         self.n_blockrows, self.n_blockcols)
+
     def build_data(self, values, buf_dtype=np.float32,
                    reuse: bool = False) -> np.ndarray:
         """Scatter ``values`` into a (nnzb, bm, BK) block-data array.
@@ -93,27 +116,20 @@ class BsrPlan:
         warm pages — the steady-state serving cost.  The returned array then
         aliases plan storage and is only valid until the next reusing build.
         """
-        v = np.asarray(values).reshape(-1)
         if reuse and self._buf is not None and self._buf.dtype == buf_dtype:
             data = self._buf
         else:
-            data = np.zeros((self.nnzb, self.block_m, BK), buf_dtype)
+            data = self.alloc_buffer(buf_dtype)
             if reuse:
                 self._buf = data
-        data[self.slot, self.rloc, self.cloc] = v[self.take]
-        return data
+        return self.scatter_into(values, data)
 
     def build(self, values, dtype=jnp.float32,
               reuse: bool = False) -> BsrMatrix:
         """Values -> BsrMatrix through the cached structure.  With
         ``reuse=True`` the result aliases plan-owned storage (valid until the
         next reusing ``build`` on this plan) — the serving-loop fast path."""
-        data = self.build_data(values, reuse=reuse)
-        if self._jids is None:
-            self._jids = (jnp.asarray(self.rowids, jnp.int32),
-                          jnp.asarray(self.colids, jnp.int32))
-        return BsrMatrix(_as_jax(data, dtype), *self._jids,
-                         self.n_blockrows, self.n_blockcols)
+        return self.wrap(self.build_data(values, reuse=reuse), dtype)
 
 
 def _as_jax(data: np.ndarray, dtype) -> jnp.ndarray:

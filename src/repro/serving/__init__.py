@@ -1,0 +1,55 @@
+"""``repro.serving`` — the sparse-kernel serving runtime.
+
+COGNATE's deployment loop (featurize a sparsity pattern -> score program
+configurations with the transferred cost model -> launch the tuned Pallas
+kernel) is O(nnz) per request after PR 1, but production traffic is
+*batched, repetitive, and restartable*.  This subsystem owns that layer:
+
+* ``engine`` — ``SparseKernelEngine``: accepts a micro-batch of
+  ``KernelRequest`` (pattern, values, op[, dense operand]) per ``step``;
+  partitions it into cache hits and misses against the pattern-keyed LRU,
+  featurizes + scores **all** misses in one ``Autotuner.scores_batch``
+  dispatch (``KernelAutotuner.get_batch``), builds each request through a
+  double-buffered plan arena, and optionally executes the Pallas kernel with
+  the tuned tile config.  ``stats()`` renders the full telemetry picture.
+* ``arena`` — ``PlanArena``: a two-slot (configurable) rotation of BSR
+  scatter buffers per cached pattern, generalizing
+  ``BsrPlan.build(reuse=True)``.  Batch N+1's host-side scatter overlaps
+  batch N's in-flight kernel; slot-generation leases guarantee an alias is
+  never overwritten while referenced (exhaustion raises ``ArenaOverrun`` and
+  the engine falls back to an un-aliased build).
+* ``persist`` — atomic single-file serialization of the autotune cache
+  (digest -> tile config + BSR block structure) next to model checkpoints,
+  with the same commit discipline as ``repro.checkpoint.manager``.  A
+  serving restart warm-starts known traffic with **zero** featurizations and
+  zero coordinate sorts; torn or corrupted files fall back to a cold cache.
+* ``telemetry`` — hit rates, per-stage latency histograms (log-bucketed
+  p50/p99), eviction and arena-overflow counters.
+
+Typical use::
+
+    from repro.serving import KernelRequest, SparseKernelEngine
+
+    engine = SparseKernelEngine(tuner, persist_path="ckpt/autotune.npz")
+    for batch in traffic:                    # micro-batches of requests
+        responses = engine.step([KernelRequest(mat, values, "spmm", rhs)
+                                 for mat, values, rhs in batch])
+    engine.save()                            # warm-start the next restart
+
+``benchmarks/serving_engine.py`` measures steady-state requests/sec and
+p50/p99 against the one-pattern-at-a-time loop; ``examples/
+moe_kernel_serving.py`` drives the engine with MoE dispatch traffic.  This
+is the seam later scaling work (multi-backend dispatch, sharded serving)
+plugs into.
+"""
+from repro.serving.arena import ArenaLease, ArenaOverrun, PlanArena
+from repro.serving.engine import (KernelRequest, KernelResponse,
+                                  SparseKernelEngine)
+from repro.serving.persist import (CACHE_FORMAT_VERSION, load_cache,
+                                   save_cache, warm_start)
+from repro.serving.telemetry import EngineTelemetry, LatencyHistogram
+
+__all__ = ["SparseKernelEngine", "KernelRequest", "KernelResponse",
+           "PlanArena", "ArenaLease", "ArenaOverrun",
+           "save_cache", "load_cache", "warm_start", "CACHE_FORMAT_VERSION",
+           "EngineTelemetry", "LatencyHistogram"]

@@ -1,0 +1,124 @@
+"""Double-buffered plan arena — alias-safe reuse of BSR block storage.
+
+``BsrPlan.build(reuse=True)`` hands out an alias of a single plan-owned
+buffer, so a serving loop that builds batch N+1 while batch N's kernel is
+still consuming its input would overwrite in-flight data.  ``PlanArena``
+generalizes that single buffer to an n-slot (default two-slot) rotation:
+
+* ``build(values)`` scatters into the next *free* slot and returns an
+  ``ArenaLease`` — the built ``BsrMatrix`` plus a generation token.
+* A slot stays untouchable while its lease is held; ``release()`` returns it
+  to the rotation.  With two slots, batch N+1's host-side scatter lands in
+  slot B while batch N's kernel still reads slot A — the classic double
+  buffer.
+* Every checkout bumps the slot's generation.  A lease whose slot has been
+  rehanded is ``.valid == False``, and the arena *never* rehands a slot whose
+  lease is still held — asking for more concurrent buffers than there are
+  slots raises ``ArenaOverrun`` (callers fall back to a fresh, un-aliased
+  allocation; ``repro.serving.engine`` counts those).
+
+The arena is per-plan (buffer shape is a function of the plan's nnzb and
+block size); ``repro.serving.engine`` keeps one per cached pattern.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.format import BsrMatrix, BsrPlan
+
+__all__ = ["PlanArena", "ArenaLease", "ArenaOverrun"]
+
+
+class ArenaOverrun(RuntimeError):
+    """All slots are leased — granting another build would overwrite a
+    buffer that may still be referenced by an in-flight kernel."""
+
+
+@dataclasses.dataclass
+class _Slot:
+    buf: np.ndarray
+    generation: int = 0
+    leased: bool = False
+
+
+@dataclasses.dataclass
+class ArenaLease:
+    """A built ``BsrMatrix`` plus the right to keep reading it.
+
+    The matrix aliases arena slot storage.  It is guaranteed intact until
+    ``release()``; afterwards ``valid`` reports whether the slot has been
+    rehanded to a newer build (stale aliases can be detected, not just
+    corrupted)."""
+    matrix: BsrMatrix
+    _arena: "PlanArena"
+    _slot_index: int
+    generation: int
+
+    @property
+    def valid(self) -> bool:
+        return self._arena._slots[self._slot_index].generation == self.generation
+
+    def release(self) -> None:
+        self._arena._release(self._slot_index, self.generation)
+
+
+class PlanArena:
+    """n-slot rotation of scatter buffers for one ``BsrPlan``."""
+
+    def __init__(self, plan: BsrPlan, n_slots: int = 2,
+                 buf_dtype=np.float32):
+        if n_slots < 1:
+            raise ValueError("need at least one slot")
+        self.plan = plan
+        self.buf_dtype = buf_dtype
+        self._slots = [_Slot(plan.alloc_buffer(buf_dtype))
+                       for _ in range(n_slots)]
+        self._next = 0
+        self._lock = threading.Lock()
+        self.builds = 0
+        self.overruns = 0
+
+    @property
+    def n_slots(self) -> int:
+        return len(self._slots)
+
+    def free_slots(self) -> int:
+        with self._lock:
+            return sum(not s.leased for s in self._slots)
+
+    def _checkout(self) -> tuple[int, _Slot]:
+        """Round-robin from the slot after the last one handed out, so the
+        most recently built (likely still in-flight) buffer is tried last."""
+        with self._lock:
+            n = len(self._slots)
+            for k in range(n):
+                i = (self._next + k) % n
+                slot = self._slots[i]
+                if not slot.leased:
+                    slot.leased = True
+                    slot.generation += 1
+                    self._next = (i + 1) % n
+                    return i, slot
+            self.overruns += 1
+        raise ArenaOverrun(
+            f"all {n} arena slots are leased; release a batch before "
+            f"building another, or fall back to an un-aliased build")
+
+    def _release(self, index: int, generation: int) -> None:
+        with self._lock:
+            slot = self._slots[index]
+            if slot.generation == generation:
+                slot.leased = False
+
+    def build(self, values, dtype=jnp.float32) -> ArenaLease:
+        """Scatter ``values`` through the plan into the next free slot."""
+        i, slot = self._checkout()
+        self.plan.scatter_into(values, slot.buf)
+        with self._lock:
+            self.builds += 1
+        return ArenaLease(self.plan.wrap(slot.buf, dtype), self, i,
+                          slot.generation)

@@ -1,0 +1,244 @@
+"""``SparseKernelEngine`` — micro-batched serving of tuned sparse kernels.
+
+One ``step(requests)`` call serves a micro-batch of (pattern, values, op)
+requests through the COGNATE deployment loop with every stage amortized:
+
+1. **Partition** — each request's pattern is digested once and looked up in
+   the pattern-keyed autotune LRU.
+2. **Score** — all cache *misses* (per op) are featurized and scored in a
+   single ``Autotuner.scores_batch`` dispatch via ``KernelAutotuner.
+   get_batch``: one jitted embed+score round-trip for the whole batch instead
+   of one per pattern.  Hits skip featurization entirely.
+3. **Build** — values scatter through each pattern's cached ``BsrPlan`` into
+   a two-slot double-buffered ``PlanArena``: batch N+1's host-side scatter
+   lands in the slot batch N is *not* using, and slot-generation checks
+   guarantee an alias is never overwritten while its lease is held.  If a
+   pattern's arena is exhausted (more outstanding builds than slots), the
+   engine falls back to a fresh un-aliased allocation and counts it.
+4. **Execute** — requests carrying a dense operand are run through the
+   Pallas kernels (``ops.spmm`` / ``ops.sddmm``) with the tuned tile config;
+   operand-less requests are "prepare-only" (the caller launches later).
+
+Batch N's leases are released only after batch N+1 is dispatched, so the
+engine is safe even when kernel launches are asynchronous.  ``stats()``
+renders hit rates, per-stage latency histograms (p50/p99), evictions, and
+persistence events from ``repro.serving.telemetry``.
+
+With ``persist_path`` set, the engine warm-starts its cache from disk at
+construction (zero featurizations for previously-seen traffic — torn or
+missing files fall back to a cold cache) and ``save()`` atomically writes it
+back via ``repro.serving.persist``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import OrderedDict
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.autotune import (Autotuner, KernelAutotuner, TunedKernel,
+                                 matrix_digest)
+from repro.data.matrices import SparseMatrix
+from repro.kernels import ops
+from repro.kernels.format import BsrMatrix
+from repro.serving.arena import ArenaLease, ArenaOverrun, PlanArena
+from repro.serving.persist import load_cache, save_cache
+from repro.serving.telemetry import EngineTelemetry
+
+__all__ = ["KernelRequest", "KernelResponse", "SparseKernelEngine"]
+
+
+@dataclasses.dataclass
+class KernelRequest:
+    """One unit of serving work: a sparsity pattern with this batch's values.
+
+    ``values`` aligns with ``mat.rows``/``mat.cols`` (defaults to ones —
+    pattern-only traffic).  ``operand`` is the dense right-hand side: a (K, N)
+    array for ``op="spmm"``, a ``(b, c)`` tuple for ``op="sddmm"``; ``None``
+    means prepare-only (tune + build, let the caller launch)."""
+    mat: SparseMatrix
+    values: np.ndarray | None = None
+    op: str = "spmm"
+    operand: object = None
+
+
+@dataclasses.dataclass
+class KernelResponse:
+    digest: str
+    config: dict
+    matrix: BsrMatrix
+    output: object | None       # kernel result, or None for prepare-only
+    cache_hit: bool
+    arena_slot: bool            # False -> overflow fallback (fresh buffer)
+
+
+class SparseKernelEngine:
+    """Batched, double-buffered, warm-startable sparse-kernel server."""
+
+    def __init__(self, tuner: KernelAutotuner | Autotuner | None = None,
+                 cache_size: int = 128, arena_slots: int = 2,
+                 persist_path: str | Path | None = None,
+                 autosave_every: int | None = None, interpret: bool = True):
+        if isinstance(tuner, KernelAutotuner):
+            self.tuner = tuner
+        else:       # a learned Autotuner (or None -> structural heuristic)
+            self.tuner = KernelAutotuner(tuner, cache_size=cache_size)
+        self.arena_slots = arena_slots
+        self.interpret = interpret
+        self.autosave_every = autosave_every
+        self.telemetry = EngineTelemetry()
+        self.persist_path = Path(persist_path) if persist_path else None
+        self._arenas: OrderedDict = OrderedDict()   # (op, digest) -> PlanArena
+        # previous-batch leases are per *thread*: each serving stream double-
+        # buffers independently, so one thread's step can never release (and
+        # let the arena overwrite) a batch another thread's caller still
+        # holds.  Concurrent streams hitting one pattern contend for its
+        # slots; losers take the counted un-aliased fallback.
+        self._stream = threading.local()
+        self._outstanding = 0
+        self._lock = threading.Lock()   # guards _arenas and _outstanding
+        if self.persist_path is not None:
+            loaded = load_cache(self.persist_path)
+            if loaded is not None:      # an empty cache file is a valid load
+                for key, entry in loaded:
+                    self.tuner.cache.put(key, entry)
+                self.telemetry.count(warm_start_entries=len(loaded))
+            elif self.persist_path.exists():
+                self.telemetry.count(persist_load_failures=1)
+
+    # ------------------------------------------------------------- serving
+
+    def step(self, requests: list[KernelRequest]) -> list[KernelResponse]:
+        """Serve one micro-batch; returns responses in request order."""
+        t_step = time.perf_counter()
+        cache = self.tuner.cache
+
+        t0 = time.perf_counter()
+        digests = [matrix_digest(r.mat) for r in requests]
+        was_hit = [(r.op, d) in cache for r, d in zip(requests, digests)]
+        by_op: OrderedDict = OrderedDict()
+        for i, r in enumerate(requests):
+            by_op.setdefault(r.op, []).append(i)
+        self.telemetry.record_stage("partition", time.perf_counter() - t0)
+
+        t0 = time.perf_counter()
+        hits0, misses0 = cache.hits, cache.misses
+        entries: list[TunedKernel | None] = [None] * len(requests)
+        for op, idxs in by_op.items():
+            m0 = cache.misses
+            got = self.tuner.get_batch([requests[i].mat for i in idxs], op,
+                                       digests=[digests[i] for i in idxs])
+            for i, e in zip(idxs, got):
+                entries[i] = e
+            if cache.misses > m0:
+                self.telemetry.count(score_dispatches=1)
+        self.telemetry.record_stage("score", time.perf_counter() - t0)
+        self.telemetry.count(hits=cache.hits - hits0,
+                             misses=cache.misses - misses0)
+
+        t0 = time.perf_counter()
+        leases: list[ArenaLease] = []
+        built: list[tuple[BsrMatrix, bool]] = []
+        for r, d, entry in zip(requests, digests, entries):
+            values = r.values if r.values is not None \
+                else np.ones(r.mat.nnz, np.float32)
+            arena = self._arena_for((r.op, d), entry)
+            try:
+                lease = arena.build(values)
+                leases.append(lease)
+                built.append((lease.matrix, True))
+            except ArenaOverrun:
+                self.telemetry.count(arena_fallbacks=1)
+                built.append((entry.plan.build(values), False))
+        self.telemetry.record_stage("build", time.perf_counter() - t0)
+
+        t0 = time.perf_counter()
+        responses = []
+        for r, d, entry, (matrix, in_arena), hit in zip(
+                requests, digests, entries, built, was_hit):
+            output = self._execute(r, entry, matrix)
+            responses.append(KernelResponse(d, entry.config, matrix, output,
+                                            hit, in_arena))
+        self.telemetry.record_stage("execute", time.perf_counter() - t0)
+
+        # this stream's batch N-1 kernels were dispatched a full step ago —
+        # its slots can rotate now that batch N is in flight (double-buffer
+        # hand-off)
+        for lease in self._swap_stream_leases(leases):
+            lease.release()
+
+        self.telemetry.count(requests=len(requests), batches=1)
+        self.telemetry.record_stage("step", time.perf_counter() - t_step)
+        if (self.autosave_every and self.persist_path is not None
+                and self.telemetry.batches % self.autosave_every == 0):
+            self.save()
+        return responses
+
+    def _execute(self, r: KernelRequest, entry: TunedKernel,
+                 matrix: BsrMatrix):
+        if r.operand is None:
+            return None
+        cfg = entry.config
+        if r.op == "spmm":
+            return ops.spmm(matrix, jnp.asarray(r.operand),
+                            block_n=cfg["block_n"], n_major=cfg["n_major"],
+                            interpret=self.interpret)
+        if r.op == "sddmm":
+            b, c = r.operand
+            return ops.sddmm(matrix, jnp.asarray(b), jnp.asarray(c),
+                             interpret=self.interpret)
+        raise ValueError(f"unknown op {r.op!r}")
+
+    def _arena_for(self, key, entry: TunedKernel) -> PlanArena:
+        with self._lock:
+            arena = self._arenas.get(key)
+            if arena is None or arena.plan is not entry.plan:
+                arena = PlanArena(entry.plan, n_slots=self.arena_slots)
+                self._arenas[key] = arena
+            self._arenas.move_to_end(key)
+            while len(self._arenas) > max(self.tuner.cache.maxsize, 1):
+                self._arenas.popitem(last=False)
+            return arena
+
+    def _swap_stream_leases(self, leases: list[ArenaLease]) -> list[ArenaLease]:
+        """Install this thread's new outstanding batch; return the old one."""
+        prev = getattr(self._stream, "leases", [])
+        self._stream.leases = leases
+        with self._lock:
+            self._outstanding += len(leases) - len(prev)
+        return prev
+
+    def flush(self) -> None:
+        """Release the calling thread's outstanding arena leases (call once
+        this stream's last results have been consumed or copied)."""
+        for lease in self._swap_stream_leases([]):
+            lease.release()
+
+    # ------------------------------------------------------- observability
+
+    @property
+    def featurize_calls(self) -> int:
+        return self.tuner.featurize_calls
+
+    def stats(self) -> dict:
+        out = self.telemetry.snapshot(cache=self.tuner.cache)
+        out["featurize_calls"] = self.tuner.featurize_calls
+        with self._lock:
+            out["arenas"] = {"resident": len(self._arenas),
+                             "outstanding_leases": self._outstanding}
+        return out
+
+    # --------------------------------------------------------- persistence
+
+    def save(self, path: str | Path | None = None) -> Path:
+        """Atomically persist the autotune cache (digest -> config + plan)."""
+        target = Path(path) if path is not None else self.persist_path
+        if target is None:
+            raise ValueError("no persist_path configured and none given")
+        out = save_cache(self.tuner.cache, target)
+        self.telemetry.count(persist_saves=1)
+        return out

@@ -1,0 +1,122 @@
+"""Autotune-cache persistence — warm-start serving across restarts.
+
+Serializes a populated ``AutotuneCache`` (digest -> tuned config + the
+``BsrPlan`` block structure) to a single ``.npz`` next to model checkpoints,
+using the same atomic-commit discipline as ``repro.checkpoint.manager``:
+write to ``<path>.tmp``, flush + fsync, then ``os.replace`` into place — a
+preempted save can never produce a torn cache file, and ``os.replace`` over
+an existing file makes repeated saves safe.
+
+Restore is strictly best-effort: any defect (missing file, truncated/garbled
+npz, version mismatch, inconsistent arrays) logs and returns ``None`` so the
+caller starts cold instead of crashing — a serving process must come up even
+when its cache file was torn by the failure that restarted it.
+
+Storing the plan's scatter arrays (not just the config) means a warm-started
+pattern pays *neither* featurization *nor* the coordinate sort: first request
+after restart is already the steady-state O(nnz) value scatter.
+"""
+from __future__ import annotations
+
+import json
+import os
+import warnings
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.autotune import AutotuneCache, KernelAutotuner, TunedKernel
+from repro.kernels.format import BsrPlan
+from repro.kernels.spmm import BK
+
+__all__ = ["CACHE_FORMAT_VERSION", "save_cache", "load_cache", "warm_start"]
+
+CACHE_FORMAT_VERSION = 1
+
+_PLAN_ARRAYS = ("rowids", "colids", "take", "slot", "rloc", "cloc")
+
+
+def save_cache(cache: AutotuneCache, path: str | os.PathLike) -> Path:
+    """Atomically write ``cache`` to ``path`` (a ``.npz`` file)."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    entries = cache.items()
+    manifest = {"version": CACHE_FORMAT_VERSION, "entries": []}
+    arrays = {}
+    for i, ((op, digest), e) in enumerate(entries):
+        plan = e.plan
+        manifest["entries"].append({
+            "op": op, "digest": digest, "config": e.config,
+            "n_blockrows": plan.n_blockrows, "n_blockcols": plan.n_blockcols,
+            "block_m": plan.block_m,
+        })
+        for name in _PLAN_ARRAYS:
+            arrays[f"e{i}_{name}"] = getattr(plan, name)
+    arrays["manifest"] = np.frombuffer(
+        json.dumps(manifest).encode(), np.uint8)
+    tmp = path.with_name(path.name + ".tmp")
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)               # atomic commit
+    return path
+
+
+def load_cache(path: str | os.PathLike) -> list[tuple[tuple, TunedKernel]] | None:
+    """Read a persisted cache -> [(key, entry), ...] in saved (LRU) order.
+
+    Returns ``None`` on *any* failure — absent file, torn/corrupted bytes,
+    unknown format version, internally inconsistent arrays — so callers fall
+    back to a cold cache."""
+    path = Path(path)
+    try:
+        with np.load(path) as data:
+            manifest = json.loads(bytes(data["manifest"]).decode())
+            if manifest.get("version") != CACHE_FORMAT_VERSION:
+                raise ValueError(
+                    f"unsupported cache version {manifest.get('version')}")
+            out = []
+            for i, m in enumerate(manifest["entries"]):
+                arrs = {name: data[f"e{i}_{name}"] for name in _PLAN_ARRAYS}
+                n_entries = arrs["take"].shape[0]
+                for name in _PLAN_ARRAYS[2:]:
+                    if arrs[name].shape[0] != n_entries:
+                        raise ValueError(f"entry {i}: ragged plan arrays")
+                if arrs["rowids"].shape != arrs["colids"].shape:
+                    raise ValueError(f"entry {i}: ragged block ids")
+                nnzb = arrs["rowids"].shape[0]
+                if n_entries and (
+                        arrs["slot"].min() < 0
+                        or arrs["slot"].max() >= nnzb
+                        or arrs["take"].min() < 0
+                        or arrs["rloc"].min() < 0
+                        or arrs["rloc"].max() >= int(m["block_m"])
+                        or arrs["cloc"].min() < 0
+                        or arrs["cloc"].max() >= BK):
+                    raise ValueError(f"entry {i}: scatter index out of range")
+                plan = BsrPlan(n_blockrows=int(m["n_blockrows"]),
+                               n_blockcols=int(m["n_blockcols"]),
+                               block_m=int(m["block_m"]), **arrs)
+                entry = TunedKernel(m["digest"], m["op"],
+                                    dict(m["config"]), plan)
+                out.append(((m["op"], m["digest"]), entry))
+            return out
+    except FileNotFoundError:
+        return None
+    except Exception as e:             # torn file, bad json, bad zip, ...
+        warnings.warn(f"autotune cache at {path} unreadable "
+                      f"({type(e).__name__}: {e}); starting cold")
+        return None
+
+
+def warm_start(tuner: KernelAutotuner, path: str | os.PathLike) -> int:
+    """Populate ``tuner``'s cache from a persisted file.  Returns the number
+    of entries restored (0 on a cold/corrupted file).  Restored entries do
+    not count as featurizations or cache misses."""
+    loaded = load_cache(path)
+    if not loaded:
+        return 0
+    for key, entry in loaded:
+        tuner.cache.put(key, entry)
+    return len(loaded)

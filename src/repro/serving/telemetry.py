@@ -1,0 +1,117 @@
+"""Serving telemetry: counters + fixed-bucket latency histograms.
+
+Histograms use log-spaced bucket edges (1 µs .. ~100 s) so p50/p99 come from
+O(1)-memory bucket counts instead of unbounded sample lists — the structure a
+long-running engine can keep forever.  Quantiles are read off the bucket
+upper edges (conservative: reported latency >= true latency, error bounded by
+the ~26% bucket ratio), which is the standard Prometheus-style trade.
+
+``EngineTelemetry`` is what ``SparseKernelEngine`` owns: request/hit/miss
+counters, one histogram per pipeline stage (partition, score, build, execute,
+step), arena overflow fallbacks, and warm-start/persistence events.  All
+mutation is lock-guarded so concurrent engine steps can share one instance.
+"""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+__all__ = ["LatencyHistogram", "EngineTelemetry"]
+
+
+class LatencyHistogram:
+    """Fixed log-spaced latency histogram over (1e-6 s, ~1e2 s)."""
+
+    def __init__(self, n_buckets: int = 72):
+        # 72 buckets spanning 8 decades: ratio ~ 10^(8/72) ~ 1.29
+        self.edges = np.logspace(-6, 2, n_buckets)     # bucket upper bounds
+        self.counts = np.zeros(n_buckets + 1, np.int64)  # +overflow bucket
+        self.total = 0.0
+        self.n = 0
+        self.max = 0.0
+
+    def record(self, seconds: float) -> None:
+        i = int(np.searchsorted(self.edges, seconds, side="left"))
+        self.counts[i] += 1
+        self.total += seconds
+        self.n += 1
+        if seconds > self.max:
+            self.max = seconds
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.n if self.n else 0.0
+
+    def quantile(self, q: float) -> float:
+        """Upper edge of the bucket containing the q-quantile sample."""
+        if self.n == 0:
+            return 0.0
+        rank = q * (self.n - 1)
+        # bucket i covers sorted-sample indices [cum[i-1], cum[i] - 1]
+        cum = np.cumsum(self.counts)
+        i = int(np.searchsorted(cum - 1, rank, side="left"))
+        if i >= self.edges.size:        # overflow bucket: report the max seen
+            return self.max
+        return float(self.edges[i])
+
+    def snapshot(self) -> dict:
+        return {"n": int(self.n), "mean_ms": self.mean * 1e3,
+                "p50_ms": self.quantile(0.50) * 1e3,
+                "p99_ms": self.quantile(0.99) * 1e3,
+                "max_ms": self.max * 1e3}
+
+
+STAGES = ("partition", "score", "build", "execute", "step")
+
+
+class EngineTelemetry:
+    """Counters + per-stage latency histograms for one engine."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.stages = {name: LatencyHistogram() for name in STAGES}
+        self.requests = 0
+        self.batches = 0
+        self.hits = 0
+        self.misses = 0
+        self.score_dispatches = 0       # batched featurize+score round-trips
+        self.arena_fallbacks = 0        # builds that couldn't get a slot
+        self.warm_start_entries = 0     # cache entries restored from disk
+        self.persist_saves = 0
+        self.persist_load_failures = 0  # corrupted/absent files -> cold start
+
+    def record_stage(self, name: str, seconds: float) -> None:
+        with self._lock:
+            self.stages[name].record(seconds)
+
+    def count(self, **deltas: int) -> None:
+        with self._lock:
+            for name, d in deltas.items():
+                setattr(self, name, getattr(self, name) + d)
+
+    def snapshot(self, cache=None, evictions: int | None = None) -> dict:
+        """Everything ``SparseKernelEngine.stats()`` renders.  Pass the
+        engine's ``AutotuneCache`` to fold in its counters."""
+        with self._lock:
+            served = self.hits + self.misses
+            out = {
+                "requests": self.requests,
+                "batches": self.batches,
+                "hits": self.hits,
+                "misses": self.misses,
+                "hit_rate": self.hits / served if served else 0.0,
+                "score_dispatches": self.score_dispatches,
+                "arena_fallbacks": self.arena_fallbacks,
+                "warm_start_entries": self.warm_start_entries,
+                "persist_saves": self.persist_saves,
+                "persist_load_failures": self.persist_load_failures,
+                "stages": {k: h.snapshot() for k, h in self.stages.items()},
+            }
+        if cache is not None:
+            out["cache"] = {"size": len(cache), "hits": cache.hits,
+                            "misses": cache.misses,
+                            "evictions": cache.evictions}
+        if evictions is not None:
+            out.setdefault("cache", {})["evictions"] = evictions
+        return out

@@ -1,0 +1,367 @@
+"""Tests for the serving subsystem: engine, arena, persistence, telemetry,
+batched autotuning, and the PR's core/autotune satellite fixes.
+
+Stress tests (thread hammering, long arena rotations) carry the ``slow``
+marker and are deselected from tier-1 (``pytest -m slow`` runs them).
+"""
+import threading
+import types
+
+import numpy as np
+import pytest
+
+from repro.core.autotune import (AutotuneCache, KernelAutotuner, StatsMemo,
+                                 _STATS_MEMO, matrix_digest, pattern_digest)
+from repro.data import generate_matrix
+from repro.kernels import spmm_ref
+from repro.kernels.format import plan_from_coo
+from repro.serving import (ArenaOverrun, KernelRequest, PlanArena,
+                           SparseKernelEngine, load_cache, save_cache,
+                           warm_start)
+from repro.serving.telemetry import LatencyHistogram
+
+
+def _mats(n, seed0=0, n_rows=256, nnz=1200):
+    fams = ("uniform", "banded", "powerlaw", "blockdiag")
+    return [generate_matrix(fams[i % 4], seed=seed0 + i, n_rows=n_rows,
+                            n_cols=n_rows, target_nnz=nnz) for i in range(n)]
+
+
+# ------------------------------------------------------------ pattern digest
+
+def test_pattern_digest_dtype_insensitive_native_hash():
+    r = np.array([3, 70, 200], np.int32)
+    c = np.array([5, 9, 100], np.int32)
+    base = pattern_digest(r, c, (256, 256))
+    assert pattern_digest(r.astype(np.int64), c.astype(np.int64),
+                          (256, 256)) == base
+    assert pattern_digest(r.astype(np.uint16), c, (256, 256)) == base
+    assert pattern_digest(r, c, (256, 512)) != base
+    # coordinates beyond int32 hash distinctly (can't collide with int32)
+    big = np.array([2**40], np.int64)
+    assert pattern_digest(big, np.array([0]), (2**41, 2)) \
+        != pattern_digest(np.array([1], np.int64), np.array([0]), (2**41, 2))
+
+
+# ---------------------------------------------------------------- stats memo
+
+def test_stats_memo_clear_and_maxsize():
+    memo = StatsMemo(maxsize=4)
+    mats = _mats(6, seed0=100)
+    for m in mats:
+        memo.get_or_compute(m)
+    assert len(memo) == 4              # LRU-bounded
+    memo.maxsize = 2
+    assert len(memo) == 2              # shrinking trims oldest
+    memo.clear()
+    assert len(memo) == 0
+    s1 = memo.get_or_compute(mats[0])
+    s2 = memo.get_or_compute(mats[0])
+    assert s1 is s2                    # memoized again after clear
+
+
+def test_module_global_stats_memo_api():
+    _STATS_MEMO.clear()
+    assert len(_STATS_MEMO) == 0
+    assert _STATS_MEMO.maxsize > 0
+
+
+# ----------------------------------------------------------------- get_batch
+
+def test_get_batch_matches_sequential_get():
+    mats = _mats(6, seed0=200)
+    seq = [KernelAutotuner().get(m) for m in mats]
+    kt = KernelAutotuner()
+    bat = kt.get_batch(mats)
+    assert [e.config for e in bat] == [e.config for e in seq]
+    assert kt.featurize_calls == len(mats)
+    # hits afterwards: no featurization
+    kt.get_batch(mats)
+    assert kt.featurize_calls == len(mats)
+
+
+def test_get_batch_dedupes_within_batch():
+    m = _mats(1, seed0=300)[0]
+    kt = KernelAutotuner()
+    entries = kt.get_batch([m, m, m])
+    assert kt.featurize_calls == 1
+    assert entries[0] is entries[1] is entries[2]
+
+
+def test_get_batch_mixed_hits_and_misses():
+    mats = _mats(4, seed0=400)
+    kt = KernelAutotuner()
+    kt.get(mats[0])
+    kt.get(mats[1])
+    entries = kt.get_batch(mats)
+    assert kt.featurize_calls == 4          # only the two new ones
+    assert entries[0].digest == matrix_digest(mats[0])
+    assert [e.digest for e in entries] == [matrix_digest(m) for m in mats]
+
+
+# --------------------------------------------------------------------- arena
+
+def test_arena_double_buffer_rotation_and_generations():
+    m = _mats(1, seed0=500)[0]
+    plan = plan_from_coo(m.rows, m.cols, (m.n_rows, m.n_cols), block_m=32,
+                         assume_unique=True)
+    arena = PlanArena(plan, n_slots=2)
+    v1 = np.ones(m.nnz, np.float32)
+    l1 = arena.build(v1)
+    l2 = arena.build(2 * v1)
+    # two live leases use distinct buffers; l1's data is intact
+    assert np.asarray(l1.matrix.data).max() == 1.0
+    assert np.asarray(l2.matrix.data).max() == 2.0
+    with pytest.raises(ArenaOverrun):
+        arena.build(3 * v1)                # both slots held
+    assert arena.overruns == 1
+    l1.release()
+    l3 = arena.build(3 * v1)               # recycles l1's slot
+    assert not l1.valid                    # stale alias is detectable
+    assert l2.valid and l3.valid
+    assert np.asarray(l3.matrix.data).max() == 3.0
+    l2.release()
+    l3.release()
+    assert arena.free_slots() == 2
+
+
+def test_arena_matrix_matches_plain_build():
+    m = _mats(1, seed0=600)[0]
+    plan = plan_from_coo(m.rows, m.cols, (m.n_rows, m.n_cols), block_m=32,
+                         assume_unique=True)
+    vals = np.random.default_rng(0).normal(size=m.nnz).astype(np.float32)
+    lease = PlanArena(plan).build(vals)
+    ref = plan.build(vals)
+    np.testing.assert_array_equal(np.asarray(lease.matrix.data),
+                                  np.asarray(ref.data))
+
+
+def test_stale_release_does_not_free_new_lease():
+    m = _mats(1, seed0=650)[0]
+    plan = plan_from_coo(m.rows, m.cols, (m.n_rows, m.n_cols), block_m=32,
+                         assume_unique=True)
+    arena = PlanArena(plan, n_slots=1)
+    v = np.ones(m.nnz, np.float32)
+    l1 = arena.build(v)
+    l1.release()
+    l2 = arena.build(v)                    # same slot, new generation
+    l1.release()                           # stale double-release: no-op
+    assert arena.free_slots() == 0
+    assert l2.valid
+
+
+# -------------------------------------------------------------------- engine
+
+def test_engine_outputs_match_reference():
+    mats = _mats(3, seed0=700)
+    rng = np.random.default_rng(1)
+    rhs = rng.normal(size=(256, 64)).astype(np.float32)
+    engine = SparseKernelEngine()
+    for _ in range(2):                      # second step = pure cache hits
+        reqs = [KernelRequest(m, rng.normal(size=m.nnz).astype(np.float32),
+                              "spmm", rhs) for m in mats]
+        for resp, req in zip(engine.step(reqs), reqs):
+            want = np.asarray(spmm_ref(resp.matrix, rhs))
+            got = np.asarray(resp.output)[:, :64]
+            np.testing.assert_allclose(got, want[:, :64], atol=1e-4)
+    s = engine.stats()
+    assert s["misses"] == 3 and s["hits"] == 3
+    assert s["featurize_calls"] == 3
+    assert s["stages"]["step"]["n"] == 2
+
+
+def test_engine_double_buffers_across_steps():
+    m = _mats(1, seed0=800)[0]
+    engine = SparseKernelEngine()
+    r1 = engine.step([KernelRequest(m, np.ones(m.nnz, np.float32))])[0]
+    d1 = np.asarray(r1.matrix.data)
+    r2 = engine.step([KernelRequest(m, 2 * np.ones(m.nnz, np.float32))])[0]
+    # step 1's matrix is still intact while step 2 is outstanding
+    assert np.asarray(r1.matrix.data).max() == 1.0
+    assert np.asarray(r2.matrix.data).max() == 2.0
+    assert d1 is not np.asarray(r2.matrix.data)
+    engine.flush()
+
+
+def test_engine_arena_overflow_falls_back():
+    m = _mats(1, seed0=900)[0]
+    engine = SparseKernelEngine(arena_slots=2)
+    # 3 same-pattern requests in one batch: 2 arena slots + 1 fallback
+    reqs = [KernelRequest(m, (i + 1) * np.ones(m.nnz, np.float32))
+            for i in range(3)]
+    resps = engine.step(reqs)
+    assert [r.arena_slot for r in resps] == [True, True, False]
+    assert engine.stats()["arena_fallbacks"] == 1
+    # every response still carries its own values
+    for i, r in enumerate(resps):
+        assert np.asarray(r.matrix.data).max() == i + 1.0
+
+
+def test_engine_telemetry_hit_accounting():
+    mats = _mats(2, seed0=1000)
+    engine = SparseKernelEngine()
+    resps = engine.step([KernelRequest(mats[0]), KernelRequest(mats[1]),
+                         KernelRequest(mats[0])])
+    assert [r.cache_hit for r in resps] == [False, False, False]
+    assert engine.featurize_calls == 2      # within-batch dup scored once
+    resps = engine.step([KernelRequest(mats[0])])
+    assert resps[0].cache_hit
+    s = engine.stats()
+    assert s["requests"] == 4 and s["batches"] == 2
+    assert 0 < s["hit_rate"] < 1
+
+
+# --------------------------------------------------------------- persistence
+
+def test_persist_roundtrip_zero_featurize(tmp_path):
+    path = tmp_path / "cache.npz"
+    mats = _mats(4, seed0=1100)
+    kt = KernelAutotuner()
+    entries = kt.get_batch(mats)
+    save_cache(kt.cache, path)
+
+    kt2 = KernelAutotuner()
+    assert warm_start(kt2, path) == 4
+    warm = kt2.get_batch(mats)
+    assert kt2.featurize_calls == 0         # zero featurizations on warm start
+    assert [e.config for e in warm] == [e.config for e in entries]
+    # restored plans produce identical BSR data
+    vals = np.ones(mats[0].nnz, np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(warm[0].build(vals).data),
+        np.asarray(entries[0].build(vals).data))
+
+
+def test_persist_corrupted_file_falls_back_cold(tmp_path):
+    path = tmp_path / "cache.npz"
+    mats = _mats(2, seed0=1200)
+    kt = KernelAutotuner()
+    kt.get_batch(mats)
+    save_cache(kt.cache, path)
+    # torn write: truncate the committed file mid-way
+    raw = path.read_bytes()
+    path.write_bytes(raw[:len(raw) // 2])
+    with pytest.warns(UserWarning, match="starting cold"):
+        assert load_cache(path) is None
+    # engine constructor survives and counts the failure
+    with pytest.warns(UserWarning):
+        engine = SparseKernelEngine(persist_path=path)
+    assert engine.stats()["persist_load_failures"] == 1
+    resp = engine.step([KernelRequest(mats[0])])[0]     # serves cold
+    assert not resp.cache_hit and engine.featurize_calls == 1
+
+
+def test_persist_garbage_and_missing(tmp_path):
+    bad = tmp_path / "bad.npz"
+    bad.write_bytes(b"not an npz at all")
+    with pytest.warns(UserWarning):
+        assert load_cache(bad) is None
+    assert load_cache(tmp_path / "never_written.npz") is None
+    assert warm_start(KernelAutotuner(), tmp_path / "never_written.npz") == 0
+
+
+def test_engine_save_and_warm_start(tmp_path):
+    path = tmp_path / "cache.npz"
+    mats = _mats(3, seed0=1300)
+    engine = SparseKernelEngine(persist_path=path)
+    engine.step([KernelRequest(m) for m in mats])
+    engine.save()
+    engine2 = SparseKernelEngine(persist_path=path)
+    resps = engine2.step([KernelRequest(m) for m in mats])
+    assert all(r.cache_hit for r in resps)
+    s = engine2.stats()
+    assert s["warm_start_entries"] == 3
+    assert s["featurize_calls"] == 0
+
+
+# ----------------------------------------------------------------- telemetry
+
+def test_latency_histogram_quantiles():
+    h = LatencyHistogram()
+    for ms in (1, 1, 1, 1, 1, 1, 1, 1, 1, 100):
+        h.record(ms / 1e3)
+    assert h.n == 10
+    assert 0.8e-3 <= h.quantile(0.5) <= 1.6e-3        # bucketed ~1ms
+    assert h.quantile(0.99) >= 90e-3
+    snap = h.snapshot()
+    assert snap["n"] == 10 and snap["max_ms"] == pytest.approx(100.0)
+
+
+def test_latency_histogram_empty_and_overflow():
+    h = LatencyHistogram()
+    assert h.quantile(0.5) == 0.0
+    h.record(1e4)                   # beyond the last edge: overflow bucket
+    assert h.quantile(0.99) == pytest.approx(1e4)
+
+
+# ------------------------------------------------------------- slow / stress
+
+@pytest.mark.slow
+def test_cache_thread_safety_stress():
+    cache = AutotuneCache(maxsize=16)
+    mats = _mats(8, seed0=1400, n_rows=128, nnz=400)
+    keys = [("spmm", matrix_digest(m)) for m in mats]
+    errors = []
+
+    def hammer(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(2000):
+                k = keys[rng.integers(len(keys))]
+                if cache.get(k) is None:
+                    cache.put(k, types.SimpleNamespace(hits=0))
+        except Exception as e:      # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert len(cache) <= 16
+    assert cache.hits + cache.misses == 8 * 2000
+
+
+@pytest.mark.slow
+def test_engine_threaded_steps_stress():
+    mats = _mats(6, seed0=1500, n_rows=128, nnz=400)
+    engine = SparseKernelEngine(arena_slots=4)
+    errors = []
+
+    def serve(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(50):
+                picks = rng.choice(len(mats), size=2, replace=False)
+                engine.step([KernelRequest(mats[i]) for i in picks])
+        except Exception as e:      # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=serve, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    s = engine.stats()
+    assert s["requests"] == 4 * 50 * 2
+    assert s["featurize_calls"] <= len(mats) * 4   # bounded re-featurization
+
+
+@pytest.mark.slow
+def test_arena_long_rotation_stress():
+    m = _mats(1, seed0=1600, n_rows=128, nnz=400)[0]
+    plan = plan_from_coo(m.rows, m.cols, (m.n_rows, m.n_cols), block_m=32,
+                         assume_unique=True)
+    arena = PlanArena(plan, n_slots=2)
+    prev = None
+    for i in range(500):
+        lease = arena.build(float(i + 1) * np.ones(m.nnz, np.float32))
+        if prev is not None:
+            # previous build intact until released (double-buffer invariant)
+            assert np.asarray(prev.matrix.data).max() == float(i)
+            prev.release()
+        prev = lease
+    prev.release()
+    assert arena.builds == 500 and arena.overruns == 0
