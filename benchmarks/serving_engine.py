@@ -19,6 +19,13 @@ loop:
 * **Warm start** — the populated cache round-trips through
   ``repro.serving.persist``; a restarted engine serves the repeated mix with
   zero featurizations (asserted via ``featurize_calls``).
+* **Mixed-platform traffic** — one engine fronts all three stock backends
+  (``tpu_interpret``, ``tpu_pallas``, ``cpu_ref``) and a single ``step()``
+  stream carries requests tagged per platform; per-backend requests/sec, hit
+  rate, and serve p50/p99 come straight from ``stats()["backends"]``.  The
+  scenario also restarts the engine from a *legacy* (version-1, pre-tag)
+  persistence file and asserts the default backend warm-starts with zero
+  featurizations.
 
 ``python benchmarks/serving_engine.py --quick`` runs a reduced protocol for
 smoke checks; ``python -m benchmarks.run serving`` runs the full one.
@@ -42,7 +49,7 @@ from repro.core.autotune import Autotuner, KernelAutotuner
 from repro.core.cognate import CostModelConfig, init_cost_model
 from repro.core.latent import zero_codec
 from repro.data import generate_matrix
-from repro.serving import KernelRequest, SparseKernelEngine
+from repro.serving import (KernelRequest, SparseKernelEngine, save_cache)
 
 FAMILIES = ("uniform", "banded", "powerlaw", "blockdiag")
 
@@ -186,6 +193,68 @@ def _bench_warm_start(rows, tuner, pool, batch: int):
     assert zero_featurize, "warm-started engine re-featurized known traffic"
 
 
+def _bench_mixed_platform(rows, tuner, n_steps: int, batch: int, pool):
+    """All three stock backends behind one engine, one ``step()`` stream.
+
+    Each step's micro-batch is split evenly across platform tags over a
+    repeated working set (so steady state is per-backend cache hits), with
+    a dense operand so every backend really executes its kernel.  Reports
+    per-backend requests/sec, hit rate, and serve p50/p99 from
+    ``stats()["backends"]``."""
+    platforms = ("tpu_interpret", "tpu_pallas", "cpu_ref")
+    per = batch // len(platforms)
+    rhs = np.random.default_rng(2).normal(size=(pool[0].n_cols, 64)) \
+        .astype(np.float32)
+    values = _values_for(pool)
+    # warm the (process-global) jit/compile caches on the same matrices via
+    # a throwaway engine, so the timed loop measures serving, not first-call
+    # compilation — the timed engine's own pattern caches still start cold
+    warmup = SparseKernelEngine(KernelAutotuner(tuner, cache_size=256))
+    warmup.step([KernelRequest(pool[p * per + j], values[p * per + j],
+                               "spmm", rhs, platform=plat)
+                 for p, plat in enumerate(platforms) for j in range(per)])
+    warmup.flush()
+    engine = SparseKernelEngine(KernelAutotuner(tuner, cache_size=256))
+    t0 = time.perf_counter()
+    for _ in range(n_steps):
+        reqs = [KernelRequest(pool[p * per + j], values[p * per + j],
+                              "spmm", rhs, platform=plat)
+                for p, plat in enumerate(platforms) for j in range(per)]
+        engine.step(reqs)
+    elapsed = time.perf_counter() - t0
+    engine.flush()
+    s = engine.stats()
+    for plat in platforms:
+        b = s["backends"][f"{plat}/spmm"]
+        rows.append((
+            f"serving/mixed/{plat}_requests_per_s",
+            f"{b['requests'] / elapsed:.0f}", "",
+            f"hit_rate={b['hit_rate']:.2f} "
+            f"serve_p50={b['serve']['p50_ms']:.2f}ms "
+            f"p99={b['serve']['p99_ms']:.2f}ms"))
+    assert set(s["backends"]) == {f"{p}/spmm" for p in platforms}, \
+        "mixed stream did not reach all three backends"
+
+    # legacy (pre-tag, version-1) persistence file: still warm-starts the
+    # default backend with zero featurizations
+    path = os.path.join(tempfile.mkdtemp(prefix="serving_bench_"),
+                        "legacy_cache.npz")
+    kt = KernelAutotuner(tuner, cache_size=256)
+    kt.get_batch(pool[:per])
+    save_cache(kt.cache, path, version=1)
+    engine2 = SparseKernelEngine(KernelAutotuner(tuner, cache_size=256),
+                                 persist_path=path)
+    engine2.step([KernelRequest(pool[i], values[i]) for i in range(per)])
+    engine2.flush()
+    s2 = engine2.stats()
+    rows.append(("serving/mixed/legacy_warm_start_entries",
+                 f"{s2['warm_start_entries']}", "",
+                 f"v1 file -> default backend; repeat traffic "
+                 f"featurize_calls={s2['featurize_calls']}"))
+    assert s2["featurize_calls"] == 0, \
+        "legacy warm-started engine re-featurized known traffic"
+
+
 def run(quick: bool = False):
     rows = []
     batch = 32
@@ -200,6 +269,8 @@ def run(quick: bool = False):
     for mix in ("repeated", "shifting", "cold"):
         _bench_mix(rows, mix, tuner, n_steps, batch, pool)
     _bench_warm_start(rows, tuner, pool, batch)
+    _bench_mixed_platform(rows, tuner, n_steps=4 if quick else 12,
+                          batch=12, pool=pool)
     common.emit(rows)
     if speedup < 3.0:
         print(f"# WARNING: batched-miss speedup {speedup:.1f}x below 3x bar")

@@ -1,19 +1,27 @@
 """MoE dispatch served through ``repro.serving.SparseKernelEngine`` — the
-COGNATE deployment loop as a batched, double-buffered, warm-startable
-serving runtime driving a real Pallas kernel.
+COGNATE deployment loop as a batched, double-buffered, warm-startable,
+*multi-backend* serving runtime driving a real Pallas kernel.
 
 The token->expert dispatch pattern is built directly in element COO (with
 d_model == 128, the BSR lane width, every (token, routed expert) pair is one
-(block_m x 128) block column).  Each engine step serves a *micro-batch* of
-dispatch requests: routing patterns repeat across steps (steady-state
-serving), so after first sighting a pattern's featurization, tile config,
-and BSR construction plan all come from the pattern-keyed LRU — cache misses
-within a step are scored in ONE batched cost-model dispatch, and each
-request's value scatter lands in a double-buffered plan arena slot so the
-next batch's host-side build can overlap this batch's in-flight kernel.
+(block_m x 128) block column).  The script walks the engine through its
+whole surface:
 
-The run then persists the tuned cache and restarts the engine from disk:
-the warm-started engine serves the same traffic with ZERO featurizations.
+1. **Cold serving** — each ``step`` serves a micro-batch of dispatch
+   requests; routing patterns repeat across steps, so after first sighting,
+   a pattern's featurization, tile config, and BSR construction plan all
+   come from the pattern-keyed LRU.  Misses within a step are scored in ONE
+   batched cost-model dispatch, and each request's value scatter lands in a
+   double-buffered plan arena slot so the next batch's host-side build can
+   overlap this batch's in-flight kernel.
+2. **Shadow verification on a second backend** — the same requests are
+   re-routed to the ``cpu_ref`` backend (the pure-jnp oracle) through the
+   *same engine* via ``KernelRequest(..., platform="cpu_ref")``; outputs
+   must match the Pallas backend's, and the per-backend section of
+   ``stats()`` shows both tags with independent caches.
+3. **Warm restart** — the engine persists every backend's cache to one
+   namespaced file and restarts from it: the warm-started engine serves the
+   same traffic with ZERO featurizations on every backend.
 
 Run:  PYTHONPATH=src python examples/moe_kernel_serving.py
 """
@@ -114,18 +122,38 @@ def main():
     assert s["featurize_calls"] == n_routing_patterns
     assert s["misses"] == n_routing_patterns
     assert s["hits"] == n_steps * reqs_per_step - n_routing_patterns
+
+    # shadow-verify on a second backend through the SAME engine: route each
+    # routing pattern to the pure-jnp reference (platform="cpu_ref") and
+    # compare against the Pallas backend's output.  cpu_ref keeps its own
+    # pattern cache, so these are fresh (heuristic) tunings, not hits.
+    x = rng.normal(size=(T, D)).astype(np.float32)
+    for topk in routings:
+        _, pallas_req = make_request(topk, x, T, E, D, K, w_dev)
+        shadow_req = KernelRequest(pallas_req.mat, pallas_req.values,
+                                   "spmm", w_dev, platform="cpu_ref")
+        pallas_out, ref_out = (np.asarray(r.output)
+                               for r in engine.step([pallas_req, shadow_req]))
+        err = np.abs(pallas_out[:T] - ref_out[:T]).max()
+        assert err < 1e-3, err
+    engine.flush()
+    s = engine.stats()
+    per_backend = {tag: b["requests"] for tag, b in s["backends"].items()}
+    print(f"shadow verify: per-backend requests {per_backend}")
+    assert per_backend["cpu_ref/spmm"] == n_routing_patterns
+    assert s["featurize_calls"] == 2 * n_routing_patterns  # one per backend
     engine.save()
 
     # restart: a warm-started engine re-serves known traffic with zero
-    # featurizations — the persisted (digest -> config + plan) map replaces
-    # re-tuning entirely.
+    # featurizations — the persisted, backend-namespaced (digest -> config +
+    # plan) map replaces re-tuning entirely, for BOTH backends' caches.
     engine2 = SparseKernelEngine(persist_path=cache_path)
     serve(engine2, "warm")
     s2 = engine2.stats()
     print(f"warm engine: warm_start_entries={s2['warm_start_entries']}, "
           f"featurize_calls={s2['featurize_calls']}, "
           f"hit_rate={s2['hit_rate']:.2f}")
-    assert s2["warm_start_entries"] == n_routing_patterns
+    assert s2["warm_start_entries"] == 2 * n_routing_patterns  # both backends
     assert s2["featurize_calls"] == 0
     assert s2["misses"] == 0
     print("MoE-dispatch-through-serving-engine OK")

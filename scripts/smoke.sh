@@ -1,13 +1,69 @@
 #!/usr/bin/env bash
 # Smoke check: the tier-1 suite plus the serving stack, so the
 # pattern -> tuned-kernel fast path (format conversion, autotune cache,
-# Pallas SpMM) and the serving engine (batched scoring, plan arena, cache
-# persistence) can't silently rot. Run from the repo root:
+# Pallas SpMM) and the serving engine (batched scoring, multi-backend
+# dispatch, plan arena, cache persistence) can't silently rot — plus a docs
+# check so README/docs never reference files, modules, or benchmark names
+# that no longer exist. Run from the repo root:
 #   bash scripts/smoke.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== docs reference check =="
+python - <<'EOF'
+"""README/docs must reference real files, importable modules, and
+registered benchmark names."""
+import re
+import sys
+from pathlib import Path
+
+failures = []
+doc_files = [Path("README.md"), *sorted(Path("docs").glob("*.md"))]
+top_dirs = ("src/", "benchmarks/", "examples/", "tests/", "docs/",
+            "scripts/")
+
+# 1. every repo-path-looking token in the docs exists on disk
+path_re = re.compile(r"[A-Za-z0-9_./-]+\.(?:py|md|sh|ini|txt)\b")
+for doc in doc_files:
+    for tok in path_re.findall(doc.read_text()):
+        if tok.startswith(top_dirs) or ("/" not in tok and tok.endswith(".md")):
+            if not Path(tok).exists():
+                failures.append(f"{doc}: references missing file {tok}")
+
+# 2. documented modules import
+for mod in ("repro.serving", "repro.serving.backends", "repro.serving.engine",
+            "repro.serving.persist", "repro.serving.arena",
+            "repro.serving.telemetry", "repro.core.autotune",
+            "repro.kernels.ops", "repro.kernels.ref"):
+    try:
+        __import__(mod)
+    except Exception as e:
+        failures.append(f"documented module {mod} failed to import: {e}")
+
+# 3. documented entry points resolve
+try:
+    from repro.serving import (BackendRegistry, KernelBackend, KernelRequest,
+                               SparseKernelEngine, default_registry,
+                               load_grouped, save_backends)
+    reg = default_registry()
+    for plat in ("tpu_interpret", "tpu_pallas", "cpu_ref"):
+        reg.get(plat, "spmm")
+except Exception as e:
+    failures.append(f"documented serving API broken: {e}")
+
+# 4. benchmark names named in the docs are registered in benchmarks/run.py
+run_py = Path("benchmarks/run.py").read_text()
+for name in ("serving", "bsr_preproc", "fig4", "kernel"):
+    if f'("{name}"' not in run_py:
+        failures.append(f"documented benchmark {name!r} not in benchmarks/run.py")
+
+if failures:
+    print("\n".join(failures))
+    sys.exit(1)
+print(f"docs OK: {len(doc_files)} files checked")
+EOF
 
 echo "== tier-1 tests =="
 python -m pytest -x -q

@@ -61,9 +61,18 @@ def _coord_bytes(a) -> bytes:
 
 
 def pattern_digest(rows, cols, shape) -> str:
-    """Stable digest of a sparsity pattern (coordinates + logical shape).
-    Dtype-insensitive: int32 and int64 views of the same coordinates digest
-    equal, and the int32 fast path hashes the array's own buffer."""
+    """Stable sha1 digest of a sparsity pattern (coordinates + logical shape).
+
+    Args:
+        rows, cols: integer coordinate arrays (any dtype; int32 and int64
+            views of the same coordinates digest equal, and the int32 fast
+            path hashes the array's own buffer with no copy).
+        shape: the ``(n_rows, n_cols)`` logical shape.
+
+    Returns:
+        A 40-char hex string — the key every serving-layer cache
+        (``AutotuneCache``, ``StatsMemo``, persistence files) uses for this
+        pattern.  Pure function of its inputs; safe from any thread."""
     h = hashlib.sha1()
     h.update(np.asarray(shape, np.int64).tobytes())
     h.update(_coord_bytes(rows))
@@ -340,6 +349,13 @@ class KernelAutotuner:
         self.cache = AutotuneCache(cache_size)
         self.featurize_calls = 0
 
+    @property
+    def space(self):
+        """The learned tuner's config space, or ``None`` when running on the
+        structural heuristic (what ``repro.serving.backends`` surfaces as a
+        backend's config space)."""
+        return self.tuner.space if self.tuner is not None else None
+
     @staticmethod
     def _kernel_kwargs(cfg: dict) -> dict:
         """Learned-space config row -> kwargs for ``repro.kernels.ops``."""
@@ -364,8 +380,21 @@ class KernelAutotuner:
         return entry
 
     def get(self, mat: SparseMatrix, op: str = "spmm") -> TunedKernel:
-        """Cached pattern -> (config, BsrPlan). A repeated pattern is served
-        without re-featurizing or re-sorting its coordinates."""
+        """Cached pattern -> tuned kernel entry.
+
+        Args:
+            mat: the sparsity pattern (``SparseMatrix``) to tune for.
+            op: ``"spmm"`` or ``"sddmm"`` — part of the cache key, so one
+                tuner can serve both ops without collisions.
+
+        Returns:
+            The ``TunedKernel`` (config + prebuilt ``BsrPlan``) for this
+            pattern.  A repeated pattern is served without re-featurizing
+            or re-sorting its coordinates.
+
+        Thread-safety: safe from concurrent callers — the cache is
+        lock-guarded; two racing misses on one pattern may both featurize
+        (last insert wins) but never corrupt the cache."""
         digest = matrix_digest(mat)
         entry = self.cache.get((op, digest))
         if entry is None:
@@ -377,10 +406,22 @@ class KernelAutotuner:
                   digests: list[str] | None = None) -> list[TunedKernel]:
         """Batched ``get``: all cache misses are featurized and scored in a
         single ``Autotuner.scores_batch`` dispatch (one jitted embed + score
-        for the whole batch instead of one per miss).  Duplicate patterns
-        within the batch are tuned once.  ``featurize_calls`` still counts
-        one per *unique* pattern actually featurized, so warm-start
-        accounting is unchanged."""
+        for the whole batch instead of one per miss).
+
+        Args:
+            mats: patterns to tune, one per request.
+            op: the kernel op (one per call — ``SparseKernelEngine``
+                partitions mixed-op batches before calling this).
+            digests: precomputed ``matrix_digest`` values aligned with
+                ``mats`` (computed here when omitted).
+
+        Returns:
+            ``TunedKernel`` entries aligned with ``mats``.  Duplicate
+            patterns within the batch are tuned once and share one entry.
+            ``featurize_calls`` counts one per *unique* pattern actually
+            featurized, so warm-start accounting is unchanged.
+
+        Thread-safety: same guarantees as ``get``."""
         if digests is None:
             digests = [matrix_digest(m) for m in mats]
         out: list[TunedKernel | None] = [None] * len(mats)

@@ -66,6 +66,13 @@ class BsrPlan:
     ``take``/``slot``/``rloc``/``cloc`` scatter the caller's values array
     (aligned with the rows/cols the plan was built from) into block data:
     ``data[slot[i], rloc[i], cloc[i]] = values[take[i]]``.
+
+    Thread-safety: the scatter arrays are immutable after construction, so
+    concurrent ``scatter_into``/``wrap`` calls into *caller-owned* buffers
+    are safe.  ``build(..., reuse=True)`` and ``build_data(reuse=True)``
+    share one plan-owned buffer and must be externally serialized — serving
+    code uses ``repro.serving.arena.PlanArena`` (per-slot buffers plus
+    leases) instead of ``reuse`` for exactly this reason.
     """
     rowids: np.ndarray      # (nnzb,) int32, sorted by (block-row, block-col)
     colids: np.ndarray      # (nnzb,) int32

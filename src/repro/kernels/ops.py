@@ -11,6 +11,7 @@ vectorized O(nnz) path); they are re-exported here for compatibility.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.kernels.format import (BsrMatrix, BsrPlan, bsr_from_blocks,
@@ -18,6 +19,20 @@ from repro.kernels.format import (BsrMatrix, BsrPlan, bsr_from_blocks,
 from repro.kernels.sddmm import BW, sddmm_pallas
 from repro.kernels.spmm import BK, spmm_pallas
 from repro.kernels import ref
+
+
+def resolve_interpret(interpret: bool = True) -> bool:
+    """Resolve a requested Pallas execution mode against the actual device.
+
+    ``interpret=False`` (compiled Mosaic) is only honoured when JAX is
+    backed by a TPU; everywhere else the kernels run in Pallas interpreter
+    mode, which executes the same dataflow on any backend.  Callers that
+    want "compiled where possible" pass ``False`` and let this helper
+    degrade gracefully on CPU-only hosts (e.g. CI containers).
+    """
+    if interpret:
+        return True
+    return jax.default_backend() != "tpu"
 
 
 def spmm(a: BsrMatrix, b, *, block_n: int = 128, n_major: bool = True,

@@ -5,6 +5,14 @@ All oracles operate on the same flattened BSR representation the kernels use:
   rowids  (nnzb,)         — block-row index of each block (sorted)
   colids  (nnzb,)         — block-col index of each block
 Every block-row has at least one entry (empty rows carry a zero pad block).
+
+Beyond testing, these are also a *serving backend*: ``repro.serving.backends.
+cpu_ref_backend`` registers them under the ``cpu_ref`` platform tag, so a
+``SparseKernelEngine`` can route requests to a tile-parameter-free reference
+path — e.g. for shadow-verifying accelerator outputs in production, or for
+serving on hosts with no Pallas support at all.  They take no tile
+parameters: the only structural knob is the plan's ``block_m``, fixed when
+the BSR plan is built.
 """
 from __future__ import annotations
 

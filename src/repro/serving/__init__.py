@@ -1,30 +1,40 @@
 """``repro.serving`` — the sparse-kernel serving runtime.
 
 COGNATE's deployment loop (featurize a sparsity pattern -> score program
-configurations with the transferred cost model -> launch the tuned Pallas
-kernel) is O(nnz) per request after PR 1, but production traffic is
-*batched, repetitive, and restartable*.  This subsystem owns that layer:
+configurations with the transferred cost model -> launch the tuned kernel)
+is O(nnz) per request after PR 1, but production traffic is *batched,
+repetitive, restartable — and heterogeneous across hardware*.  This
+subsystem owns that layer:
 
 * ``engine`` — ``SparseKernelEngine``: accepts a micro-batch of
-  ``KernelRequest`` (pattern, values, op[, dense operand]) per ``step``;
-  partitions it into cache hits and misses against the pattern-keyed LRU,
-  featurizes + scores **all** misses in one ``Autotuner.scores_batch``
-  dispatch (``KernelAutotuner.get_batch``), builds each request through a
-  double-buffered plan arena, and optionally executes the Pallas kernel with
-  the tuned tile config.  ``stats()`` renders the full telemetry picture.
+  ``KernelRequest`` (pattern, values, op[, dense operand][, platform tag])
+  per ``step``; partitions it per backend tag, then within each backend
+  into cache hits and misses against that backend's pattern-keyed LRU,
+  featurizes + scores **all** of a backend's misses in one
+  ``Autotuner.scores_batch`` dispatch (``KernelAutotuner.get_batch``),
+  builds each request through a double-buffered plan arena, and executes
+  through the backend's kernel with the tuned tile config.  ``stats()``
+  renders the full telemetry picture, including a per-backend section.
+* ``backends`` — ``BackendRegistry``: maps ``(platform, op)`` tags to
+  {kernel executor, ``KernelAutotuner``, config space} bundles.  Ships
+  ``tpu_pallas`` (compiled; degrades to interpreter off-TPU),
+  ``tpu_interpret``, and ``cpu_ref`` (the pure-jnp reference) — one engine
+  fronts them all, each with an isolated cache.
 * ``arena`` — ``PlanArena``: a two-slot (configurable) rotation of BSR
   scatter buffers per cached pattern, generalizing
   ``BsrPlan.build(reuse=True)``.  Batch N+1's host-side scatter overlaps
   batch N's in-flight kernel; slot-generation leases guarantee an alias is
   never overwritten while referenced (exhaustion raises ``ArenaOverrun`` and
   the engine falls back to an un-aliased build).
-* ``persist`` — atomic single-file serialization of the autotune cache
-  (digest -> tile config + BSR block structure) next to model checkpoints,
-  with the same commit discipline as ``repro.checkpoint.manager``.  A
-  serving restart warm-starts known traffic with **zero** featurizations and
-  zero coordinate sorts; torn or corrupted files fall back to a cold cache.
-* ``telemetry`` — hit rates, per-stage latency histograms (log-bucketed
-  p50/p99), eviction and arena-overflow counters.
+* ``persist`` — atomic single-file serialization of every backend's autotune
+  cache (platform-tag-namespaced digest -> tile config + BSR block
+  structure) next to model checkpoints, with the same commit discipline as
+  ``repro.checkpoint.manager``.  A serving restart warm-starts known traffic
+  on every backend with **zero** featurizations and zero coordinate sorts;
+  legacy single-backend files restore the default platform; torn or
+  corrupted files fall back to a cold cache.
+* ``telemetry`` — hit rates, per-stage and per-backend latency histograms
+  (log-bucketed p50/p99), eviction and arena-overflow counters.
 
 Typical use::
 
@@ -32,24 +42,34 @@ Typical use::
 
     engine = SparseKernelEngine(tuner, persist_path="ckpt/autotune.npz")
     for batch in traffic:                    # micro-batches of requests
-        responses = engine.step([KernelRequest(mat, values, "spmm", rhs)
-                                 for mat, values, rhs in batch])
+        responses = engine.step(
+            [KernelRequest(mat, values, "spmm", rhs, platform=tag)
+             for mat, values, rhs, tag in batch])
     engine.save()                            # warm-start the next restart
 
 ``benchmarks/serving_engine.py`` measures steady-state requests/sec and
-p50/p99 against the one-pattern-at-a-time loop; ``examples/
-moe_kernel_serving.py`` drives the engine with MoE dispatch traffic.  This
-is the seam later scaling work (multi-backend dispatch, sharded serving)
-plugs into.
+p50/p99 against the one-pattern-at-a-time loop, including a mixed-platform
+scenario driving all three stock backends through one ``step()`` stream;
+``examples/moe_kernel_serving.py`` drives the engine with MoE dispatch
+traffic and shadow-verifies it on ``cpu_ref``.  See ``docs/serving.md`` for
+the full request lifecycle, persistence format, and how to add a backend.
 """
 from repro.serving.arena import ArenaLease, ArenaOverrun, PlanArena
+from repro.serving.backends import (DEFAULT_PLATFORM, BackendRegistry,
+                                    KernelBackend, cpu_ref_backend,
+                                    default_registry, pallas_backend)
 from repro.serving.engine import (KernelRequest, KernelResponse,
                                   SparseKernelEngine)
-from repro.serving.persist import (CACHE_FORMAT_VERSION, load_cache,
-                                   save_cache, warm_start)
+from repro.serving.persist import (CACHE_FORMAT_VERSION, GroupedCacheLoad,
+                                   LEGACY_NAMESPACE, load_cache,
+                                   load_grouped, save_backends, save_cache,
+                                   warm_start)
 from repro.serving.telemetry import EngineTelemetry, LatencyHistogram
 
 __all__ = ["SparseKernelEngine", "KernelRequest", "KernelResponse",
+           "BackendRegistry", "KernelBackend", "DEFAULT_PLATFORM",
+           "pallas_backend", "cpu_ref_backend", "default_registry",
            "PlanArena", "ArenaLease", "ArenaOverrun",
-           "save_cache", "load_cache", "warm_start", "CACHE_FORMAT_VERSION",
-           "EngineTelemetry", "LatencyHistogram"]
+           "save_cache", "save_backends", "load_cache", "load_grouped",
+           "warm_start", "CACHE_FORMAT_VERSION", "LEGACY_NAMESPACE",
+           "GroupedCacheLoad", "EngineTelemetry", "LatencyHistogram"]

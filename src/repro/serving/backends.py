@@ -1,0 +1,239 @@
+"""Backend registry — one serving engine fronting many (platform, op) kernels.
+
+COGNATE's premise is that a single cost-model pipeline spans heterogeneous
+hardware; the serving analogue is a single engine spanning heterogeneous
+*kernel implementations*.  ``BackendRegistry`` maps a ``(platform, op)`` tag
+— e.g. ``("tpu_interpret", "spmm")`` or ``("cpu_ref", "sddmm")`` — to a
+``KernelBackend`` bundle:
+
+* an **executor** that launches the op for that platform (compiled Pallas,
+  Pallas interpreter, or the pure-jnp reference in ``repro.kernels.ref``),
+* a ``KernelAutotuner`` owning that backend's pattern-keyed cache (so the
+  same sparsity pattern tuned for two platforms yields two independent
+  entries — configs never cross-contaminate between backends), and
+* the **config space** the backend's tuner searches (``None`` for backends
+  with no tile knobs, like the reference path).
+
+``SparseKernelEngine.step`` partitions each micro-batch by tag, batches the
+misses *within* each backend's autotuner (one ``scores_batch`` dispatch per
+backend per step), executes through each backend's executor, and reports
+per-backend hit rates and latency quantiles.  ``repro.serving.persist``
+namespaces warm-start files by the platform tag so one file restores every
+backend's cache.
+
+Three concrete platforms ship by default (``default_registry``):
+
+``tpu_pallas``
+    Compiled Pallas kernels (Mosaic).  On hosts without a TPU this degrades
+    to interpreter execution via ``repro.kernels.ops.resolve_interpret`` —
+    the tag, tuner, and cache stay distinct so the routing and persistence
+    behaviour is identical to a real accelerator deployment.
+``tpu_interpret``
+    Pallas interpreter mode — same kernels, any JAX backend.
+``cpu_ref``
+    The pure-jnp oracles from ``repro.kernels.ref``.  No tile knobs; its
+    tuner runs the structural heuristic only to pick the plan's ``block_m``.
+
+Adding a backend is three lines (see ``docs/serving.md``)::
+
+    registry.register(KernelBackend("my_accel", "spmm", KernelAutotuner(),
+                                    run=my_executor, space=my_space))
+
+All registry operations are thread-safe for the engine's usage pattern:
+registration happens before serving; lookups afterwards are read-only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.core.autotune import Autotuner, KernelAutotuner
+from repro.kernels import ops
+
+__all__ = ["KernelBackend", "BackendRegistry", "DEFAULT_PLATFORM",
+           "pallas_backend", "cpu_ref_backend", "default_registry"]
+
+#: Platform tag requests without an explicit tag are routed to, and the
+#: namespace legacy (version-1) persistence files are loaded under.
+DEFAULT_PLATFORM = "tpu_interpret"
+
+
+@dataclasses.dataclass
+class KernelBackend:
+    """Everything the engine needs to serve one ``(platform, op)`` tag.
+
+    Args:
+        platform: backend tag, e.g. ``"tpu_pallas"`` — the routing key
+            carried by ``KernelRequest.platform`` and the namespace used by
+            the persistence format.
+        op: ``"spmm"`` or ``"sddmm"`` (anything ``run`` implements).
+        tuner: the backend's ``KernelAutotuner``.  Owns the pattern-keyed
+            LRU; two backends with distinct tuners never share entries.
+            Backends of one platform may share a tuner across ops (cache
+            keys already include the op).
+        run: executor ``(config, matrix, operand) -> output``.  ``config``
+            is the tuned kwargs dict from the backend's tuner, ``matrix``
+            the built ``BsrMatrix``; never called with ``operand=None``
+            (prepare-only requests skip execution).
+        space: the config space the tuner searches (informational —
+            ``None`` when the backend has no tile knobs).
+
+    Thread-safety: immutable after construction; ``run`` must be safe to
+    call from concurrent engine steps (the shipped executors are).
+    """
+    platform: str
+    op: str
+    tuner: KernelAutotuner
+    run: Callable
+    space: object = None
+
+    @property
+    def tag(self) -> tuple[str, str]:
+        return (self.platform, self.op)
+
+
+class BackendRegistry:
+    """Maps ``(platform, op)`` tags to ``KernelBackend`` bundles.
+
+    ``default_platform`` is where requests without an explicit tag (and
+    legacy single-backend persistence files) are routed.
+
+    Thread-safety: ``register`` before serving starts; all other methods
+    are read-only and safe under concurrent ``step`` calls.
+    """
+
+    def __init__(self, default_platform: str = DEFAULT_PLATFORM):
+        self.default_platform = default_platform
+        self._by_tag: dict[tuple[str, str], KernelBackend] = {}
+
+    def register(self, backend: KernelBackend) -> KernelBackend:
+        """Add (or replace) the backend under its ``(platform, op)`` tag."""
+        self._by_tag[backend.tag] = backend
+        return backend
+
+    def get(self, platform: str, op: str) -> KernelBackend:
+        """Resolve a tag; raises ``KeyError`` naming the known tags."""
+        be = self._by_tag.get((platform, op))
+        if be is None:
+            raise KeyError(
+                f"no backend registered for ({platform!r}, {op!r}); "
+                f"known tags: {sorted(self._by_tag)}")
+        return be
+
+    def __contains__(self, tag: tuple[str, str]) -> bool:
+        return tuple(tag) in self._by_tag
+
+    def __iter__(self):
+        return iter(self._by_tag.values())
+
+    def tags(self) -> list[tuple[str, str]]:
+        return sorted(self._by_tag)
+
+    def platforms(self) -> list[str]:
+        return sorted({p for p, _ in self._by_tag})
+
+    def tuners(self) -> list[KernelAutotuner]:
+        """Distinct tuners across all backends (shared tuners listed once)."""
+        seen: dict[int, KernelAutotuner] = {}
+        for be in self._by_tag.values():
+            seen.setdefault(id(be.tuner), be.tuner)
+        return list(seen.values())
+
+    def caches_by_platform(self) -> dict[str, list]:
+        """platform -> distinct ``AutotuneCache`` objects of its backends —
+        the unit ``repro.serving.persist.save_backends`` serializes."""
+        out: dict[str, dict[int, object]] = {}
+        for be in self._by_tag.values():
+            out.setdefault(be.platform, {}).setdefault(
+                id(be.tuner.cache), be.tuner.cache)
+        return {p: list(c.values()) for p, c in out.items()}
+
+
+# ------------------------------------------------------------ concrete backends
+
+def _as_kernel_tuner(tuner, cache_size: int) -> KernelAutotuner:
+    if isinstance(tuner, KernelAutotuner):
+        return tuner
+    return KernelAutotuner(tuner, cache_size=cache_size)
+
+
+def pallas_backend(op: str, tuner: Autotuner | KernelAutotuner | None = None,
+                   *, interpret: bool = True, platform: str | None = None,
+                   cache_size: int = 128) -> KernelBackend:
+    """Pallas kernel backend for ``op`` (``"spmm"`` | ``"sddmm"``).
+
+    ``interpret=False`` requests compiled Mosaic execution; off-TPU it
+    degrades to interpreter mode (``ops.resolve_interpret``) while keeping
+    its own tag/tuner/cache.  ``platform`` defaults to ``"tpu_interpret"``
+    or ``"tpu_pallas"`` accordingly.
+    """
+    platform = platform or ("tpu_interpret" if interpret else "tpu_pallas")
+    kt = _as_kernel_tuner(tuner, cache_size)
+    mode = ops.resolve_interpret(interpret)
+    if op == "spmm":
+        def run(config, matrix, operand):
+            return ops.spmm(matrix, jnp.asarray(operand),
+                            block_n=config["block_n"],
+                            n_major=config["n_major"], interpret=mode)
+    elif op == "sddmm":
+        def run(config, matrix, operand):
+            b, c = operand
+            return ops.sddmm(matrix, jnp.asarray(b), jnp.asarray(c),
+                             interpret=mode)
+    else:
+        raise ValueError(f"unknown op {op!r}")
+    return KernelBackend(platform, op, kt, run, kt.space)
+
+
+def cpu_ref_backend(op: str, tuner: KernelAutotuner | None = None,
+                    *, cache_size: int = 128) -> KernelBackend:
+    """Pure-jnp reference backend (platform tag ``"cpu_ref"``).
+
+    Executes ``repro.kernels.ops.spmm_ref`` / ``sddmm_ref``.  The reference
+    path has no tile knobs, so the tuned config only fixes the plan's
+    ``block_m``; by default the tuner is a heuristic ``KernelAutotuner``
+    (no cost-model dispatches at all).
+    """
+    kt = tuner if tuner is not None \
+        else KernelAutotuner(None, cache_size=cache_size)
+    if op == "spmm":
+        def run(config, matrix, operand):
+            return ops.spmm_ref(matrix, jnp.asarray(operand))
+    elif op == "sddmm":
+        def run(config, matrix, operand):
+            b, c = operand
+            return ops.sddmm_ref(matrix, jnp.asarray(b), jnp.asarray(c))
+    else:
+        raise ValueError(f"unknown op {op!r}")
+    return KernelBackend("cpu_ref", op, kt, run, space=None)
+
+
+def default_registry(tuner: Autotuner | KernelAutotuner | None = None,
+                     cache_size: int = 128,
+                     default_platform: str = DEFAULT_PLATFORM
+                     ) -> BackendRegistry:
+    """The stock three-platform registry the engine builds when handed no
+    explicit one: ``tpu_interpret`` and ``tpu_pallas`` (compiled; degrades
+    to interpret off-TPU) sharing the given learned tuner's cost model but
+    each owning an independent cache, plus the knob-free ``cpu_ref``
+    reference.  ``tuner`` (an ``Autotuner`` or prebuilt ``KernelAutotuner``)
+    becomes the *default platform's* tuner, so pre-registry code that
+    constructed ``SparseKernelEngine(KernelAutotuner(...))`` keeps observing
+    the same object's counters.
+    """
+    kt_default = _as_kernel_tuner(tuner, cache_size)
+    learned = kt_default.tuner
+    reg = BackendRegistry(default_platform)
+    for platform, interp in (("tpu_interpret", True), ("tpu_pallas", False)):
+        kt = kt_default if platform == default_platform \
+            else KernelAutotuner(learned, cache_size=cache_size)
+        for op in ("spmm", "sddmm"):
+            reg.register(pallas_backend(op, kt, interpret=interp,
+                                        platform=platform))
+    kt_ref = kt_default if default_platform == "cpu_ref" \
+        else KernelAutotuner(None, cache_size=cache_size)
+    for op in ("spmm", "sddmm"):
+        reg.register(cpu_ref_backend(op, kt_ref))
+    return reg

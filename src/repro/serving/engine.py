@@ -1,33 +1,48 @@
-"""``SparseKernelEngine`` — micro-batched serving of tuned sparse kernels.
+"""``SparseKernelEngine`` — micro-batched serving of tuned sparse kernels
+across multiple hardware backends.
 
-One ``step(requests)`` call serves a micro-batch of (pattern, values, op)
-requests through the COGNATE deployment loop with every stage amortized:
+One ``step(requests)`` call serves a micro-batch of (pattern, values, op
+[, platform]) requests through the COGNATE deployment loop with every stage
+amortized:
 
-1. **Partition** — each request's pattern is digested once and looked up in
-   the pattern-keyed autotune LRU.
-2. **Score** — all cache *misses* (per op) are featurized and scored in a
-   single ``Autotuner.scores_batch`` dispatch via ``KernelAutotuner.
-   get_batch``: one jitted embed+score round-trip for the whole batch instead
-   of one per pattern.  Hits skip featurization entirely.
+1. **Partition** — each request's pattern is digested once, its
+   ``(platform, op)`` tag resolved against the ``BackendRegistry`` (requests
+   without a tag go to the registry's default platform), and the batch is
+   split into one partition per backend.
+2. **Score** — within *each* backend, all cache misses are featurized and
+   scored in a single ``Autotuner.scores_batch`` dispatch via that backend's
+   ``KernelAutotuner.get_batch``: one jitted embed+score round-trip per
+   backend per step instead of one per pattern.  Hits skip featurization
+   entirely.  Backends never share cache entries — the same pattern tuned
+   for ``tpu_pallas`` and ``cpu_ref`` yields two independent entries.
 3. **Build** — values scatter through each pattern's cached ``BsrPlan`` into
-   a two-slot double-buffered ``PlanArena``: batch N+1's host-side scatter
-   lands in the slot batch N is *not* using, and slot-generation checks
-   guarantee an alias is never overwritten while its lease is held.  If a
-   pattern's arena is exhausted (more outstanding builds than slots), the
-   engine falls back to a fresh un-aliased allocation and counts it.
-4. **Execute** — requests carrying a dense operand are run through the
-   Pallas kernels (``ops.spmm`` / ``ops.sddmm``) with the tuned tile config;
-   operand-less requests are "prepare-only" (the caller launches later).
+   a two-slot double-buffered ``PlanArena`` (keyed per backend tag): batch
+   N+1's host-side scatter lands in the slot batch N is *not* using, and
+   slot-generation checks guarantee an alias is never overwritten while its
+   lease is held.  If a pattern's arena is exhausted (more outstanding
+   builds than slots), the engine falls back to a fresh un-aliased
+   allocation and counts it.
+4. **Execute** — requests carrying a dense operand run through their
+   backend's executor (compiled Pallas, Pallas interpreter, or the pure-jnp
+   reference) with the tuned tile config; operand-less requests are
+   "prepare-only" (the caller launches later).
 
 Batch N's leases are released only after batch N+1 is dispatched, so the
 engine is safe even when kernel launches are asynchronous.  ``stats()``
-renders hit rates, per-stage latency histograms (p50/p99), evictions, and
-persistence events from ``repro.serving.telemetry``.
+renders global hit rates, per-stage latency histograms (p50/p99), evictions,
+persistence events, and a per-backend section (requests, hit rate, serve
+p50/p99 for every ``platform/op`` tag that saw traffic).
 
-With ``persist_path`` set, the engine warm-starts its cache from disk at
-construction (zero featurizations for previously-seen traffic — torn or
-missing files fall back to a cold cache) and ``save()`` atomically writes it
-back via ``repro.serving.persist``.
+With ``persist_path`` set, the engine warm-starts every backend's cache from
+one namespaced file at construction (zero featurizations for
+previously-seen traffic; legacy single-backend files restore the default
+platform; entries whose tag no registered backend claims are skipped and
+counted — torn or missing files fall back to a cold cache) and ``save()``
+atomically writes all backends back via ``repro.serving.persist``.
+
+Thread-safety: ``step`` may be called from several threads; the caches,
+arenas, and telemetry are lock-guarded, and double-buffer leases are
+tracked per calling thread.
 """
 from __future__ import annotations
 
@@ -37,16 +52,16 @@ import time
 from collections import OrderedDict
 from pathlib import Path
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.autotune import (Autotuner, KernelAutotuner, TunedKernel,
                                  matrix_digest)
 from repro.data.matrices import SparseMatrix
-from repro.kernels import ops
 from repro.kernels.format import BsrMatrix
 from repro.serving.arena import ArenaLease, ArenaOverrun, PlanArena
-from repro.serving.persist import load_cache, save_cache
+from repro.serving.backends import BackendRegistry, default_registry
+from repro.serving.persist import (LEGACY_NAMESPACE, load_grouped,
+                                   save_backends)
 from repro.serving.telemetry import EngineTelemetry
 
 __all__ = ["KernelRequest", "KernelResponse", "SparseKernelEngine"]
@@ -59,40 +74,87 @@ class KernelRequest:
     ``values`` aligns with ``mat.rows``/``mat.cols`` (defaults to ones —
     pattern-only traffic).  ``operand`` is the dense right-hand side: a (K, N)
     array for ``op="spmm"``, a ``(b, c)`` tuple for ``op="sddmm"``; ``None``
-    means prepare-only (tune + build, let the caller launch)."""
+    means prepare-only (tune + build, let the caller launch).  ``platform``
+    routes the request to that backend tag in the engine's registry
+    (``None`` -> the registry's default platform)."""
     mat: SparseMatrix
     values: np.ndarray | None = None
     op: str = "spmm"
     operand: object = None
+    platform: str | None = None
 
 
 @dataclasses.dataclass
 class KernelResponse:
+    """Per-request result: the tuned config, built BSR matrix, kernel output
+    (``None`` for prepare-only), and routing/caching provenance."""
     digest: str
     config: dict
     matrix: BsrMatrix
     output: object | None       # kernel result, or None for prepare-only
     cache_hit: bool
     arena_slot: bool            # False -> overflow fallback (fresh buffer)
+    platform: str = ""          # backend tag the request was served by
 
 
 class SparseKernelEngine:
-    """Batched, double-buffered, warm-startable sparse-kernel server."""
+    """Batched, double-buffered, warm-startable, multi-backend sparse-kernel
+    server.
+
+    Args:
+        tuner: a learned ``Autotuner`` or prebuilt ``KernelAutotuner`` for
+            the default platform (``None`` -> structural heuristic).  Only
+            consulted when ``backends`` is not given.
+        cache_size: per-backend autotune LRU capacity (default registry).
+        arena_slots: double-buffer depth per cached pattern.
+        persist_path: warm-start/save location for the namespaced cache file.
+        autosave_every: if set, ``save()`` runs every N batches.
+        interpret: selects the default platform of the stock registry —
+            ``True`` -> ``tpu_interpret``, ``False`` -> ``tpu_pallas``
+            (compiled; degrades to interpreter off-TPU).
+        backends: an explicit ``BackendRegistry``; overrides ``tuner``/
+            ``interpret``.  Register custom platforms here.
+
+    Thread-safety: all public methods are safe under concurrent callers;
+    see the module docstring for the per-thread lease protocol.
+    """
 
     def __init__(self, tuner: KernelAutotuner | Autotuner | None = None,
                  cache_size: int = 128, arena_slots: int = 2,
                  persist_path: str | Path | None = None,
-                 autosave_every: int | None = None, interpret: bool = True):
-        if isinstance(tuner, KernelAutotuner):
-            self.tuner = tuner
-        else:       # a learned Autotuner (or None -> structural heuristic)
-            self.tuner = KernelAutotuner(tuner, cache_size=cache_size)
+                 autosave_every: int | None = None, interpret: bool = True,
+                 backends: BackendRegistry | None = None):
+        if backends is None:
+            backends = default_registry(
+                tuner, cache_size=cache_size,
+                default_platform="tpu_interpret" if interpret
+                else "tpu_pallas")
+        elif tuner is not None:
+            raise ValueError("pass either a tuner or a backend registry, "
+                             "not both")
+        self.backends = backends
+        self.default_platform = backends.default_platform
+        # compat: the default platform's tuner (spmm if registered), what
+        # single-backend callers passed in and still introspect
+        # (featurize_calls, cache)
+        try:
+            self.tuner = backends.get(self.default_platform, "spmm").tuner
+        except KeyError:
+            default_bes = [be for be in backends
+                           if be.platform == backends.default_platform]
+            all_bes = default_bes or list(backends)
+            if not all_bes:
+                raise ValueError("backend registry has no backends")
+            self.tuner = all_bes[0].tuner
         self.arena_slots = arena_slots
-        self.interpret = interpret
         self.autosave_every = autosave_every
         self.telemetry = EngineTelemetry()
         self.persist_path = Path(persist_path) if persist_path else None
-        self._arenas: OrderedDict = OrderedDict()   # (op, digest) -> PlanArena
+        self._arenas: OrderedDict = OrderedDict()  # (plat, op, digest) -> arena
+        # arenas are keyed across ALL backends, so the LRU bound is the sum
+        # of the per-backend cache capacities — a max() here would thrash
+        # arenas as soon as the combined working set outgrew one backend's
+        self._arena_cap = sum(kt.cache.maxsize for kt in backends.tuners())
         # previous-batch leases are per *thread*: each serving stream double-
         # buffers independently, so one thread's step can never release (and
         # let the arena overwrite) a batch another thread's caller still
@@ -102,68 +164,120 @@ class SparseKernelEngine:
         self._outstanding = 0
         self._lock = threading.Lock()   # guards _arenas and _outstanding
         if self.persist_path is not None:
-            loaded = load_cache(self.persist_path)
-            if loaded is not None:      # an empty cache file is a valid load
-                for key, entry in loaded:
-                    self.tuner.cache.put(key, entry)
-                self.telemetry.count(warm_start_entries=len(loaded))
-            elif self.persist_path.exists():
+            self._warm_start()
+
+    def _warm_start(self) -> None:
+        """Route every persisted namespace to its registered backend."""
+        loaded = load_grouped(self.persist_path)
+        if loaded is None:
+            if self.persist_path.exists():
                 self.telemetry.count(persist_load_failures=1)
+            return
+        restored = 0
+        skipped = loaded.skipped
+        for tag, items in loaded.entries.items():
+            platform = self.default_platform if tag is LEGACY_NAMESPACE \
+                else tag
+            for (op, digest), entry in items:
+                if (platform, op) in self.backends:
+                    be = self.backends.get(platform, op)
+                    be.tuner.cache.put((op, digest), entry)
+                    restored += 1
+                else:                   # orphaned tag: serve it cold instead
+                    skipped += 1
+        self.telemetry.count(warm_start_entries=restored,
+                             warm_start_skipped=skipped)
 
     # ------------------------------------------------------------- serving
 
     def step(self, requests: list[KernelRequest]) -> list[KernelResponse]:
-        """Serve one micro-batch; returns responses in request order."""
+        """Serve one micro-batch; returns responses in request order.
+
+        Raises ``KeyError`` (before any work is done) if a request names a
+        ``(platform, op)`` tag with no registered backend."""
         t_step = time.perf_counter()
-        cache = self.tuner.cache
 
         t0 = time.perf_counter()
         digests = [matrix_digest(r.mat) for r in requests]
-        was_hit = [(r.op, d) in cache for r, d in zip(requests, digests)]
-        by_op: OrderedDict = OrderedDict()
+        groups: OrderedDict = OrderedDict()     # (platform, op) -> [indices]
         for i, r in enumerate(requests):
-            by_op.setdefault(r.op, []).append(i)
+            platform = r.platform or self.default_platform
+            groups.setdefault((platform, r.op), []).append(i)
+        resolved = {tag: self.backends.get(*tag) for tag in groups}
+        hit_of = {}                     # request index -> was it a cache hit
+        for tag, idxs in groups.items():
+            cache = resolved[tag].tuner.cache
+            for i in idxs:
+                hit_of[i] = (requests[i].op, digests[i]) in cache
         self.telemetry.record_stage("partition", time.perf_counter() - t0)
 
-        t0 = time.perf_counter()
-        hits0, misses0 = cache.hits, cache.misses
         entries: list[TunedKernel | None] = [None] * len(requests)
-        for op, idxs in by_op.items():
-            m0 = cache.misses
-            got = self.tuner.get_batch([requests[i].mat for i in idxs], op,
-                                       digests=[digests[i] for i in idxs])
+        built: list[tuple[BsrMatrix, bool] | None] = [None] * len(requests)
+        outputs: list[object | None] = [None] * len(requests)
+        leases: list[ArenaLease] = []
+        score_s = build_s = exec_s = 0.0
+        total_hits = total_misses = 0
+        for tag, idxs in groups.items():
+            be = resolved[tag]
+            t0 = time.perf_counter()
+            got = be.tuner.get_batch([requests[i].mat for i in idxs],
+                                     tag[1],
+                                     digests=[digests[i] for i in idxs])
             for i, e in zip(idxs, got):
                 entries[i] = e
-            if cache.misses > m0:
+            dt = time.perf_counter() - t0
+            score_s += dt
+            serve_s = dt
+            # step-local accounting from the partition-stage peek (the
+            # shared cache counters also move, but deltas on those would
+            # cross-contaminate between concurrent steps)
+            d_hits = sum(hit_of[i] for i in idxs)
+            d_misses = len(idxs) - d_hits
+            total_hits += d_hits
+            total_misses += d_misses
+            if d_misses:
                 self.telemetry.count(score_dispatches=1)
-        self.telemetry.record_stage("score", time.perf_counter() - t0)
-        self.telemetry.count(hits=cache.hits - hits0,
-                             misses=cache.misses - misses0)
 
-        t0 = time.perf_counter()
-        leases: list[ArenaLease] = []
-        built: list[tuple[BsrMatrix, bool]] = []
-        for r, d, entry in zip(requests, digests, entries):
-            values = r.values if r.values is not None \
-                else np.ones(r.mat.nnz, np.float32)
-            arena = self._arena_for((r.op, d), entry)
-            try:
-                lease = arena.build(values)
-                leases.append(lease)
-                built.append((lease.matrix, True))
-            except ArenaOverrun:
-                self.telemetry.count(arena_fallbacks=1)
-                built.append((entry.plan.build(values), False))
-        self.telemetry.record_stage("build", time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            for i in idxs:
+                r, entry = requests[i], entries[i]
+                values = r.values if r.values is not None \
+                    else np.ones(r.mat.nnz, np.float32)
+                arena = self._arena_for(tag + (digests[i],), entry)
+                try:
+                    lease = arena.build(values)
+                    leases.append(lease)
+                    built[i] = (lease.matrix, True)
+                except ArenaOverrun:
+                    self.telemetry.count(arena_fallbacks=1)
+                    built[i] = (entry.plan.build(values), False)
+            dt = time.perf_counter() - t0
+            build_s += dt
+            serve_s += dt
 
-        t0 = time.perf_counter()
-        responses = []
-        for r, d, entry, (matrix, in_arena), hit in zip(
-                requests, digests, entries, built, was_hit):
-            output = self._execute(r, entry, matrix)
-            responses.append(KernelResponse(d, entry.config, matrix, output,
-                                            hit, in_arena))
-        self.telemetry.record_stage("execute", time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            for i in idxs:
+                r = requests[i]
+                if r.operand is not None:
+                    outputs[i] = be.run(entries[i].config, built[i][0],
+                                        r.operand)
+            dt = time.perf_counter() - t0
+            exec_s += dt
+            serve_s += dt
+            self.telemetry.record_backend(
+                "/".join(tag), requests=len(idxs), hits=d_hits,
+                misses=d_misses, seconds=serve_s)
+
+        self.telemetry.record_stage("score", score_s)
+        self.telemetry.record_stage("build", build_s)
+        self.telemetry.record_stage("execute", exec_s)
+        self.telemetry.count(hits=total_hits, misses=total_misses)
+
+        responses = [
+            KernelResponse(d, entry.config, matrix, output, hit_of[i],
+                           in_arena, r.platform or self.default_platform)
+            for i, (r, d, entry, (matrix, in_arena), output) in enumerate(
+                zip(requests, digests, entries, built, outputs))]
 
         # this stream's batch N-1 kernels were dispatched a full step ago —
         # its slots can rotate now that batch N is in flight (double-buffer
@@ -178,21 +292,6 @@ class SparseKernelEngine:
             self.save()
         return responses
 
-    def _execute(self, r: KernelRequest, entry: TunedKernel,
-                 matrix: BsrMatrix):
-        if r.operand is None:
-            return None
-        cfg = entry.config
-        if r.op == "spmm":
-            return ops.spmm(matrix, jnp.asarray(r.operand),
-                            block_n=cfg["block_n"], n_major=cfg["n_major"],
-                            interpret=self.interpret)
-        if r.op == "sddmm":
-            b, c = r.operand
-            return ops.sddmm(matrix, jnp.asarray(b), jnp.asarray(c),
-                             interpret=self.interpret)
-        raise ValueError(f"unknown op {r.op!r}")
-
     def _arena_for(self, key, entry: TunedKernel) -> PlanArena:
         with self._lock:
             arena = self._arenas.get(key)
@@ -200,7 +299,7 @@ class SparseKernelEngine:
                 arena = PlanArena(entry.plan, n_slots=self.arena_slots)
                 self._arenas[key] = arena
             self._arenas.move_to_end(key)
-            while len(self._arenas) > max(self.tuner.cache.maxsize, 1):
+            while len(self._arenas) > max(self._arena_cap, 1):
                 self._arenas.popitem(last=False)
             return arena
 
@@ -222,11 +321,27 @@ class SparseKernelEngine:
 
     @property
     def featurize_calls(self) -> int:
-        return self.tuner.featurize_calls
+        """Total featurize+score computations across every backend's tuner
+        (shared tuners counted once) — zero on fully warm-started traffic."""
+        return sum(kt.featurize_calls for kt in self.backends.tuners())
 
     def stats(self) -> dict:
+        """Snapshot of all counters: global hit rates, per-stage latency
+        histograms, a ``"backends"`` section keyed ``"platform/op"`` with
+        per-backend requests / hit rate / serve p50-p99, cache and arena
+        occupancy, and persistence events.  ``"cache"`` is the *default*
+        backend's cache (pre-registry compat); ``"caches"`` reports every
+        platform's occupancy and eviction counters.  Safe to call
+        concurrently with ``step``."""
         out = self.telemetry.snapshot(cache=self.tuner.cache)
-        out["featurize_calls"] = self.tuner.featurize_calls
+        out["featurize_calls"] = self.featurize_calls
+        out["caches"] = {}
+        for plat, caches in self.backends.caches_by_platform().items():
+            for j, c in enumerate(caches):
+                key = plat if len(caches) == 1 else f"{plat}[{j}]"
+                out["caches"][key] = {
+                    "size": len(c), "maxsize": c.maxsize, "hits": c.hits,
+                    "misses": c.misses, "evictions": c.evictions}
         with self._lock:
             out["arenas"] = {"resident": len(self._arenas),
                              "outstanding_leases": self._outstanding}
@@ -235,10 +350,11 @@ class SparseKernelEngine:
     # --------------------------------------------------------- persistence
 
     def save(self, path: str | Path | None = None) -> Path:
-        """Atomically persist the autotune cache (digest -> config + plan)."""
+        """Atomically persist every backend's autotune cache (platform-tag
+        namespaced digest -> config + plan) to one file."""
         target = Path(path) if path is not None else self.persist_path
         if target is None:
             raise ValueError("no persist_path configured and none given")
-        out = save_cache(self.tuner.cache, target)
+        out = save_backends(self.backends, target)
         self.telemetry.count(persist_saves=1)
         return out

@@ -1,14 +1,26 @@
 """Autotune-cache persistence — warm-start serving across restarts.
 
-Serializes a populated ``AutotuneCache`` (digest -> tuned config + the
+Serializes populated ``AutotuneCache``s (digest -> tuned config + the
 ``BsrPlan`` block structure) to a single ``.npz`` next to model checkpoints,
 using the same atomic-commit discipline as ``repro.checkpoint.manager``:
 write to ``<path>.tmp``, flush + fsync, then ``os.replace`` into place — a
 preempted save can never produce a torn cache file, and ``os.replace`` over
 an existing file makes repeated saves safe.
 
-Restore is strictly best-effort: any defect (missing file, truncated/garbled
-npz, version mismatch, inconsistent arrays) logs and returns ``None`` so the
+**Backend namespacing (format version 2).**  One file holds the caches of
+*every* backend an engine fronts: each manifest entry carries the backend's
+platform tag (``"tpu_pallas"``, ``"cpu_ref"``, ...) alongside its
+``(op, digest)`` key, so a multi-backend engine restores each backend's
+entries into that backend's own cache with one load.  Entries without a tag
+— version-1 files (the pre-registry single-backend format) and tag-less
+``save_cache`` output — surface under the ``LEGACY_NAMESPACE`` key and the
+restoring engine maps them to its *own* default backend.
+Entries whose tag no backend claims, or whose arrays fail validation, are
+*individually* skipped (counted in ``GroupedCacheLoad.skipped``) — one bad
+or orphaned entry never costs the rest of the file.
+
+Restore is strictly best-effort: a structurally unreadable file (missing,
+truncated/garbled npz, unknown version) logs and returns ``None`` so the
 caller starts cold instead of crashing — a serving process must come up even
 when its cache file was torn by the failure that restarted it.
 
@@ -18,6 +30,7 @@ after restart is already the steady-state O(nnz) value scatter.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import warnings
@@ -29,31 +42,49 @@ from repro.core.autotune import AutotuneCache, KernelAutotuner, TunedKernel
 from repro.kernels.format import BsrPlan
 from repro.kernels.spmm import BK
 
-__all__ = ["CACHE_FORMAT_VERSION", "save_cache", "load_cache", "warm_start"]
+__all__ = ["CACHE_FORMAT_VERSION", "LEGACY_NAMESPACE", "GroupedCacheLoad",
+           "save_cache", "save_backends", "load_cache", "load_grouped",
+           "warm_start"]
 
-CACHE_FORMAT_VERSION = 1
+CACHE_FORMAT_VERSION = 2
+
+#: Namespace key ``load_grouped`` files version-1 (pre-tag) entries under;
+#: callers route it to their default backend.
+LEGACY_NAMESPACE = None
 
 _PLAN_ARRAYS = ("rowids", "colids", "take", "slot", "rloc", "cloc")
 
 
-def save_cache(cache: AutotuneCache, path: str | os.PathLike) -> Path:
-    """Atomically write ``cache`` to ``path`` (a ``.npz`` file)."""
-    path = Path(path)
+@dataclasses.dataclass
+class GroupedCacheLoad:
+    """Result of ``load_grouped``: per-namespace entries + skip accounting.
+
+    ``entries`` maps a platform tag (or ``LEGACY_NAMESPACE`` for
+    unnamespaced entries: version-1 files and tag-less ``save_cache``
+    output) to ``[((op, digest), TunedKernel), ...]`` in saved (LRU) order.
+    ``skipped`` counts individually-invalid entries dropped during load.
+    """
+    entries: dict
+    skipped: int = 0
+
+    def __len__(self):
+        return sum(len(v) for v in self.entries.values())
+
+
+def _flat_entries(grouped: dict) -> list[tuple]:
+    """{tag: cache | [caches]} -> [(tag, (op, digest), entry), ...]."""
+    flat = []
+    for tag, caches in grouped.items():
+        if isinstance(caches, AutotuneCache):
+            caches = [caches]
+        for cache in caches:
+            for key, e in cache.items():
+                flat.append((tag, key, e))
+    return flat
+
+
+def _atomic_savez(path: Path, arrays: dict) -> Path:
     path.parent.mkdir(parents=True, exist_ok=True)
-    entries = cache.items()
-    manifest = {"version": CACHE_FORMAT_VERSION, "entries": []}
-    arrays = {}
-    for i, ((op, digest), e) in enumerate(entries):
-        plan = e.plan
-        manifest["entries"].append({
-            "op": op, "digest": digest, "config": e.config,
-            "n_blockrows": plan.n_blockrows, "n_blockcols": plan.n_blockcols,
-            "block_m": plan.block_m,
-        })
-        for name in _PLAN_ARRAYS:
-            arrays[f"e{i}_{name}"] = getattr(plan, name)
-    arrays["manifest"] = np.frombuffer(
-        json.dumps(manifest).encode(), np.uint8)
     tmp = path.with_name(path.name + ".tmp")
     with open(tmp, "wb") as f:
         np.savez(f, **arrays)
@@ -63,44 +94,114 @@ def save_cache(cache: AutotuneCache, path: str | os.PathLike) -> Path:
     return path
 
 
-def load_cache(path: str | os.PathLike) -> list[tuple[tuple, TunedKernel]] | None:
-    """Read a persisted cache -> [(key, entry), ...] in saved (LRU) order.
+def _serialize(flat: list[tuple], path: Path, version: int) -> Path:
+    """[(tag, (op, digest), entry), ...] -> atomically committed ``.npz``.
+    ``version=1`` omits the per-entry backend tag (the legacy format)."""
+    manifest = {"version": version, "entries": []}
+    arrays = {}
+    for i, (tag, (op, digest), e) in enumerate(flat):
+        plan = e.plan
+        m = {"op": op, "digest": digest, "config": e.config,
+             "n_blockrows": plan.n_blockrows,
+             "n_blockcols": plan.n_blockcols, "block_m": plan.block_m}
+        if version >= 2:
+            m["backend"] = tag
+        manifest["entries"].append(m)
+        for name in _PLAN_ARRAYS:
+            arrays[f"e{i}_{name}"] = getattr(plan, name)
+    arrays["manifest"] = np.frombuffer(
+        json.dumps(manifest).encode(), np.uint8)
+    return _atomic_savez(path, arrays)
 
-    Returns ``None`` on *any* failure — absent file, torn/corrupted bytes,
-    unknown format version, internally inconsistent arrays — so callers fall
-    back to a cold cache."""
+
+def save_backends(grouped, path: str | os.PathLike) -> Path:
+    """Atomically write every backend's cache to one namespaced ``.npz``.
+
+    ``grouped`` is ``{platform_tag: AutotuneCache | [AutotuneCache, ...]}``
+    (the shape ``BackendRegistry.caches_by_platform`` returns) — a backend
+    registry itself also works.  Entries keep their in-cache ``(op, digest)``
+    keys; the platform tag is recorded per entry in the manifest.
+    """
+    if hasattr(grouped, "caches_by_platform"):      # a BackendRegistry
+        grouped = grouped.caches_by_platform()
+    return _serialize(_flat_entries(grouped), Path(path),
+                      CACHE_FORMAT_VERSION)
+
+
+def save_cache(cache: AutotuneCache, path: str | os.PathLike,
+               backend: str | None = None, *, version: int | None = None
+               ) -> Path:
+    """Atomically write a single cache to ``path`` (a ``.npz`` file).
+
+    With ``backend`` given, entries are namespaced under that platform tag.
+    Without it they are written *unnamespaced* (like legacy files), so a
+    restoring engine maps them to its **own** default platform, whatever
+    that is — exactly how pre-registry round-trips behaved.  ``version=1``
+    writes the legacy single-backend format byte-layout — useful for
+    compatibility tests and for producing files consumable by older code.
+    """
+    if version == 1:
+        return _serialize([(None, key, e) for key, e in cache.items()],
+                          Path(path), 1)
+    return save_backends({backend: cache}, path)
+
+
+def _decode_entry(data, i: int, m: dict) -> tuple:
+    """One manifest entry -> ((op, digest), TunedKernel); raises on defects."""
+    arrs = {name: data[f"e{i}_{name}"] for name in _PLAN_ARRAYS}
+    n_entries = arrs["take"].shape[0]
+    for name in _PLAN_ARRAYS[2:]:
+        if arrs[name].shape[0] != n_entries:
+            raise ValueError(f"entry {i}: ragged plan arrays")
+    if arrs["rowids"].shape != arrs["colids"].shape:
+        raise ValueError(f"entry {i}: ragged block ids")
+    nnzb = arrs["rowids"].shape[0]
+    if n_entries and (
+            arrs["slot"].min() < 0
+            or arrs["slot"].max() >= nnzb
+            or arrs["take"].min() < 0
+            or arrs["rloc"].min() < 0
+            or arrs["rloc"].max() >= int(m["block_m"])
+            or arrs["cloc"].min() < 0
+            or arrs["cloc"].max() >= BK):
+        raise ValueError(f"entry {i}: scatter index out of range")
+    plan = BsrPlan(n_blockrows=int(m["n_blockrows"]),
+                   n_blockcols=int(m["n_blockcols"]),
+                   block_m=int(m["block_m"]), **arrs)
+    entry = TunedKernel(m["digest"], m["op"], dict(m["config"]), plan)
+    return (m["op"], m["digest"]), entry
+
+
+def load_grouped(path: str | os.PathLike) -> GroupedCacheLoad | None:
+    """Read a persisted cache file into per-backend namespaces.
+
+    Version-2 entries land under their recorded platform tag; version-1
+    entries (no tags) land under ``LEGACY_NAMESPACE``.  Individually broken
+    entries are dropped and counted in ``.skipped`` (version 2) — the rest
+    of the file still loads.  Returns ``None`` only when the file as a
+    whole is unreadable (absent, torn zip, bad manifest, unknown version),
+    so callers fall back to a cold cache.
+    """
     path = Path(path)
     try:
         with np.load(path) as data:
             manifest = json.loads(bytes(data["manifest"]).decode())
-            if manifest.get("version") != CACHE_FORMAT_VERSION:
-                raise ValueError(
-                    f"unsupported cache version {manifest.get('version')}")
-            out = []
+            version = manifest.get("version")
+            if version not in (1, CACHE_FORMAT_VERSION):
+                raise ValueError(f"unsupported cache version {version}")
+            out = GroupedCacheLoad(entries={})
             for i, m in enumerate(manifest["entries"]):
-                arrs = {name: data[f"e{i}_{name}"] for name in _PLAN_ARRAYS}
-                n_entries = arrs["take"].shape[0]
-                for name in _PLAN_ARRAYS[2:]:
-                    if arrs[name].shape[0] != n_entries:
-                        raise ValueError(f"entry {i}: ragged plan arrays")
-                if arrs["rowids"].shape != arrs["colids"].shape:
-                    raise ValueError(f"entry {i}: ragged block ids")
-                nnzb = arrs["rowids"].shape[0]
-                if n_entries and (
-                        arrs["slot"].min() < 0
-                        or arrs["slot"].max() >= nnzb
-                        or arrs["take"].min() < 0
-                        or arrs["rloc"].min() < 0
-                        or arrs["rloc"].max() >= int(m["block_m"])
-                        or arrs["cloc"].min() < 0
-                        or arrs["cloc"].max() >= BK):
-                    raise ValueError(f"entry {i}: scatter index out of range")
-                plan = BsrPlan(n_blockrows=int(m["n_blockrows"]),
-                               n_blockcols=int(m["n_blockcols"]),
-                               block_m=int(m["block_m"]), **arrs)
-                entry = TunedKernel(m["digest"], m["op"],
-                                    dict(m["config"]), plan)
-                out.append(((m["op"], m["digest"]), entry))
+                tag = m.get("backend") if version >= 2 else LEGACY_NAMESPACE
+                try:
+                    key, entry = _decode_entry(data, i, m)
+                except Exception as e:
+                    if version == 1:    # legacy: keep whole-file semantics
+                        raise
+                    warnings.warn(f"autotune cache at {path}: skipping "
+                                  f"entry {i} ({e})")
+                    out.skipped += 1
+                    continue
+                out.entries.setdefault(tag, []).append((key, entry))
             return out
     except FileNotFoundError:
         return None
@@ -110,11 +211,37 @@ def load_cache(path: str | os.PathLike) -> list[tuple[tuple, TunedKernel]] | Non
         return None
 
 
-def warm_start(tuner: KernelAutotuner, path: str | os.PathLike) -> int:
-    """Populate ``tuner``'s cache from a persisted file.  Returns the number
-    of entries restored (0 on a cold/corrupted file).  Restored entries do
-    not count as featurizations or cache misses."""
-    loaded = load_cache(path)
+def load_cache(path: str | os.PathLike, backend: str | None = None
+               ) -> list[tuple[tuple, TunedKernel]] | None:
+    """Read one backend's entries -> [(key, entry), ...] in saved order.
+
+    An explicit ``backend`` returns *only* that platform's namespace —
+    legacy/unnamespaced entries are excluded, because they carry no claim
+    about which backend tuned them.  ``backend=None`` selects the default
+    namespace: unnamespaced entries (legacy version-1 files and tag-less
+    ``save_cache`` output) plus anything saved under the stock default
+    platform — exactly what pre-registry ``save_cache``/``load_cache``
+    round-trips produced.  Returns ``None`` when the file is unreadable
+    (callers start cold)."""
+    grouped = load_grouped(path)
+    if grouped is None:
+        return None
+    if backend is not None:
+        return list(grouped.entries.get(backend, []))
+    from repro.serving.backends import DEFAULT_PLATFORM
+    return (grouped.entries.get(LEGACY_NAMESPACE, [])
+            + grouped.entries.get(DEFAULT_PLATFORM, []))
+
+
+def warm_start(tuner: KernelAutotuner, path: str | os.PathLike,
+               backend: str | None = None) -> int:
+    """Populate one ``tuner``'s cache from a persisted file (the default
+    namespace unless ``backend`` names another).  Returns the number of
+    entries restored (0 on a cold/corrupted file).  Restored entries do not
+    count as featurizations or cache misses.  Multi-backend engines restore
+    through ``SparseKernelEngine(persist_path=...)`` instead, which routes
+    every namespace to its registered backend."""
+    loaded = load_cache(path, backend)
     if not loaded:
         return 0
     for key, entry in loaded:

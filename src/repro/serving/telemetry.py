@@ -8,8 +8,11 @@ the ~26% bucket ratio), which is the standard Prometheus-style trade.
 
 ``EngineTelemetry`` is what ``SparseKernelEngine`` owns: request/hit/miss
 counters, one histogram per pipeline stage (partition, score, build, execute,
-step), arena overflow fallbacks, and warm-start/persistence events.  All
-mutation is lock-guarded so concurrent engine steps can share one instance.
+step), per-backend serve accounting (requests, hits, misses, and a latency
+histogram per ``platform/op`` tag — how multi-backend dispatch surfaces each
+backend's hit rate and p50/p99), arena overflow fallbacks, and
+warm-start/persistence events.  All mutation is lock-guarded so concurrent
+engine steps can share one instance.
 """
 from __future__ import annotations
 
@@ -78,12 +81,32 @@ class EngineTelemetry:
         self.score_dispatches = 0       # batched featurize+score round-trips
         self.arena_fallbacks = 0        # builds that couldn't get a slot
         self.warm_start_entries = 0     # cache entries restored from disk
+        self.warm_start_skipped = 0     # persisted entries no backend claimed
         self.persist_saves = 0
         self.persist_load_failures = 0  # corrupted/absent files -> cold start
+        self.backends: dict = {}        # "platform/op" -> per-backend stats
 
     def record_stage(self, name: str, seconds: float) -> None:
         with self._lock:
             self.stages[name].record(seconds)
+
+    def record_backend(self, tag: str, *, requests: int = 0, hits: int = 0,
+                       misses: int = 0, seconds: float | None = None) -> None:
+        """Fold one step's serve accounting for backend ``tag`` (a
+        ``"platform/op"`` string): request/hit/miss deltas plus the wall
+        time the engine spent scoring+building+executing that backend's
+        partition this step (one histogram sample per step per backend)."""
+        with self._lock:
+            b = self.backends.get(tag)
+            if b is None:
+                b = self.backends[tag] = {"requests": 0, "hits": 0,
+                                          "misses": 0,
+                                          "serve": LatencyHistogram()}
+            b["requests"] += requests
+            b["hits"] += hits
+            b["misses"] += misses
+            if seconds is not None:
+                b["serve"].record(seconds)
 
     def count(self, **deltas: int) -> None:
         with self._lock:
@@ -104,9 +127,17 @@ class EngineTelemetry:
                 "score_dispatches": self.score_dispatches,
                 "arena_fallbacks": self.arena_fallbacks,
                 "warm_start_entries": self.warm_start_entries,
+                "warm_start_skipped": self.warm_start_skipped,
                 "persist_saves": self.persist_saves,
                 "persist_load_failures": self.persist_load_failures,
                 "stages": {k: h.snapshot() for k, h in self.stages.items()},
+                "backends": {
+                    tag: {"requests": b["requests"], "hits": b["hits"],
+                          "misses": b["misses"],
+                          "hit_rate": (b["hits"] / (b["hits"] + b["misses"])
+                                       if b["hits"] + b["misses"] else 0.0),
+                          "serve": b["serve"].snapshot()}
+                    for tag, b in self.backends.items()},
             }
         if cache is not None:
             out["cache"] = {"size": len(cache), "hits": cache.hits,

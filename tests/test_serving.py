@@ -1,5 +1,6 @@
 """Tests for the serving subsystem: engine, arena, persistence, telemetry,
-batched autotuning, and the PR's core/autotune satellite fixes.
+batched autotuning, multi-backend dispatch (routing, cache isolation,
+namespaced persistence incl. legacy files), and the core/autotune satellites.
 
 Stress tests (thread hammering, long arena rotations) carry the ``slow``
 marker and are deselected from tier-1 (``pytest -m slow`` runs them).
@@ -15,9 +16,10 @@ from repro.core.autotune import (AutotuneCache, KernelAutotuner, StatsMemo,
 from repro.data import generate_matrix
 from repro.kernels import spmm_ref
 from repro.kernels.format import plan_from_coo
-from repro.serving import (ArenaOverrun, KernelRequest, PlanArena,
-                           SparseKernelEngine, load_cache, save_cache,
-                           warm_start)
+from repro.serving import (ArenaOverrun, KernelBackend, KernelRequest,
+                           PlanArena, SparseKernelEngine, default_registry,
+                           load_cache, load_grouped, save_backends,
+                           save_cache, warm_start)
 from repro.serving.telemetry import LatencyHistogram
 
 
@@ -272,6 +274,206 @@ def test_engine_save_and_warm_start(tmp_path):
     s = engine2.stats()
     assert s["warm_start_entries"] == 3
     assert s["featurize_calls"] == 0
+
+
+# ------------------------------------------------------------- multi-backend
+
+PLATFORMS = ("tpu_interpret", "tpu_pallas", "cpu_ref")
+
+
+def test_mixed_platform_batch_partitions_and_executes():
+    mats = _mats(3, seed0=2000)
+    rng = np.random.default_rng(2)
+    rhs = rng.normal(size=(256, 64)).astype(np.float32)
+    engine = SparseKernelEngine()
+    reqs = [KernelRequest(m, rng.normal(size=m.nnz).astype(np.float32),
+                          "spmm", rhs, platform=p)
+            for m, p in zip(mats, PLATFORMS)]
+    resps = engine.step(reqs)
+    assert [r.platform for r in resps] == list(PLATFORMS)
+    for resp in resps:      # every backend's output matches the oracle
+        want = np.asarray(spmm_ref(resp.matrix, rhs))[:, :64]
+        np.testing.assert_allclose(np.asarray(resp.output)[:, :64], want,
+                                   atol=1e-4)
+    s = engine.stats()
+    assert set(s["backends"]) == {f"{p}/spmm" for p in PLATFORMS}
+    for b in s["backends"].values():
+        assert b["requests"] == 1 and b["misses"] == 1 and b["hits"] == 0
+        assert b["serve"]["n"] == 1
+        assert {"p50_ms", "p99_ms"} <= set(b["serve"])
+    engine.flush()
+
+
+def test_backend_caches_do_not_cross_contaminate():
+    m = _mats(1, seed0=2100)[0]
+    d = matrix_digest(m)
+    engine = SparseKernelEngine()
+    reqs = [KernelRequest(m, platform="tpu_interpret"),
+            KernelRequest(m, platform="cpu_ref")]
+    engine.step(reqs)
+    cache_i = engine.backends.get("tpu_interpret", "spmm").tuner.cache
+    cache_r = engine.backends.get("cpu_ref", "spmm").tuner.cache
+    # same pattern digest, different backend -> independent entries
+    assert ("spmm", d) in cache_i and ("spmm", d) in cache_r
+    assert cache_i.get(("spmm", d)) is not cache_r.get(("spmm", d))
+    n_feat = engine.featurize_calls
+    assert n_feat == 2                  # one per backend, none shared
+    resps = engine.step(reqs)           # repeats hit per-backend caches
+    assert all(r.cache_hit for r in resps)
+    assert engine.featurize_calls == n_feat
+    s = engine.stats()
+    assert s["backends"]["tpu_interpret/spmm"]["hit_rate"] == 0.5
+    assert s["backends"]["cpu_ref/spmm"]["hit_rate"] == 0.5
+    # per-platform cache occupancy is reported for every backend, not just
+    # the default one ("cache" stays the default backend for compat)
+    assert s["caches"]["tpu_interpret"]["size"] == 1
+    assert s["caches"]["cpu_ref"]["size"] == 1
+    assert s["caches"]["tpu_pallas"]["size"] == 0
+    assert s["cache"]["size"] == s["caches"]["tpu_interpret"]["size"]
+    engine.flush()
+
+
+def test_unknown_platform_tag_raises_before_serving():
+    m = _mats(1, seed0=2200)[0]
+    engine = SparseKernelEngine()
+    with pytest.raises(KeyError, match="no backend registered"):
+        engine.step([KernelRequest(m, platform="gpu_sparse")])
+    assert engine.stats()["requests"] == 0      # failed before any work
+
+
+def test_custom_backend_registration():
+    reg = default_registry()
+    calls = []
+
+    def run(config, matrix, operand):
+        calls.append(config)
+        return np.full((1,), 42.0)
+
+    reg.register(KernelBackend("my_accel", "spmm",
+                               KernelAutotuner(None, cache_size=8), run))
+    engine = SparseKernelEngine(backends=reg)
+    m = _mats(1, seed0=2250)[0]
+    resp = engine.step([KernelRequest(m, None, "spmm",
+                                      np.ones((256, 8), np.float32),
+                                      platform="my_accel")])[0]
+    assert resp.platform == "my_accel"
+    assert calls and np.asarray(resp.output)[0] == 42.0
+    engine.flush()
+
+
+# ------------------------------------------- multi-backend persistence
+
+def test_multi_backend_persist_roundtrip(tmp_path):
+    path = tmp_path / "cache.npz"
+    mats = _mats(2, seed0=2300)
+    engine = SparseKernelEngine(persist_path=path)
+    reqs = [KernelRequest(mats[0], platform="tpu_interpret"),
+            KernelRequest(mats[0], platform="cpu_ref"),
+            KernelRequest(mats[1], platform="tpu_pallas")]
+    engine.step(reqs)
+    engine.flush()
+    engine.save()
+
+    engine2 = SparseKernelEngine(persist_path=path)
+    s = engine2.stats()
+    assert s["warm_start_entries"] == 3 and s["warm_start_skipped"] == 0
+    resps = engine2.step(reqs)
+    assert all(r.cache_hit for r in resps)
+    assert engine2.featurize_calls == 0     # every backend restored
+    # each backend's entries landed in its own cache
+    d0, d1 = matrix_digest(mats[0]), matrix_digest(mats[1])
+    assert ("spmm", d0) in engine2.backends.get("tpu_interpret",
+                                                "spmm").tuner.cache
+    assert ("spmm", d0) in engine2.backends.get("cpu_ref",
+                                                "spmm").tuner.cache
+    assert ("spmm", d1) in engine2.backends.get("tpu_pallas",
+                                                "spmm").tuner.cache
+    assert ("spmm", d1) not in engine2.backends.get("tpu_interpret",
+                                                    "spmm").tuner.cache
+    engine2.flush()
+
+
+def test_legacy_v1_file_warm_starts_default_backend(tmp_path):
+    path = tmp_path / "cache.npz"
+    mats = _mats(2, seed0=2400)
+    kt = KernelAutotuner()
+    kt.get_batch(mats)
+    save_cache(kt.cache, path, version=1)   # the pre-tag on-disk format
+
+    engine = SparseKernelEngine(persist_path=path)
+    assert engine.stats()["warm_start_entries"] == 2
+    resps = engine.step([KernelRequest(m) for m in mats])
+    assert all(r.cache_hit for r in resps)
+    assert engine.featurize_calls == 0
+    engine.flush()
+    # standalone loaders see v1 entries in the default namespace too
+    assert len(load_cache(path)) == 2
+    kt2 = KernelAutotuner()
+    assert warm_start(kt2, path) == 2
+
+
+def test_unknown_tag_entries_fall_back_cold(tmp_path):
+    path = tmp_path / "cache.npz"
+    m = _mats(1, seed0=2500)[0]
+    kt = KernelAutotuner()
+    kt.get(m)
+    save_backends({"fpga_exotic": kt.cache}, path)   # orphaned platform tag
+
+    engine = SparseKernelEngine(persist_path=path)
+    s = engine.stats()
+    assert s["warm_start_entries"] == 0 and s["warm_start_skipped"] == 1
+    resp = engine.step([KernelRequest(m)])[0]
+    assert not resp.cache_hit           # default backend serves it cold
+    engine.flush()
+
+
+def test_tagless_save_cache_warm_starts_any_default_platform(tmp_path):
+    # the compat single-cache API writes unnamespaced entries, so the
+    # restoring engine's *own* default backend gets them — including an
+    # interpret=False engine whose default is tpu_pallas
+    path = tmp_path / "cache.npz"
+    m = _mats(1, seed0=2700)[0]
+    kt = KernelAutotuner()
+    kt.get(m)
+    save_cache(kt.cache, path)
+    engine = SparseKernelEngine(persist_path=path, interpret=False)
+    assert engine.default_platform == "tpu_pallas"
+    assert engine.stats()["warm_start_entries"] == 1
+    resp = engine.step([KernelRequest(m)])[0]
+    assert resp.cache_hit and engine.featurize_calls == 0
+    engine.flush()
+
+
+def test_explicit_backend_load_excludes_unnamespaced_entries(tmp_path):
+    # unnamespaced (legacy / tag-less) entries make no claim about which
+    # backend tuned them, so asking for a specific backend must not
+    # cross-contaminate its cache with them
+    path = tmp_path / "cache.npz"
+    m = _mats(1, seed0=2800)[0]
+    kt = KernelAutotuner()
+    kt.get(m)
+    save_cache(kt.cache, path, version=1)
+    assert load_cache(path, backend="cpu_ref") == []
+    assert len(load_cache(path)) == 1
+    kt2 = KernelAutotuner()
+    assert warm_start(kt2, path, backend="cpu_ref") == 0
+    save_cache(kt.cache, path, backend="cpu_ref")
+    assert len(load_cache(path, backend="cpu_ref")) == 1
+
+
+def test_load_grouped_namespaces_and_counts(tmp_path):
+    path = tmp_path / "cache.npz"
+    ma, mb = _mats(2, seed0=2600)
+    kt_a, kt_b = KernelAutotuner(), KernelAutotuner()
+    kt_a.get(ma)
+    kt_b.get(mb)
+    save_backends({"a": kt_a.cache, "b": kt_b.cache}, path)
+    g = load_grouped(path)
+    assert set(g.entries) == {"a", "b"} and g.skipped == 0
+    assert len(g) == 2
+    (key_a, entry_a), = g.entries["a"]
+    assert key_a == ("spmm", matrix_digest(ma))
+    assert entry_a.config["block_m"] == entry_a.plan.block_m
 
 
 # ----------------------------------------------------------------- telemetry
