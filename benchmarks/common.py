@@ -192,8 +192,60 @@ def get_zero_shot(platform: str, op: str, seed: int = 0) -> TransferResult:
 
 # ------------------------------------------------------------------ output
 
+#: rows collected by every ``emit`` call this process, for ``--json``
+#: output: dicts of {section, name, value, value_num, paper, notes, metrics}
+_COLLECTED: list[dict] = []
+_SECTION = ""
+
+
+def begin_section(name: str) -> None:
+    """Tag subsequent ``emit`` rows with the benchmark section (figure)
+    name — ``benchmarks.run`` calls this before each figure module."""
+    global _SECTION
+    _SECTION = name
+
+
+def _as_float(value) -> float | None:
+    try:
+        return float(value)
+    except (TypeError, ValueError):
+        return None
+
+
 def emit(rows, header=("name", "value", "paper", "notes")):
+    """Print ``name,value,paper,notes`` CSV and collect the rows for
+    machine-readable output.  A row may carry a 5th element — a dict of
+    named numeric metrics (e.g. ``{"req_per_s": ..., "p50_ms": ...,
+    "p99_ms": ...}``) — which is NOT printed but lands in the JSON payload,
+    so quantities that the CSV only renders inside the notes string stay
+    parseable."""
     print(",".join(header))
     for r in rows:
-        print(",".join(str(x) for x in r))
+        metrics = r[4] if len(r) > 4 and isinstance(r[4], dict) else None
+        cells = list(r[:4]) + [""] * (4 - min(len(r), 4))
+        print(",".join(str(x) for x in cells))
+        _COLLECTED.append({
+            "section": _SECTION, "name": str(cells[0]),
+            "value": str(cells[1]), "value_num": _as_float(cells[1]),
+            "paper": str(cells[2]), "notes": str(cells[3]),
+            "metrics": metrics or {}})
     print()
+
+
+def write_json(path, extra: dict | None = None) -> None:
+    """Write every collected row (plus run metadata) as one JSON document —
+    the ``BENCH_*.json`` artifact the perf trajectory is tracked with."""
+    import json
+    s = scale()
+    doc = {
+        "schema": 1,
+        "scale": s.name,
+        "rows": _COLLECTED,
+    }
+    doc.update(extra or {})
+    path = Path(path)
+    tmp = path.with_suffix(path.suffix + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    os.replace(tmp, path)
+    print(f"# wrote {len(_COLLECTED)} rows to {path}")

@@ -3,6 +3,13 @@
 Prints ``name,value,paper,notes`` CSV per figure. Results are cached under
 benchmarks/artifacts/ (first full run trains the models; later runs replay).
 Scale via REPRO_BENCH_SCALE=tiny|default|paper (see benchmarks/common.py).
+
+``--json PATH`` additionally writes every emitted row (with parsed numeric
+values and any per-row metrics dicts, e.g. the serving scenarios' req/s and
+p50/p99) to one JSON document — the ``BENCH_*.json`` artifacts the perf
+trajectory is tracked with::
+
+    PYTHONPATH=src python -m benchmarks.run serving routing --json BENCH_pr4.json
 """
 from __future__ import annotations
 
@@ -11,7 +18,17 @@ import time
 import traceback
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        try:
+            json_path = argv[i + 1]
+        except IndexError:
+            sys.exit("--json requires a PATH argument")
+        del argv[i:i + 2]
+
     t0 = time.time()
     from benchmarks import common
     s = common.scale()
@@ -36,13 +53,15 @@ def main() -> None:
         ("kernel", "benchmarks.kernel_bench"),
         ("bsr_preproc", "benchmarks.bsr_preproc"),
         ("serving", "benchmarks.serving_engine"),
+        ("routing", "benchmarks.serving_routing"),
     ]
-    only = set(sys.argv[1:])
+    only = set(argv)
     failures = []
     for name, module in figures:
         if only and name not in only:
             continue
         print(f"## {name} ({module})")
+        common.begin_section(name)
         try:
             mod = __import__(module, fromlist=["run"])
             mod.run()
@@ -51,7 +70,12 @@ def main() -> None:
             print(f"{name}/ERROR,{type(e).__name__}: {e},,")
             traceback.print_exc()
         print(flush=True)
-    print(f"# done in {time.time() - t0:.0f}s; failures: {failures or 'none'}")
+    elapsed = time.time() - t0
+    print(f"# done in {elapsed:.0f}s; failures: {failures or 'none'}")
+    if json_path:
+        common.write_json(json_path, {"elapsed_s": round(elapsed, 1),
+                                      "failures": failures,
+                                      "argv": argv})
     if failures:
         sys.exit(1)
 

@@ -29,6 +29,10 @@ loop:
 
 ``python benchmarks/serving_engine.py --quick`` runs a reduced protocol for
 smoke checks; ``python -m benchmarks.run serving`` runs the full one.
+``--json PATH`` (standalone) writes the rows machine-readably — per-scenario
+req/s and p50/p99 land as a per-row metrics dict (see
+``benchmarks.common.emit``); routing policies are benchmarked separately in
+``benchmarks/serving_routing.py``.
 """
 from __future__ import annotations
 
@@ -162,11 +166,14 @@ def _bench_mix(rows, mix: str, tuner, n_steps: int, batch: int, pool):
         f"{s['requests'] / elapsed:.0f}", "",
         f"hit_rate={s['hit_rate']:.2f} p50={step_h['p50_ms']:.2f}ms "
         f"p99={step_h['p99_ms']:.2f}ms featurize={s['featurize_calls']} "
-        f"fallbacks={s['arena_fallbacks']}"))
+        f"fallbacks={s['arena_fallbacks']}",
+        {"req_per_s": s["requests"] / elapsed, "hit_rate": s["hit_rate"],
+         "p50_ms": step_h["p50_ms"], "p99_ms": step_h["p99_ms"]}))
     rows.append((
         f"serving/{mix}/pr1_loop_requests_per_s", f"{n / t_base:.0f}", "",
         f"sequential get + reuse build; engine speedup="
-        f"{t_base / elapsed:.2f}x"))
+        f"{t_base / elapsed:.2f}x",
+        {"req_per_s": n / t_base, "engine_speedup": t_base / elapsed}))
     return s
 
 
@@ -231,7 +238,11 @@ def _bench_mixed_platform(rows, tuner, n_steps: int, batch: int, pool):
             f"{b['requests'] / elapsed:.0f}", "",
             f"hit_rate={b['hit_rate']:.2f} "
             f"serve_p50={b['serve']['p50_ms']:.2f}ms "
-            f"p99={b['serve']['p99_ms']:.2f}ms"))
+            f"p99={b['serve']['p99_ms']:.2f}ms",
+            {"req_per_s": b["requests"] / elapsed,
+             "hit_rate": b["hit_rate"],
+             "p50_ms": b["serve"]["p50_ms"],
+             "p99_ms": b["serve"]["p99_ms"]}))
     assert set(s["backends"]) == {f"{p}/spmm" for p in platforms}, \
         "mixed stream did not reach all three backends"
 
@@ -277,4 +288,8 @@ def run(quick: bool = False):
 
 
 if __name__ == "__main__":
-    run(quick="--quick" in sys.argv[1:])
+    args = sys.argv[1:]
+    common.begin_section("serving")
+    run(quick="--quick" in args)
+    if "--json" in args:
+        common.write_json(args[args.index("--json") + 1])

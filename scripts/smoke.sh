@@ -6,10 +6,15 @@
 # check so README/docs never reference files, modules, or benchmark names
 # that no longer exist. Run from the repo root:
 #   bash scripts/smoke.sh
+#
+# SMOKE_QUICK=1 runs the reduced CI path: docs check, example, and the quick
+# serving/routing benchmarks — skipping tier-1 (CI runs it as its own step),
+# the slow stress tests, and the bsr_preproc bench.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+QUICK="${SMOKE_QUICK:-0}"
 
 echo "== docs reference check =="
 python - <<'EOF'
@@ -35,8 +40,8 @@ for doc in doc_files:
 # 2. documented modules import
 for mod in ("repro.serving", "repro.serving.backends", "repro.serving.engine",
             "repro.serving.persist", "repro.serving.arena",
-            "repro.serving.telemetry", "repro.core.autotune",
-            "repro.kernels.ops", "repro.kernels.ref"):
+            "repro.serving.router", "repro.serving.telemetry",
+            "repro.core.autotune", "repro.kernels.ops", "repro.kernels.ref"):
     try:
         __import__(mod)
     except Exception as e:
@@ -44,9 +49,10 @@ for mod in ("repro.serving", "repro.serving.backends", "repro.serving.engine",
 
 # 3. documented entry points resolve
 try:
-    from repro.serving import (BackendRegistry, KernelBackend, KernelRequest,
-                               SparseKernelEngine, default_registry,
-                               load_grouped, save_backends)
+    from repro.serving import (BackendRegistry, CostModelRouter,
+                               KernelBackend, KernelRequest, LoadAwareRouter,
+                               SparseKernelEngine, StaticRouter,
+                               default_registry, load_grouped, save_backends)
     reg = default_registry()
     for plat in ("tpu_interpret", "tpu_pallas", "cpu_ref"):
         reg.get(plat, "spmm")
@@ -55,7 +61,7 @@ except Exception as e:
 
 # 4. benchmark names named in the docs are registered in benchmarks/run.py
 run_py = Path("benchmarks/run.py").read_text()
-for name in ("serving", "bsr_preproc", "fig4", "kernel"):
+for name in ("serving", "routing", "bsr_preproc", "fig4", "kernel"):
     if f'("{name}"' not in run_py:
         failures.append(f"documented benchmark {name!r} not in benchmarks/run.py")
 
@@ -65,19 +71,26 @@ if failures:
 print(f"docs OK: {len(doc_files)} files checked")
 EOF
 
-echo "== tier-1 tests =="
-python -m pytest -x -q
+if [ "$QUICK" != "1" ]; then
+  echo "== tier-1 tests =="
+  python -m pytest -x -q
 
-echo "== slow stress tests (persistence/arena/threading) =="
-python -m pytest -q -m slow
+  echo "== slow stress tests (persistence/arena/threading) =="
+  python -m pytest -q -m slow
+fi
 
 echo "== MoE kernel serving example (engine-driven) =="
 python examples/moe_kernel_serving.py
 
-echo "== bsr_preproc benchmark =="
-python -m benchmarks.run bsr_preproc
+if [ "$QUICK" != "1" ]; then
+  echo "== bsr_preproc benchmark =="
+  python -m benchmarks.run bsr_preproc
+fi
 
 echo "== serving engine benchmark (quick) =="
 python benchmarks/serving_engine.py --quick
+
+echo "== routing policy benchmark (quick) =="
+python benchmarks/serving_routing.py --quick
 
 echo "smoke OK"

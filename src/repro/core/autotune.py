@@ -29,7 +29,8 @@ import numpy as np
 
 from repro.core.cognate import (CostModelConfig, config_first_layer,
                                 matrix_embedding, score_configs,
-                                score_configs_from_parts)
+                                score_configs_from_parts,
+                                score_configs_multi)
 from repro.core.latent import LatentCodec
 from repro.core.search import topk_exhaustive
 from repro.data.features import density_pyramid, matrix_stats
@@ -162,6 +163,17 @@ class Autotuner:
         self._z = jnp.asarray(self.codec.encode(self.space.heterogeneous()))
         self._hom: OrderedDict = OrderedDict()   # n_cols -> homogeneous enc
         self._cfg_parts: OrderedDict = OrderedDict()  # n_cols -> (G, H0)
+        # foreign-space memos are keyed by id(space); every entry also PINS
+        # the space object so a dead space's id can never be recycled into
+        # serving another space's cached encoding, and eviction (bound 64)
+        # drops the pin with the entry
+        self._foreign_z: OrderedDict = OrderedDict()  # id -> (space, (G, L))
+        self._foreign_hom: OrderedDict = OrderedDict()  # (id, nc) -> (s, hom)
+        self._multi_parts: OrderedDict = OrderedDict()  # (id, nc) -> (s, part)
+        #: batched featurize+score round-trips issued (``scores_batch`` and
+        #: ``scores_multi`` each count one per jitted dispatch) — what
+        #: routing tests assert to prove a step scored in ONE dispatch
+        self.score_dispatches = 0
         self._emb = jax.jit(
             lambda pyr: matrix_embedding(self.params, self.model_cfg, pyr))
         self._score = jax.jit(
@@ -215,6 +227,7 @@ class Autotuner:
         pyrs = [density_pyramid(m, self.resolution) for m in mats]
         pyr = np.stack(pyrs + [pyrs[-1]] * (bucket - B))
         sm = self._emb(jnp.asarray(pyr))
+        self.score_dispatches += 1
         if self._fast:
             cols = {m.n_cols for m in mats}
             if len(cols) == 1:      # one shape: share a single (G, H0) part
@@ -234,6 +247,123 @@ class Autotuner:
 
     def scores(self, mat: SparseMatrix) -> np.ndarray:
         return self.scores_batch([mat])[0]
+
+    # ------------------------------------------------- multi-space scoring
+
+    def _space_latent(self, space) -> np.ndarray:
+        """Latent encoding of a (possibly foreign) config space's
+        heterogeneous features.  The codec was trained on *this* tuner's
+        platform, so a foreign space whose het width doesn't fit falls back
+        to a zero latent — the -LE ablation for that space, which still
+        leaves the shared homogeneous encoding to rank its configs."""
+        if space is self.space:
+            return np.asarray(self._z)
+        hit = self._foreign_z.get(id(space))
+        if hit is not None:
+            return hit[1]
+        try:
+            z = np.asarray(self.codec.encode(space.heterogeneous()),
+                           np.float32)
+            if z.shape != (space.n_configs, self.model_cfg.latent_dim):
+                raise ValueError(f"latent shape {z.shape}")
+        except Exception:
+            z = np.zeros((space.n_configs, self.model_cfg.latent_dim),
+                         np.float32)
+        self._foreign_z[id(space)] = (space, z)
+        while len(self._foreign_z) > 64:
+            self._foreign_z.popitem(last=False)
+        return z
+
+    def _space_hom(self, space, n_cols: int) -> np.ndarray:
+        if space is self.space:
+            return self._homogeneous(n_cols)
+        key = (id(space), n_cols)
+        hit = self._foreign_hom.get(key)
+        if hit is not None:
+            return hit[1]
+        h = space.homogeneous(n_cols)
+        self._foreign_hom[key] = (space, h)
+        while len(self._foreign_hom) > 64:
+            self._foreign_hom.popitem(last=False)
+        return h
+
+    def _part_for(self, space, n_cols: int):
+        """(G, H0) first-layer config contribution for any space (the own
+        space reuses ``_config_part``'s memo)."""
+        if space is self.space:
+            return self._config_part(n_cols)
+        key = (id(space), n_cols)
+        hit = self._multi_parts.get(key)
+        if hit is not None:
+            return hit[1]
+        hom = jnp.asarray(self._space_hom(space, n_cols))[None]
+        z = jnp.asarray(self._space_latent(space))[None]
+        part = self._cfg_first(hom, z)[0]
+        self._multi_parts[key] = (space, part)
+        while len(self._multi_parts) > 64:
+            self._multi_parts.popitem(last=False)
+        return part
+
+    def scores_multi(self, mats: list[SparseMatrix],
+                     spaces: list) -> list[np.ndarray]:
+        """One featurization, many config spaces: score a batch of matrices
+        against *every* space in ``spaces`` and return per-space
+        ``(B, G_s)`` arrays.
+
+        This is the routing primitive: ``CostModelRouter`` compares
+        candidate backends by scoring each untagged pattern against each
+        backend's config space, and this method does it in a single jitted
+        embed + a single jitted score round-trip (the spaces concatenate
+        along the config axis — see ``score_configs_multi``).  With the MLP
+        predictor the per-(space, n_cols) config contribution is memoized
+        exactly like ``scores_batch``'s fast path.  Counts ONE
+        ``score_dispatches`` tick however many spaces and matrices are
+        passed (non-MLP predictors with heterogeneous ``n_cols`` in one
+        batch fall back to one dispatch per distinct ``n_cols``).
+        """
+        if not mats:
+            return [np.zeros((0, s.n_configs), np.float32) for s in spaces]
+        B = len(mats)
+        bucket = 1 << max(B - 1, 0).bit_length()
+        pyrs = [density_pyramid(m, self.resolution) for m in mats]
+        pyr = np.stack(pyrs + [pyrs[-1]] * (bucket - B))
+        sm = self._emb(jnp.asarray(pyr))
+        sizes = [s.n_configs for s in spaces]
+        if self._fast:
+            self.score_dispatches += 1
+
+            def cat(n_cols):
+                return jnp.concatenate(
+                    [self._part_for(s, n_cols) for s in spaces], axis=0)
+
+            cols = {m.n_cols for m in mats}
+            if len(cols) == 1:          # one shape: share a single part
+                part = cat(cols.pop())
+            else:
+                parts = [cat(m.n_cols) for m in mats]
+                part = jnp.stack(parts + [parts[-1]] * (bucket - B))
+            scores = np.asarray(self._score_fast(sm, part))[:B]
+        else:
+            # generic predictors: fused multi-space scoring per distinct
+            # n_cols (score_configs_multi broadcasts one hom per batch)
+            scores = np.zeros((B, sum(sizes)), np.float32)
+            by_cols: OrderedDict = OrderedDict()
+            for i, m in enumerate(mats):
+                by_cols.setdefault(m.n_cols, []).append(i)
+            for n_cols, idx in by_cols.items():
+                self.score_dispatches += 1
+                per_space = score_configs_multi(
+                    self.params, self.model_cfg, sm[np.asarray(idx)],
+                    [self._space_hom(s, n_cols) for s in spaces],
+                    [self._space_latent(s) for s in spaces])
+                row = np.concatenate([np.asarray(a) for a in per_space],
+                                     axis=1)
+                scores[np.asarray(idx)] = row
+        out, off = [], 0
+        for g in sizes:
+            out.append(scores[:, off:off + g])
+            off += g
+        return out
 
     def _configs_from_scores(self, scores: np.ndarray, k: int) -> list[dict]:
         idx = topk_exhaustive(scores, k=k)
@@ -378,6 +508,21 @@ class KernelAutotuner:
         entry = TunedKernel(digest, op, config, plan)
         self.cache.put((op, digest), entry)
         return entry
+
+    def install(self, mat: SparseMatrix, op: str, config: dict,
+                digest: str | None = None) -> TunedKernel:
+        """Install an externally-chosen config as this tuner's cache entry
+        for ``mat``'s pattern (building and caching its ``BsrPlan``), without
+        featurizing or scoring here.
+
+        This is how routing avoids double work: ``CostModelRouter`` already
+        scored the pattern against this backend's config space inside its
+        one multi-space routing dispatch, so the engine installs the argmin
+        config directly instead of paying a second ``scores_batch`` — the
+        entry is indistinguishable from one ``get`` would have produced.
+        ``featurize_calls`` does not move (no featurization happened here).
+        """
+        return self._install(mat, op, digest or matrix_digest(mat), config)
 
     def get(self, mat: SparseMatrix, op: str = "spmm") -> TunedKernel:
         """Cached pattern -> tuned kernel entry.

@@ -155,6 +155,33 @@ def score_configs_from_parts(p, cfg: CostModelConfig, s_m, cfg_first):
         .reshape(B, G)
 
 
+def score_configs_multi(p, cfg: CostModelConfig, s_m, homogs, zs):
+    """Score one batch of matrix embeddings against *several* config spaces
+    in a single fused pass — the mechanism behind cost-model-guided backend
+    routing (one featurization feeds every candidate backend's space).
+
+    The trunk treats configs as an opaque G axis, so distinct spaces simply
+    concatenate along it: ``homogs``/``zs`` are per-space ``(G_i, 53)`` /
+    ``(G_i, L)`` arrays, scored as one ``(B, sum(G_i))`` dispatch and split
+    back per space.  Returns a list of ``(B, G_i)`` score arrays aligned
+    with the inputs.
+    """
+    sizes = [h.shape[0] for h in homogs]
+    B = s_m.shape[0]
+    hom = jnp.broadcast_to(jnp.concatenate([jnp.asarray(h) for h in homogs],
+                                           axis=0)[None],
+                           (B, sum(sizes), homogs[0].shape[-1]))
+    z = jnp.broadcast_to(jnp.concatenate([jnp.asarray(a) for a in zs],
+                                         axis=0)[None],
+                         (B, sum(sizes), zs[0].shape[-1]))
+    scores = score_configs(p, cfg, s_m, hom, z)
+    out, off = [], 0
+    for g in sizes:
+        out.append(scores[:, off:off + g])
+        off += g
+    return out
+
+
 def apply_cost_model(p, cfg: CostModelConfig, pyramid, homog, z):
     """End-to-end scoring: pyramid (B,C,R,R), homog (B,G,53), z (B,G,L)."""
     return score_configs(p, cfg, matrix_embedding(p, cfg, pyramid), homog, z)

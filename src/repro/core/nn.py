@@ -55,6 +55,12 @@ def conv(p, x, stride=1):
 
 
 def max_pool(x, window=2):
+    # identity once the spatial extent is below the window: pooling a
+    # (.., 1, 1) map to (.., 0, 0) would feed NaNs (mean of empty) into
+    # every downstream tap — bites low-resolution density pyramids, where
+    # the featurizer has more pool stages than the input has octaves
+    if x.shape[2] < window or x.shape[3] < window:
+        return x
     return lax.reduce_window(x, -jnp.inf, lax.max,
                              (1, 1, window, window), (1, 1, window, window),
                              "VALID")

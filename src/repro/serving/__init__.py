@@ -8,16 +8,24 @@ subsystem owns that layer:
 
 * ``engine`` — ``SparseKernelEngine``: accepts a micro-batch of
   ``KernelRequest`` (pattern, values, op[, dense operand][, platform tag])
-  per ``step``; partitions it per backend tag, then within each backend
-  into cache hits and misses against that backend's pattern-keyed LRU,
-  featurizes + scores **all** of a backend's misses in one
-  ``Autotuner.scores_batch`` dispatch (``KernelAutotuner.get_batch``),
-  builds each request through a double-buffered plan arena, and executes
-  through the backend's kernel with the tuned tile config.  ``stats()``
-  renders the full telemetry picture, including a per-backend section.
+  per ``step`` and serves it through an explicit staged pipeline (route ->
+  partition -> score -> build -> execute -> account): the router decides
+  each request's backend, the batch partitions per tag, each backend's
+  cache misses featurize + score in one ``Autotuner.scores_batch``
+  dispatch (``KernelAutotuner.get_batch``), values build through a
+  double-buffered plan arena, and kernels launch with the tuned tile
+  config.  ``stats()`` renders the full telemetry picture, including
+  per-backend, routing, and load sections.
+* ``router`` — the routing policies: ``StaticRouter`` (explicit tags /
+  default platform — the default), ``CostModelRouter`` (scores untagged
+  patterns against every candidate backend's config space in one batched
+  dispatch and places them on the argmin predicted cost, calibrated
+  online against observed latencies), and ``LoadAwareRouter`` (spills a
+  saturated backend's overflow to a fallback).  Any object implementing
+  the ``Router`` protocol plugs into ``SparseKernelEngine(router=...)``.
 * ``backends`` — ``BackendRegistry``: maps ``(platform, op)`` tags to
-  {kernel executor, ``KernelAutotuner``, config space} bundles.  Ships
-  ``tpu_pallas`` (compiled; degrades to interpreter off-TPU),
+  {kernel executor, ``KernelAutotuner``, config space, live load} bundles.
+  Ships ``tpu_pallas`` (compiled; degrades to interpreter off-TPU),
   ``tpu_interpret``, and ``cpu_ref`` (the pure-jnp reference) — one engine
   fronts them all, each with an isolated cache.
 * ``arena`` — ``PlanArena``: a two-slot (configurable) rotation of BSR
@@ -34,7 +42,9 @@ subsystem owns that layer:
   legacy single-backend files restore the default platform; torn or
   corrupted files fall back to a cold cache.
 * ``telemetry`` — hit rates, per-stage and per-backend latency histograms
-  (log-bucketed p50/p99), eviction and arena-overflow counters.
+  (log-bucketed p50/p99), routing-decision counters, per-platform
+  observed-vs-predicted latency calibration (``RouteCalibration`` — what
+  keeps cost-model routing honest), eviction and arena-overflow counters.
 
 Typical use::
 
@@ -50,26 +60,39 @@ Typical use::
 ``benchmarks/serving_engine.py`` measures steady-state requests/sec and
 p50/p99 against the one-pattern-at-a-time loop, including a mixed-platform
 scenario driving all three stock backends through one ``step()`` stream;
+``benchmarks/serving_routing.py`` compares the routing policies on
+identical untagged traffic (per-backend share, spills, p50/p99);
 ``examples/moe_kernel_serving.py`` drives the engine with MoE dispatch
-traffic and shadow-verifies it on ``cpu_ref``.  See ``docs/serving.md`` for
-the full request lifecycle, persistence format, and how to add a backend.
+traffic, routes untagged traffic through ``CostModelRouter``, and
+shadow-verifies on ``cpu_ref``.  See ``docs/serving.md`` for the full
+request lifecycle, routing policies, persistence format, and how to add a
+backend.
 """
 from repro.serving.arena import ArenaLease, ArenaOverrun, PlanArena
-from repro.serving.backends import (DEFAULT_PLATFORM, BackendRegistry,
-                                    KernelBackend, cpu_ref_backend,
-                                    default_registry, pallas_backend)
+from repro.serving.backends import (DEFAULT_PLATFORM, BackendLoad,
+                                    BackendRegistry, KernelBackend,
+                                    cpu_ref_backend, default_registry,
+                                    pallas_backend)
 from repro.serving.engine import (KernelRequest, KernelResponse,
                                   SparseKernelEngine)
 from repro.serving.persist import (CACHE_FORMAT_VERSION, GroupedCacheLoad,
                                    LEGACY_NAMESPACE, load_cache,
                                    load_grouped, save_backends, save_cache,
                                    warm_start)
-from repro.serving.telemetry import EngineTelemetry, LatencyHistogram
+from repro.serving.router import (CostModelRouter, LoadAwareRouter,
+                                  RouteDecision, Router, RoutingContext,
+                                  StaticRouter)
+from repro.serving.telemetry import (EngineTelemetry, LatencyHistogram,
+                                     RouteCalibration)
 
 __all__ = ["SparseKernelEngine", "KernelRequest", "KernelResponse",
-           "BackendRegistry", "KernelBackend", "DEFAULT_PLATFORM",
+           "BackendRegistry", "KernelBackend", "BackendLoad",
+           "DEFAULT_PLATFORM",
            "pallas_backend", "cpu_ref_backend", "default_registry",
+           "Router", "RouteDecision", "RoutingContext", "StaticRouter",
+           "CostModelRouter", "LoadAwareRouter",
            "PlanArena", "ArenaLease", "ArenaOverrun",
            "save_cache", "save_backends", "load_cache", "load_grouped",
            "warm_start", "CACHE_FORMAT_VERSION", "LEGACY_NAMESPACE",
-           "GroupedCacheLoad", "EngineTelemetry", "LatencyHistogram"]
+           "GroupedCacheLoad", "EngineTelemetry", "LatencyHistogram",
+           "RouteCalibration"]

@@ -45,6 +45,7 @@ registration happens before serving; lookups afterwards are read-only.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Callable
 
 import jax.numpy as jnp
@@ -52,8 +53,44 @@ import jax.numpy as jnp
 from repro.core.autotune import Autotuner, KernelAutotuner
 from repro.kernels import ops
 
-__all__ = ["KernelBackend", "BackendRegistry", "DEFAULT_PLATFORM",
-           "pallas_backend", "cpu_ref_backend", "default_registry"]
+__all__ = ["KernelBackend", "BackendLoad", "BackendRegistry",
+           "DEFAULT_PLATFORM", "pallas_backend", "cpu_ref_backend",
+           "default_registry"]
+
+
+class BackendLoad:
+    """Thread-safe in-flight depth for one backend.
+
+    ``inflight`` counts requests the engine has dispatched to the backend
+    whose results are still outstanding — a request joins at partition time
+    and leaves when its serving stream's arena leases are released (the next
+    ``step`` on that thread, or ``release_stream()``).  This is the
+    saturation signal ``LoadAwareRouter`` reads to decide when to spill
+    traffic to a fallback backend; ``peak`` records the high-water mark and
+    ``total`` the lifetime request count.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._inflight = 0
+        self.peak = 0
+        self.total = 0
+
+    @property
+    def inflight(self) -> int:
+        with self._lock:
+            return self._inflight
+
+    def begin(self, n: int = 1) -> None:
+        with self._lock:
+            self._inflight += n
+            self.total += n
+            if self._inflight > self.peak:
+                self.peak = self._inflight
+
+    def end(self, n: int = 1) -> None:
+        with self._lock:
+            self._inflight = max(self._inflight - n, 0)
 
 #: Platform tag requests without an explicit tag are routed to, and the
 #: namespace legacy (version-1) persistence files are loaded under.
@@ -78,16 +115,21 @@ class KernelBackend:
             the built ``BsrMatrix``; never called with ``operand=None``
             (prepare-only requests skip execution).
         space: the config space the tuner searches (informational —
-            ``None`` when the backend has no tile knobs).
+            ``None`` when the backend has no tile knobs).  Routers score
+            candidate backends against these spaces.
+        load: live in-flight depth (``BackendLoad``), maintained by the
+            engine and read by load-aware routing policies.
 
-    Thread-safety: immutable after construction; ``run`` must be safe to
-    call from concurrent engine steps (the shipped executors are).
+    Thread-safety: immutable after construction (``load``'s counters are
+    internally locked); ``run`` must be safe to call from concurrent engine
+    steps (the shipped executors are).
     """
     platform: str
     op: str
     tuner: KernelAutotuner
     run: Callable
     space: object = None
+    load: BackendLoad = dataclasses.field(default_factory=BackendLoad)
 
     @property
     def tag(self) -> tuple[str, str]:
@@ -114,11 +156,15 @@ class BackendRegistry:
         return backend
 
     def get(self, platform: str, op: str) -> KernelBackend:
-        """Resolve a tag; raises ``KeyError`` naming the known tags."""
+        """Resolve a tag; raises ``KeyError`` naming the unknown tag and
+        every registered backend (the engine calls this at *routing* time,
+        so a request carrying a bad ``platform`` fails up front with a
+        readable message instead of deep inside serving)."""
         be = self._by_tag.get((platform, op))
         if be is None:
             raise KeyError(
                 f"no backend registered for ({platform!r}, {op!r}); "
+                f"registered platforms: {self.platforms()}; "
                 f"known tags: {sorted(self._by_tag)}")
         return be
 
@@ -149,6 +195,12 @@ class BackendRegistry:
             out.setdefault(be.platform, {}).setdefault(
                 id(be.tuner.cache), be.tuner.cache)
         return {p: list(c.values()) for p, c in out.items()}
+
+    def loads_by_tag(self) -> dict[str, BackendLoad]:
+        """``"platform/op"`` -> that backend's live ``BackendLoad`` counters
+        (what ``SparseKernelEngine.stats()["load"]`` renders)."""
+        return {f"{p}/{op}": be.load
+                for (p, op), be in sorted(self._by_tag.items())}
 
 
 # ------------------------------------------------------------ concrete backends

@@ -1,37 +1,50 @@
 """``SparseKernelEngine`` — micro-batched serving of tuned sparse kernels
-across multiple hardware backends.
+across multiple hardware backends, behind a pluggable routing policy.
 
 One ``step(requests)`` call serves a micro-batch of (pattern, values, op
-[, platform]) requests through the COGNATE deployment loop with every stage
-amortized:
+[, platform]) requests through the COGNATE deployment loop as an explicit
+six-stage pipeline — each stage a separate method, so scheduling PRs
+(sharding, async dispatch) can interpose on a seam instead of a monolith:
 
-1. **Partition** — each request's pattern is digested once, its
-   ``(platform, op)`` tag resolved against the ``BackendRegistry`` (requests
-   without a tag go to the registry's default platform), and the batch is
-   split into one partition per backend.
-2. **Score** — within *each* backend, all cache misses are featurized and
-   scored in a single ``Autotuner.scores_batch`` dispatch via that backend's
-   ``KernelAutotuner.get_batch``: one jitted embed+score round-trip per
-   backend per step instead of one per pattern.  Hits skip featurization
-   entirely.  Backends never share cache entries — the same pattern tuned
-   for ``tpu_pallas`` and ``cpu_ref`` yields two independent entries.
-3. **Build** — values scatter through each pattern's cached ``BsrPlan`` into
-   a two-slot double-buffered ``PlanArena`` (keyed per backend tag): batch
-   N+1's host-side scatter lands in the slot batch N is *not* using, and
-   slot-generation checks guarantee an alias is never overwritten while its
-   lease is held.  If a pattern's arena is exhausted (more outstanding
-   builds than slots), the engine falls back to a fresh un-aliased
-   allocation and counts it.
-4. **Execute** — requests carrying a dense operand run through their
-   backend's executor (compiled Pallas, Pallas interpreter, or the pure-jnp
-   reference) with the tuned tile config; operand-less requests are
-   "prepare-only" (the caller launches later).
+1. **Route** — each request's pattern is digested once and the batch is
+   handed to the engine's ``Router`` (``repro.serving.router``), which
+   returns one ``RouteDecision`` per request.  The default ``StaticRouter``
+   honors explicit ``platform`` tags and sends untagged requests to the
+   registry's default platform (the pre-router behavior, bit for bit);
+   ``CostModelRouter`` instead scores untagged patterns against every
+   candidate backend's config space in one batched dispatch and routes to
+   the argmin calibrated cost; ``LoadAwareRouter`` spills saturated
+   backends to a fallback.  Every decision is validated against the
+   ``BackendRegistry`` here — an unknown tag raises ``KeyError`` (naming
+   the tag and the registered backends) before any work happens.
+2. **Partition** — the batch splits into one partition per decided
+   ``(platform, op)`` tag; per-backend cache hit/miss status is peeked, and
+   each backend's in-flight depth (``KernelBackend.load``) is raised by its
+   share of the batch (lowered again when this stream's leases release).
+3. **Score** — within *each* backend, cache misses are featurized and
+   scored in a single ``Autotuner.scores_batch`` dispatch via that
+   backend's ``KernelAutotuner.get_batch``.  Misses whose decision carries
+   a routing config hint (the cost-model router already scored them in its
+   routing dispatch) are *installed* directly — no second dispatch.  Hits
+   skip featurization entirely.  Backends never share cache entries.
+4. **Build** — values scatter through each pattern's cached ``BsrPlan``
+   into a two-slot double-buffered ``PlanArena`` (keyed per backend tag);
+   slot exhaustion falls back to a counted un-aliased build.
+5. **Execute** — requests carrying a dense operand run through their
+   backend's executor with the tuned tile config; operand-less requests
+   are "prepare-only".
+6. **Account** — responses assemble in request order; routing decisions,
+   per-backend serve latency, and observed-vs-predicted calibration
+   (``RouteCalibration`` — what keeps ``CostModelRouter`` honest) fold
+   into telemetry; the *previous* batch's leases and load accounting
+   release (double-buffer hand-off); autosave runs if due.
 
 Batch N's leases are released only after batch N+1 is dispatched, so the
 engine is safe even when kernel launches are asynchronous.  ``stats()``
-renders global hit rates, per-stage latency histograms (p50/p99), evictions,
-persistence events, and a per-backend section (requests, hit rate, serve
-p50/p99 for every ``platform/op`` tag that saw traffic).
+renders global hit rates, per-stage latency histograms (p50/p99),
+evictions, persistence events, a per-backend section, a ``"routing"``
+section (decision reasons, per-platform shares, spill counts, calibration),
+and per-backend live load.
 
 With ``persist_path`` set, the engine warm-starts every backend's cache from
 one namespaced file at construction (zero featurizations for
@@ -41,8 +54,9 @@ counted — torn or missing files fall back to a cold cache) and ``save()``
 atomically writes all backends back via ``repro.serving.persist``.
 
 Thread-safety: ``step`` may be called from several threads; the caches,
-arenas, and telemetry are lock-guarded, and double-buffer leases are
-tracked per calling thread.
+arenas, routers, and telemetry are lock-guarded, and double-buffer leases
+(plus the matching load accounting) are tracked per calling thread —
+one stream's ``step`` or ``release_stream()`` never releases another's.
 """
 from __future__ import annotations
 
@@ -59,9 +73,11 @@ from repro.core.autotune import (Autotuner, KernelAutotuner, TunedKernel,
 from repro.data.matrices import SparseMatrix
 from repro.kernels.format import BsrMatrix
 from repro.serving.arena import ArenaLease, ArenaOverrun, PlanArena
-from repro.serving.backends import BackendRegistry, default_registry
+from repro.serving.backends import (BackendRegistry, KernelBackend,
+                                    default_registry)
 from repro.serving.persist import (LEGACY_NAMESPACE, load_grouped,
                                    save_backends)
+from repro.serving.router import Router, RoutingContext, StaticRouter
 from repro.serving.telemetry import EngineTelemetry
 
 __all__ = ["KernelRequest", "KernelResponse", "SparseKernelEngine"]
@@ -75,8 +91,9 @@ class KernelRequest:
     pattern-only traffic).  ``operand`` is the dense right-hand side: a (K, N)
     array for ``op="spmm"``, a ``(b, c)`` tuple for ``op="sddmm"``; ``None``
     means prepare-only (tune + build, let the caller launch).  ``platform``
-    routes the request to that backend tag in the engine's registry
-    (``None`` -> the registry's default platform)."""
+    pins the request to that backend tag in the engine's registry; ``None``
+    leaves the choice to the engine's router (the default ``StaticRouter``
+    sends it to the registry's default platform)."""
     mat: SparseMatrix
     values: np.ndarray | None = None
     op: str = "spmm"
@@ -87,7 +104,8 @@ class KernelRequest:
 @dataclasses.dataclass
 class KernelResponse:
     """Per-request result: the tuned config, built BSR matrix, kernel output
-    (``None`` for prepare-only), and routing/caching provenance."""
+    (``None`` for prepare-only), and routing/caching provenance
+    (``platform`` + ``route_reason`` say where the request ran and why)."""
     digest: str
     config: dict
     matrix: BsrMatrix
@@ -95,11 +113,32 @@ class KernelResponse:
     cache_hit: bool
     arena_slot: bool            # False -> overflow fallback (fresh buffer)
     platform: str = ""          # backend tag the request was served by
+    route_reason: str = ""      # router's reason (explicit/default/... )
+
+
+@dataclasses.dataclass
+class _StepState:
+    """One micro-batch's pipeline state, threaded through the stages."""
+    requests: list
+    digests: list = dataclasses.field(default_factory=list)
+    decisions: list = dataclasses.field(default_factory=list)
+    groups: OrderedDict = dataclasses.field(default_factory=OrderedDict)
+    resolved: dict = dataclasses.field(default_factory=dict)
+    hit_of: dict = dataclasses.field(default_factory=dict)
+    entries: list = dataclasses.field(default_factory=list)
+    built: list = dataclasses.field(default_factory=list)
+    outputs: list = dataclasses.field(default_factory=list)
+    leases: list = dataclasses.field(default_factory=list)
+    loads: list = dataclasses.field(default_factory=list)   # (backend, n)
+    tag_seconds: dict = dataclasses.field(default_factory=dict)
+    tag_serve_seconds: dict = dataclasses.field(default_factory=dict)
+    installs: int = 0           # router config hints installed this step
+    handed_off: bool = False    # leases/loads transferred to the stream
 
 
 class SparseKernelEngine:
-    """Batched, double-buffered, warm-startable, multi-backend sparse-kernel
-    server.
+    """Batched, double-buffered, warm-startable, multi-backend,
+    router-scheduled sparse-kernel server.
 
     Args:
         tuner: a learned ``Autotuner`` or prebuilt ``KernelAutotuner`` for
@@ -114,6 +153,9 @@ class SparseKernelEngine:
             (compiled; degrades to interpreter off-TPU).
         backends: an explicit ``BackendRegistry``; overrides ``tuner``/
             ``interpret``.  Register custom platforms here.
+        router: the routing policy (``repro.serving.router``) deciding which
+            backend serves each request.  Default ``StaticRouter`` —
+            explicit tags honored, untagged traffic to the default platform.
 
     Thread-safety: all public methods are safe under concurrent callers;
     see the module docstring for the per-thread lease protocol.
@@ -123,7 +165,8 @@ class SparseKernelEngine:
                  cache_size: int = 128, arena_slots: int = 2,
                  persist_path: str | Path | None = None,
                  autosave_every: int | None = None, interpret: bool = True,
-                 backends: BackendRegistry | None = None):
+                 backends: BackendRegistry | None = None,
+                 router: Router | None = None):
         if backends is None:
             backends = default_registry(
                 tuner, cache_size=cache_size,
@@ -134,6 +177,7 @@ class SparseKernelEngine:
                              "not both")
         self.backends = backends
         self.default_platform = backends.default_platform
+        self.router = router if router is not None else StaticRouter()
         # compat: the default platform's tuner (spmm if registered), what
         # single-backend callers passed in and still introspect
         # (featurize_calls, cache)
@@ -155,11 +199,12 @@ class SparseKernelEngine:
         # of the per-backend cache capacities — a max() here would thrash
         # arenas as soon as the combined working set outgrew one backend's
         self._arena_cap = sum(kt.cache.maxsize for kt in backends.tuners())
-        # previous-batch leases are per *thread*: each serving stream double-
-        # buffers independently, so one thread's step can never release (and
-        # let the arena overwrite) a batch another thread's caller still
-        # holds.  Concurrent streams hitting one pattern contend for its
-        # slots; losers take the counted un-aliased fallback.
+        # previous-batch leases (and the matching backend-load accounting)
+        # are per *thread*: each serving stream double-buffers independently,
+        # so one thread's step can never release (and let the arena
+        # overwrite) a batch another thread's caller still holds.  Concurrent
+        # streams hitting one pattern contend for its slots; losers take the
+        # counted un-aliased fallback.
         self._stream = threading.local()
         self._outstanding = 0
         self._lock = threading.Lock()   # guards _arenas and _outstanding
@@ -193,104 +238,203 @@ class SparseKernelEngine:
     def step(self, requests: list[KernelRequest]) -> list[KernelResponse]:
         """Serve one micro-batch; returns responses in request order.
 
-        Raises ``KeyError`` (before any work is done) if a request names a
-        ``(platform, op)`` tag with no registered backend."""
+        Runs the staged pipeline route -> partition -> score -> build ->
+        execute -> account (each stage is a ``_*_stage`` method and gets its
+        own latency histogram).  Raises ``KeyError`` — before any work is
+        done — if routing produces a ``(platform, op)`` tag with no
+        registered backend."""
         t_step = time.perf_counter()
+        st = _StepState(requests)
+        try:
+            for name, stage in (("route", self._route_stage),
+                                ("partition", self._partition_stage),
+                                ("score", self._score_stage),
+                                ("build", self._build_stage),
+                                ("execute", self._execute_stage)):
+                t0 = time.perf_counter()
+                stage(st)
+                self.telemetry.record_stage(name, time.perf_counter() - t0)
+            return self._account_stage(st, t_step)
+        except BaseException:
+            # a stage failed mid-step: roll back this step's arena leases
+            # and load accounting so a caller that catches the error keeps
+            # a consistent engine (no permanently-saturated backend, no
+            # exhausted arena).  Once _account_stage has handed the batch
+            # to the stream, the normal hand-off owns the cleanup.
+            if not st.handed_off:
+                for lease in st.leases:
+                    lease.release()
+                for be, n in st.loads:
+                    be.load.end(n)
+            raise
 
-        t0 = time.perf_counter()
-        digests = [matrix_digest(r.mat) for r in requests]
-        groups: OrderedDict = OrderedDict()     # (platform, op) -> [indices]
-        for i, r in enumerate(requests):
-            platform = r.platform or self.default_platform
-            groups.setdefault((platform, r.op), []).append(i)
-        resolved = {tag: self.backends.get(*tag) for tag in groups}
-        hit_of = {}                     # request index -> was it a cache hit
-        for tag, idxs in groups.items():
-            cache = resolved[tag].tuner.cache
+    # ------------------------------------------------------ pipeline stages
+
+    def routing_context(self) -> RoutingContext:
+        """The engine state routers consult (registry, calibration ledger,
+        default platform) — also handy for driving a ``Router`` directly in
+        tests."""
+        return RoutingContext(self.backends, self.telemetry.calibration,
+                              self.default_platform)
+
+    def _route_stage(self, st: _StepState) -> None:
+        """Digest every pattern once, let the router decide each request's
+        backend, and validate every decision against the registry — an
+        unknown tag fails here, with nothing partially served."""
+        st.digests = [matrix_digest(r.mat) for r in st.requests]
+        st.decisions = self.router.route(st.requests, st.digests,
+                                         self.routing_context())
+        for r, d in zip(st.requests, st.decisions):
+            if (d.platform, r.op) not in self.backends:
+                self.backends.get(d.platform, r.op)   # raises the KeyError
+
+    def _partition_stage(self, st: _StepState) -> None:
+        """Split the batch into one partition per decided (platform, op)
+        tag, peek per-backend hit/miss status (so responses can report
+        ``cache_hit`` truthfully), and raise each backend's in-flight
+        depth by its share of the batch."""
+        for i, r in enumerate(st.requests):
+            st.groups.setdefault((st.decisions[i].platform, r.op),
+                                 []).append(i)
+        st.resolved = {tag: self.backends.get(*tag) for tag in st.groups}
+        for tag, idxs in st.groups.items():
+            be = st.resolved[tag]
+            cache = be.tuner.cache
             for i in idxs:
-                hit_of[i] = (requests[i].op, digests[i]) in cache
-        self.telemetry.record_stage("partition", time.perf_counter() - t0)
+                st.hit_of[i] = (st.requests[i].op, st.digests[i]) in cache
+            be.load.begin(len(idxs))
+            st.loads.append((be, len(idxs)))
 
-        entries: list[TunedKernel | None] = [None] * len(requests)
-        built: list[tuple[BsrMatrix, bool] | None] = [None] * len(requests)
-        outputs: list[object | None] = [None] * len(requests)
-        leases: list[ArenaLease] = []
-        score_s = build_s = exec_s = 0.0
-        total_hits = total_misses = 0
-        for tag, idxs in groups.items():
-            be = resolved[tag]
+    def _score_stage(self, st: _StepState) -> None:
+        """Tune every partition's misses: routing config hints install
+        directly (the router's multi-space dispatch already scored them);
+        the rest go through one batched ``get_batch`` dispatch per
+        backend."""
+        st.entries = [None] * len(st.requests)
+        for tag, idxs in st.groups.items():
+            be = st.resolved[tag]
             t0 = time.perf_counter()
-            got = be.tuner.get_batch([requests[i].mat for i in idxs],
+            for i in idxs:
+                d = st.decisions[i]
+                if d.config is not None and not st.hit_of[i] \
+                        and (tag[1], st.digests[i]) not in be.tuner.cache:
+                    be.tuner.install(st.requests[i].mat, tag[1], d.config,
+                                     digest=st.digests[i])
+                    st.installs += 1
+            unscored = sum((tag[1], st.digests[i]) not in be.tuner.cache
+                           for i in idxs)
+            got = be.tuner.get_batch([st.requests[i].mat for i in idxs],
                                      tag[1],
-                                     digests=[digests[i] for i in idxs])
+                                     digests=[st.digests[i] for i in idxs])
             for i, e in zip(idxs, got):
-                entries[i] = e
+                st.entries[i] = e
             dt = time.perf_counter() - t0
-            score_s += dt
-            serve_s = dt
-            # step-local accounting from the partition-stage peek (the
-            # shared cache counters also move, but deltas on those would
-            # cross-contaminate between concurrent steps)
-            d_hits = sum(hit_of[i] for i in idxs)
-            d_misses = len(idxs) - d_hits
-            total_hits += d_hits
-            total_misses += d_misses
-            if d_misses:
+            st.tag_seconds[tag] = st.tag_seconds.get(tag, 0.0) + dt
+            if unscored:
                 self.telemetry.count(score_dispatches=1)
 
+    def _build_stage(self, st: _StepState) -> None:
+        """Scatter each request's values through its cached plan into an
+        arena slot (double buffer), falling back to a counted un-aliased
+        build on slot exhaustion."""
+        st.built = [None] * len(st.requests)
+        for tag, idxs in st.groups.items():
             t0 = time.perf_counter()
             for i in idxs:
-                r, entry = requests[i], entries[i]
+                r, entry = st.requests[i], st.entries[i]
                 values = r.values if r.values is not None \
                     else np.ones(r.mat.nnz, np.float32)
-                arena = self._arena_for(tag + (digests[i],), entry)
+                arena = self._arena_for(tag + (st.digests[i],), entry)
                 try:
                     lease = arena.build(values)
-                    leases.append(lease)
-                    built[i] = (lease.matrix, True)
+                    st.leases.append(lease)
+                    st.built[i] = (lease.matrix, True)
                 except ArenaOverrun:
                     self.telemetry.count(arena_fallbacks=1)
-                    built[i] = (entry.plan.build(values), False)
+                    st.built[i] = (entry.plan.build(values), False)
             dt = time.perf_counter() - t0
-            build_s += dt
-            serve_s += dt
+            st.tag_seconds[tag] = st.tag_seconds.get(tag, 0.0) + dt
+            st.tag_serve_seconds[tag] = \
+                st.tag_serve_seconds.get(tag, 0.0) + dt
 
+    def _execute_stage(self, st: _StepState) -> None:
+        """Launch each backend's kernel for requests carrying a dense
+        operand; operand-less requests stay prepare-only."""
+        st.outputs = [None] * len(st.requests)
+        for tag, idxs in st.groups.items():
+            be = st.resolved[tag]
             t0 = time.perf_counter()
             for i in idxs:
-                r = requests[i]
+                r = st.requests[i]
                 if r.operand is not None:
-                    outputs[i] = be.run(entries[i].config, built[i][0],
-                                        r.operand)
+                    st.outputs[i] = be.run(st.entries[i].config,
+                                           st.built[i][0], r.operand)
             dt = time.perf_counter() - t0
-            exec_s += dt
-            serve_s += dt
+            st.tag_seconds[tag] = st.tag_seconds.get(tag, 0.0) + dt
+            st.tag_serve_seconds[tag] = \
+                st.tag_serve_seconds.get(tag, 0.0) + dt
+
+    def _account_stage(self, st: _StepState,
+                       t_step: float) -> list[KernelResponse]:
+        """Assemble responses, fold this step into telemetry (per-backend
+        serve time, routing decisions, observed-vs-predicted calibration),
+        and hand off the double buffer: the *previous* batch's leases and
+        load accounting release now that this batch is in flight."""
+        total_hits = total_misses = 0
+        for tag, idxs in st.groups.items():
+            d_hits = sum(st.hit_of[i] for i in idxs)
+            total_hits += d_hits
+            total_misses += len(idxs) - d_hits
             self.telemetry.record_backend(
                 "/".join(tag), requests=len(idxs), hits=d_hits,
-                misses=d_misses, seconds=serve_s)
-
-        self.telemetry.record_stage("score", score_s)
-        self.telemetry.record_stage("build", build_s)
-        self.telemetry.record_stage("execute", exec_s)
+                misses=len(idxs) - d_hits,
+                seconds=st.tag_seconds.get(tag, 0.0))
+            # every served route feeds the observed-latency ledger; routes
+            # that carried a prediction also calibrate predicted-vs-observed.
+            # Calibration sees build+execute time only — folding in the
+            # score stage would charge one-time tuning cost to whichever
+            # backend just received fresh patterns, and the early EMA
+            # samples it poisons are exactly the ones that steer routing
+            per_req = st.tag_serve_seconds.get(tag, 0.0) / len(idxs) \
+                if idxs else 0.0
+            for i in idxs:
+                self.telemetry.calibration.observe(
+                    tag[0], per_req, st.decisions[i].predicted)
+        reasons: dict[tuple[str, str], int] = {}
+        for d in st.decisions:
+            key = (d.platform, d.reason)
+            reasons[key] = reasons.get(key, 0) + 1
+        for (platform, reason), n in reasons.items():
+            self.telemetry.record_route(platform, reason, n)
+        if st.installs:
+            self.telemetry.count(route_config_installs=st.installs)
         self.telemetry.count(hits=total_hits, misses=total_misses)
 
         responses = [
-            KernelResponse(d, entry.config, matrix, output, hit_of[i],
-                           in_arena, r.platform or self.default_platform)
-            for i, (r, d, entry, (matrix, in_arena), output) in enumerate(
-                zip(requests, digests, entries, built, outputs))]
+            KernelResponse(dg, entry.config, matrix, output, st.hit_of[i],
+                           in_arena, st.decisions[i].platform,
+                           st.decisions[i].reason)
+            for i, (dg, entry, (matrix, in_arena), output) in enumerate(
+                zip(st.digests, st.entries, st.built, st.outputs))]
 
         # this stream's batch N-1 kernels were dispatched a full step ago —
         # its slots can rotate now that batch N is in flight (double-buffer
-        # hand-off)
-        for lease in self._swap_stream_leases(leases):
+        # hand-off), and its backend in-flight depth drops with it
+        prev_leases, prev_loads = self._swap_stream(st.leases, st.loads)
+        st.handed_off = True
+        for lease in prev_leases:
             lease.release()
+        for be, n in prev_loads:
+            be.load.end(n)
 
-        self.telemetry.count(requests=len(requests), batches=1)
+        self.telemetry.count(requests=len(st.requests), batches=1)
         self.telemetry.record_stage("step", time.perf_counter() - t_step)
         if (self.autosave_every and self.persist_path is not None
                 and self.telemetry.batches % self.autosave_every == 0):
             self.save()
         return responses
+
+    # ----------------------------------------------------- stream plumbing
 
     def _arena_for(self, key, entry: TunedKernel) -> PlanArena:
         with self._lock:
@@ -303,19 +447,33 @@ class SparseKernelEngine:
                 self._arenas.popitem(last=False)
             return arena
 
-    def _swap_stream_leases(self, leases: list[ArenaLease]) -> list[ArenaLease]:
-        """Install this thread's new outstanding batch; return the old one."""
-        prev = getattr(self._stream, "leases", [])
+    def _swap_stream(self, leases: list[ArenaLease],
+                     loads: list[tuple[KernelBackend, int]]):
+        """Install this thread's new outstanding batch; return the old one
+        (its leases and backend-load shares, to be released together)."""
+        prev_leases = getattr(self._stream, "leases", [])
+        prev_loads = getattr(self._stream, "loads", [])
         self._stream.leases = leases
+        self._stream.loads = loads
         with self._lock:
-            self._outstanding += len(leases) - len(prev)
-        return prev
+            self._outstanding += len(leases) - len(prev_leases)
+        return prev_leases, prev_loads
+
+    def release_stream(self) -> None:
+        """Release the calling thread's outstanding arena leases and drop
+        its backend in-flight accounting (call once this stream's last
+        results have been consumed or copied).  Idempotent: a second call
+        with nothing outstanding is a no-op, and it never touches another
+        thread's leases."""
+        prev_leases, prev_loads = self._swap_stream([], [])
+        for lease in prev_leases:
+            lease.release()
+        for be, n in prev_loads:
+            be.load.end(n)
 
     def flush(self) -> None:
-        """Release the calling thread's outstanding arena leases (call once
-        this stream's last results have been consumed or copied)."""
-        for lease in self._swap_stream_leases([]):
-            lease.release()
+        """Alias of ``release_stream()`` (the historical name)."""
+        self.release_stream()
 
     # ------------------------------------------------------- observability
 
@@ -328,11 +486,14 @@ class SparseKernelEngine:
     def stats(self) -> dict:
         """Snapshot of all counters: global hit rates, per-stage latency
         histograms, a ``"backends"`` section keyed ``"platform/op"`` with
-        per-backend requests / hit rate / serve p50-p99, cache and arena
-        occupancy, and persistence events.  ``"cache"`` is the *default*
-        backend's cache (pre-registry compat); ``"caches"`` reports every
-        platform's occupancy and eviction counters.  Safe to call
-        concurrently with ``step``."""
+        per-backend requests / hit rate / serve p50-p99, a ``"routing"``
+        section (decision reasons, per-platform request shares, spill
+        count, per-platform observed-vs-predicted calibration), per-backend
+        live load (``"load"``: in-flight depth / peak / total), cache and
+        arena occupancy, and persistence events.  ``"cache"`` is the
+        *default* backend's cache (pre-registry compat); ``"caches"``
+        reports every platform's occupancy and eviction counters.  Safe to
+        call concurrently with ``step``."""
         out = self.telemetry.snapshot(cache=self.tuner.cache)
         out["featurize_calls"] = self.featurize_calls
         out["caches"] = {}
@@ -342,6 +503,9 @@ class SparseKernelEngine:
                 out["caches"][key] = {
                     "size": len(c), "maxsize": c.maxsize, "hits": c.hits,
                     "misses": c.misses, "evictions": c.evictions}
+        out["load"] = {tag: {"inflight": load.inflight, "peak": load.peak,
+                             "total": load.total}
+                       for tag, load in self.backends.loads_by_tag().items()}
         with self._lock:
             out["arenas"] = {"resident": len(self._arenas),
                              "outstanding_leases": self._outstanding}

@@ -1,0 +1,354 @@
+"""Routing policies — the layer that *chooses* which backend serves a request.
+
+Until now the backend a request ran on was a static tag the caller supplied
+(``KernelRequest.platform``); the ``BackendRegistry`` was a lookup table, not
+a scheduler.  This module turns it into one.  The engine's first pipeline
+stage hands every micro-batch to a ``Router``, which returns one
+``RouteDecision`` per request; everything downstream (partition, score,
+build, execute) consumes decisions instead of raw tags.
+
+Three policies ship:
+
+``StaticRouter``
+    The default, preserving the pre-router behavior bit-for-bit: an explicit
+    ``platform`` tag is honored verbatim, an untagged request goes to the
+    registry's default platform.  Zero scoring, zero state.
+
+``CostModelRouter``
+    COGNATE's cost model as a *placement* policy, the way TLP and the TPU
+    learned performance model drive schedule/placement decisions.  Each
+    untagged request's pattern is scored against **every** candidate
+    backend's config space in ONE batched dispatch
+    (``Autotuner.scores_multi`` — one featurization feeds all spaces), and
+    the request routes to the argmin *effective* cost
+
+        effective(b) = min_config score_b + calibration_offset(b)
+
+    where the offset is learned online from observed serve latencies
+    (``repro.serving.telemetry.RouteCalibration``): the unitless rank score
+    is corrected onto each backend's real latency scale, so routing tracks
+    what the hardware actually does while the model breaks ties
+    per-pattern.  Knob-free backends (no config space, e.g. ``cpu_ref``)
+    score 0 and compete purely on their calibrated latency.  Decisions are
+    memoized per pattern digest (sticky routing — a repeated pattern costs
+    no re-scoring), and the winning config from the routing dispatch is
+    attached to the decision so the engine installs it directly instead of
+    scoring the miss a second time.
+
+``LoadAwareRouter``
+    Wraps any other router and overrides its decision when the chosen
+    backend is saturated: if the backend's in-flight depth
+    (``KernelBackend.load`` — outstanding leases plus requests already
+    assigned earlier in this batch) has reached ``max_inflight``, the
+    request spills to ``spill_to`` (default ``cpu_ref``).  Spills are
+    counted (``stats()["routing"]["spills"]``) and their observed latencies
+    feed the spill target's calibration, so a cost-model inner router
+    learns what the fallback actually costs.
+
+Routers are pure policy objects: all engine state they need arrives in the
+per-step ``RoutingContext`` (registry, calibration, default platform), so a
+policy can be unit-tested with a hand-built context and swapped per engine
+via ``SparseKernelEngine(router=...)``.  A custom policy is any object with
+this protocol's ``route`` method.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.autotune import KernelAutotuner
+from repro.serving.backends import BackendRegistry, KernelBackend
+from repro.serving.telemetry import RouteCalibration
+
+__all__ = ["RouteDecision", "RoutingContext", "Router", "StaticRouter",
+           "CostModelRouter", "LoadAwareRouter"]
+
+
+@dataclasses.dataclass
+class RouteDecision:
+    """Where one request goes, and why.
+
+    ``reason`` is a short tag rendered into routing telemetry:
+    ``explicit`` (caller pinned the platform), ``default`` (untagged,
+    static policy), ``cost_model`` (argmin predicted cost), ``sticky``
+    (memoized earlier cost-model pick), ``explore`` (calibration probe),
+    ``spill`` (load shed).  ``predicted`` is the raw (uncalibrated) cost
+    score of the chosen backend (cost-model routes only) — the account
+    stage feeds it, with the observed latency, into ``RouteCalibration``,
+    whose offsets are defined against the raw score.
+    ``config`` is an optional tuned-kernel kwargs hint recovered from the
+    routing dispatch; the engine installs it on a cache miss instead of
+    re-scoring the pattern."""
+    platform: str
+    reason: str = "explicit"
+    predicted: float | None = None
+    config: dict | None = None
+
+
+@dataclasses.dataclass
+class RoutingContext:
+    """Engine state a router may consult, rebuilt per ``step``."""
+    registry: BackendRegistry
+    calibration: RouteCalibration
+    default_platform: str
+
+    def candidates(self, op: str) -> list[KernelBackend]:
+        """Backends that can serve ``op``, default platform first (ties in
+        scoring resolve toward it), then alphabetically — deterministic
+        whatever order the registry was populated in."""
+        bes = [be for be in self.registry if be.op == op]
+        bes.sort(key=lambda be: (be.platform != self.default_platform,
+                                 be.platform))
+        return bes
+
+
+@runtime_checkable
+class Router(Protocol):
+    """Routing policy protocol: one decision per request, in order.
+
+    ``digests`` aligns with ``requests`` (the engine computes each
+    pattern's digest exactly once per step and shares it with the policy so
+    memoizing routers don't re-hash).  Implementations must be safe under
+    concurrent ``step`` callers."""
+
+    def route(self, requests: list, digests: list[str],
+              ctx: RoutingContext) -> list[RouteDecision]: ...
+
+
+class StaticRouter:
+    """Honor explicit tags; send untagged traffic to the default platform.
+
+    This is the engine's default policy and reproduces the pre-router
+    engine exactly: no scoring, no state, no spilling."""
+
+    def route(self, requests, digests, ctx: RoutingContext) \
+            -> list[RouteDecision]:
+        return [RouteDecision(r.platform, "explicit") if r.platform
+                else RouteDecision(ctx.default_platform, "default")
+                for r in requests]
+
+
+class CostModelRouter:
+    """Route untagged requests to the backend the cost model predicts
+    fastest, calibrated online against observed serve latencies.
+
+    Args:
+        priors: platform -> cold-start effective-cost offset used until the
+            platform has observed latencies (then ``RouteCalibration``
+            takes over).  Unlisted platforms default to ``default_prior``
+            (scorable candidates) or ``unscored_prior`` (knob-free ones).
+            Use a large prior to keep a backend out of rotation until it
+            has been measured, a negative one to favor it cold.
+        default_prior: fallback cold-start offset for candidates the cost
+            model can score (0.0 — they compete on raw predicted score
+            until calibrated).
+        unscored_prior: fallback cold-start offset for candidates the cost
+            model *cannot* score (no config space, e.g. ``cpu_ref``).
+            Default ``inf``: with neither a model nor a measurement there
+            is zero evidence for such a backend, so it joins the rotation
+            only once observed — through a spill, an ``explore`` probe, or
+            explicitly pinned traffic.
+        explore_every: if set, every Nth cost-model decision is instead
+            routed to the candidate with the fewest calibration
+            observations (reason ``explore``) so offsets stay fresh for
+            backends the argmin would otherwise starve.
+        memo_size: LRU capacity of the digest -> platform sticky map.
+
+    Explicitly tagged requests pass through untouched (reason
+    ``explicit``), so one engine can mix pinned and routed traffic.
+    """
+
+    def __init__(self, priors: dict[str, float] | None = None,
+                 default_prior: float = 0.0,
+                 unscored_prior: float = float("inf"),
+                 explore_every: int | None = None, memo_size: int = 1024):
+        self.priors = dict(priors or {})
+        self.default_prior = float(default_prior)
+        self.unscored_prior = float(unscored_prior)
+        self.explore_every = explore_every
+        self._memo: OrderedDict = OrderedDict()   # digest -> platform
+        self._memo_size = memo_size
+        self._lock = threading.Lock()
+        self._decide_count = 0
+        #: multi-space scoring round-trips issued — the acceptance counter:
+        #: one step with any number of untagged misses bumps this by at
+        #: most one per distinct op in the batch (usually exactly one)
+        self.dispatches = 0
+        #: patterns actually scored (cache-missed the sticky memo)
+        self.scored_patterns = 0
+
+    # ------------------------------------------------------------- helpers
+
+    def _effective_offset(self, platform: str, ctx: RoutingContext,
+                          scored: bool) -> float:
+        off = ctx.calibration.offset(platform)
+        if off is not None:
+            return off
+        if platform in self.priors:
+            return self.priors[platform]
+        return self.default_prior if scored else self.unscored_prior
+
+    @staticmethod
+    def _scorer_for(candidates, op: str):
+        """The learned Autotuner that featurizes this op's routing batch:
+        the default platform's if it has one, else the first candidate's —
+        but only a model *trained for this op* (the same guard
+        ``KernelAutotuner.get_batch`` applies before trusting a learned
+        tuner).  Returns ``None`` when no candidate has one (routing then
+        falls back to calibration offsets alone)."""
+        for be in candidates:           # candidates() puts default first
+            tuner = be.tuner.tuner
+            if tuner is not None and tuner.op == op:
+                return tuner
+        return None
+
+    def _pick_explore(self, candidates, ctx: RoutingContext) -> str:
+        return min(candidates,
+                   key=lambda be: (ctx.calibration.n_observed(be.platform),
+                                   be.platform)).platform
+
+    # --------------------------------------------------------------- route
+
+    def route(self, requests, digests, ctx: RoutingContext) \
+            -> list[RouteDecision]:
+        decisions: list[RouteDecision | None] = [None] * len(requests)
+        todo: OrderedDict = OrderedDict()       # op -> [request indices]
+        with self._lock:
+            for i, r in enumerate(requests):
+                if r.platform:
+                    decisions[i] = RouteDecision(r.platform, "explicit")
+                    continue
+                hit = self._memo.get(digests[i])
+                if hit is not None:
+                    self._memo.move_to_end(digests[i])
+                    decisions[i] = RouteDecision(hit, "sticky")
+                    continue
+                self._decide_count += 1
+                if self.explore_every \
+                        and self._decide_count % self.explore_every == 0:
+                    decisions[i] = RouteDecision("", "explore")  # fill below
+                todo.setdefault(r.op, []).append(i)
+
+        for op, idxs in todo.items():
+            candidates = ctx.candidates(op)
+            if not candidates:          # let the engine raise its KeyError
+                for i in idxs:
+                    if decisions[i] is None or not decisions[i].platform:
+                        decisions[i] = RouteDecision(ctx.default_platform,
+                                                     "default")
+                continue
+            for i in idxs:              # explore probes need no scoring
+                if decisions[i] is not None and decisions[i].reason \
+                        == "explore":
+                    decisions[i].platform = self._pick_explore(candidates,
+                                                               ctx)
+            score_idx = [i for i in idxs if decisions[i] is None]
+            if not score_idx:
+                continue
+            decided = self._decide(
+                [requests[i] for i in score_idx], op, candidates, ctx)
+            with self._lock:
+                for i, d in zip(score_idx, decided):
+                    decisions[i] = d
+                    self._memo[digests[i]] = d.platform
+                    self._memo.move_to_end(digests[i])
+                    while len(self._memo) > self._memo_size:
+                        self._memo.popitem(last=False)
+        return decisions
+
+    def _decide(self, reqs, op, candidates, ctx: RoutingContext) \
+            -> list[RouteDecision]:
+        """Score ``reqs`` (all untagged, unmemoized, op ``op``) against
+        every candidate and return their decisions."""
+        B = len(reqs)
+        scorer = self._scorer_for(candidates, op)
+        scorable = [(j, be) for j, be in enumerate(candidates)
+                    if scorer is not None and be.space is not None]
+        base = np.zeros((B, len(candidates)), np.float32)
+        argmin_cfg: dict[int, np.ndarray] = {}  # candidate pos -> (B,) idx
+        if scorable:
+            self.dispatches += 1
+            self.scored_patterns += B
+            per_space = scorer.scores_multi(
+                [r.mat for r in reqs], [be.space for _, be in scorable])
+            for (j, be), scores in zip(scorable, per_space):
+                base[:, j] = scores.min(axis=1)
+                # keep the winning config index: the engine can install it
+                # directly when this backend wins, skipping a re-score
+                if be.tuner.tuner is scorer and be.space is scorer.space:
+                    argmin_cfg[j] = np.asarray(scores.argmin(axis=1))
+        scored_pos = {j for j, _ in scorable}
+        offs = np.asarray([self._effective_offset(be.platform, ctx,
+                                                  j in scored_pos)
+                           for j, be in enumerate(candidates)], np.float32)
+        eff = base + offs[None, :]
+        picks = np.argmin(eff, axis=1)
+        out = []
+        for b, j in enumerate(picks):
+            be = candidates[int(j)]
+            config = None
+            if int(j) in argmin_cfg:
+                space = be.space
+                ci = int(argmin_cfg[int(j)][b])
+                row = {name: space.params[name][ci].item()
+                       for name in space.params}
+                config = KernelAutotuner._kernel_kwargs(row)
+            # calibration must see the RAW model score, not the effective
+            # cost: offset = EMA[observed] - EMA[predicted], so feeding an
+            # offset-inclusive value back in would double-count the
+            # correction and bias cross-backend comparison
+            predicted = float(base[b, int(j)])
+            out.append(RouteDecision(
+                be.platform, "cost_model",
+                predicted=predicted if np.isfinite(predicted) else None,
+                config=config))
+        return out
+
+
+class LoadAwareRouter:
+    """Spill traffic off a saturated backend onto a fallback.
+
+    Wraps another router (default ``StaticRouter``) and overrides its
+    decision whenever the chosen backend's in-flight depth — outstanding
+    arena leases plus requests already assigned earlier in the same batch —
+    has reached ``max_inflight``.  Spilled requests go to ``spill_to``
+    (which must serve the same op; otherwise the original decision stands)
+    with reason ``spill``.  The spill target itself is never spilled *from*
+    — when the whole system is saturated, shedding to the fallback is still
+    the right call.
+
+    Args:
+        inner: the policy being wrapped (its reasons are preserved for
+            requests that don't spill).
+        max_inflight: per-backend depth at which spilling starts.
+        spill_to: platform absorbing the overflow (default ``cpu_ref``).
+    """
+
+    def __init__(self, inner: Router | None = None, max_inflight: int = 16,
+                 spill_to: str = "cpu_ref"):
+        self.inner = inner if inner is not None else StaticRouter()
+        self.max_inflight = int(max_inflight)
+        self.spill_to = spill_to
+        #: lifetime spill count (also in ``stats()["routing"]["spills"]``)
+        self.spills = 0
+
+    def route(self, requests, digests, ctx: RoutingContext) \
+            -> list[RouteDecision]:
+        decisions = self.inner.route(requests, digests, ctx)
+        pending: dict[tuple[str, str], int] = {}
+        for i, (r, d) in enumerate(zip(requests, decisions)):
+            tag = (d.platform, r.op)
+            if d.platform != self.spill_to and tag in ctx.registry:
+                depth = ctx.registry.get(*tag).load.inflight \
+                    + pending.get(tag, 0)
+                if depth >= self.max_inflight \
+                        and (self.spill_to, r.op) in ctx.registry:
+                    d = decisions[i] = RouteDecision(self.spill_to, "spill")
+                    self.spills += 1
+                    tag = (self.spill_to, r.op)
+            pending[tag] = pending.get(tag, 0) + 1
+        return decisions

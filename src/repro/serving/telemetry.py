@@ -7,12 +7,22 @@ upper edges (conservative: reported latency >= true latency, error bounded by
 the ~26% bucket ratio), which is the standard Prometheus-style trade.
 
 ``EngineTelemetry`` is what ``SparseKernelEngine`` owns: request/hit/miss
-counters, one histogram per pipeline stage (partition, score, build, execute,
-step), per-backend serve accounting (requests, hits, misses, and a latency
-histogram per ``platform/op`` tag — how multi-backend dispatch surfaces each
-backend's hit rate and p50/p99), arena overflow fallbacks, and
-warm-start/persistence events.  All mutation is lock-guarded so concurrent
-engine steps can share one instance.
+counters, one histogram per pipeline stage (route, partition, score, build,
+execute, step), per-backend serve accounting (requests, hits, misses, and a
+latency histogram per ``platform/op`` tag — how multi-backend dispatch
+surfaces each backend's hit rate and p50/p99), routing-decision counters
+(how many requests each ``Router`` policy sent where, and why — explicit
+tag, default, cost-model pick, load spill, exploration), arena overflow
+fallbacks, and warm-start/persistence events.  All mutation is lock-guarded
+so concurrent engine steps can share one instance.
+
+``RouteCalibration`` is the engine's observed-vs-predicted latency ledger:
+for every served route it folds the request's observed serve latency (and,
+for cost-model routes, the predicted rank score) into per-platform EMAs.
+``offset(platform)`` turns those into the additive correction
+``CostModelRouter`` applies to the unitless cost-model score — once a
+backend has been observed, its effective routing cost tracks its *real*
+latency scale while the cost model keeps breaking ties per pattern.
 """
 from __future__ import annotations
 
@@ -20,7 +30,7 @@ import threading
 
 import numpy as np
 
-__all__ = ["LatencyHistogram", "EngineTelemetry"]
+__all__ = ["LatencyHistogram", "EngineTelemetry", "RouteCalibration"]
 
 
 class LatencyHistogram:
@@ -65,7 +75,80 @@ class LatencyHistogram:
                 "max_ms": self.max * 1e3}
 
 
-STAGES = ("partition", "score", "build", "execute", "step")
+STAGES = ("route", "partition", "score", "build", "execute", "step")
+
+
+class RouteCalibration:
+    """Per-platform online calibration of predicted cost vs observed latency.
+
+    The cost model emits a unitless *rank score* per (pattern, config) —
+    comparable within one platform's config space, but not across platforms
+    and not in seconds.  Calibration closes that gap online: every served
+    route contributes its observed per-request latency (milliseconds, EMA
+    ``observed_ms`` — the engine feeds steady-state build+execute time,
+    deliberately excluding one-time tuning cost, which would otherwise be
+    charged to whichever backend just received fresh patterns), and every
+    cost-model route also contributes the *raw* uncalibrated score the
+    router predicted (EMA ``predicted``).  ``offset(platform)`` is then
+
+        offset = EMA[observed_ms] - EMA[predicted_score]
+
+    so a router computing ``score + offset`` gets a quantity that converges
+    to the backend's observed latency scale (the score's platform-mean
+    cancels) while per-pattern score deviations still break ties.  Platforms
+    with no learned score (predicted 0) calibrate to their raw observed
+    latency.  ``offset`` returns ``None`` until the platform has been
+    observed — the policy layer decides the cold-start prior.
+
+    Thread-safe; one instance lives on ``EngineTelemetry.calibration``.
+    """
+
+    def __init__(self, alpha: float = 0.2):
+        self.alpha = alpha
+        self._lock = threading.Lock()
+        self._by_platform: dict[str, dict] = {}
+
+    def observe(self, platform: str, observed_s: float,
+                predicted: float | None = None) -> None:
+        """Fold one served request: observed serve latency, and the routing
+        score that predicted it (``None`` for routes made without one)."""
+        a = self.alpha
+        with self._lock:
+            c = self._by_platform.get(platform)
+            if c is None:
+                c = self._by_platform[platform] = {
+                    "n": 0, "observed_ms": 0.0, "n_pred": 0, "predicted": 0.0}
+            ms = observed_s * 1e3
+            c["observed_ms"] = ms if c["n"] == 0 \
+                else (1 - a) * c["observed_ms"] + a * ms
+            c["n"] += 1
+            if predicted is not None:
+                p = float(predicted)
+                c["predicted"] = p if c["n_pred"] == 0 \
+                    else (1 - a) * c["predicted"] + a * p
+                c["n_pred"] += 1
+
+    def n_observed(self, platform: str) -> int:
+        with self._lock:
+            c = self._by_platform.get(platform)
+            return c["n"] if c else 0
+
+    def offset(self, platform: str) -> float | None:
+        """Additive score correction for ``platform``; ``None`` until it has
+        been observed at least once."""
+        with self._lock:
+            c = self._by_platform.get(platform)
+            if c is None or c["n"] == 0:
+                return None
+            return c["observed_ms"] - c["predicted"]
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {plat: {"n": c["n"],
+                           "observed_ms": c["observed_ms"],
+                           "predicted": c["predicted"],
+                           "offset": c["observed_ms"] - c["predicted"]}
+                    for plat, c in self._by_platform.items() if c["n"]}
 
 
 class EngineTelemetry:
@@ -85,10 +168,23 @@ class EngineTelemetry:
         self.persist_saves = 0
         self.persist_load_failures = 0  # corrupted/absent files -> cold start
         self.backends: dict = {}        # "platform/op" -> per-backend stats
+        self.route_reasons: dict = {}   # reason -> requests routed that way
+        self.route_platforms: dict = {} # platform -> requests routed to it
+        self.route_config_installs = 0  # routing config hints installed
+        self.calibration = RouteCalibration()
 
     def record_stage(self, name: str, seconds: float) -> None:
         with self._lock:
             self.stages[name].record(seconds)
+
+    def record_route(self, platform: str, reason: str, n: int = 1) -> None:
+        """Count ``n`` requests routed to ``platform`` because ``reason``
+        (``explicit`` / ``default`` / ``cost_model`` / ``sticky`` /
+        ``spill`` / ``explore`` — whatever the active router reports)."""
+        with self._lock:
+            self.route_reasons[reason] = self.route_reasons.get(reason, 0) + n
+            self.route_platforms[platform] = \
+                self.route_platforms.get(platform, 0) + n
 
     def record_backend(self, tag: str, *, requests: int = 0, hits: int = 0,
                        misses: int = 0, seconds: float | None = None) -> None:
@@ -138,7 +234,14 @@ class EngineTelemetry:
                                        if b["hits"] + b["misses"] else 0.0),
                           "serve": b["serve"].snapshot()}
                     for tag, b in self.backends.items()},
+                "routing": {
+                    "decisions": dict(self.route_reasons),
+                    "by_platform": dict(self.route_platforms),
+                    "spills": self.route_reasons.get("spill", 0),
+                    "config_installs": self.route_config_installs,
+                },
             }
+        out["routing"]["calibration"] = self.calibration.snapshot()
         if cache is not None:
             out["cache"] = {"size": len(cache), "hits": cache.hits,
                             "misses": cache.misses,

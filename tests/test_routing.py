@@ -1,0 +1,315 @@
+"""Tests for cost-model-guided backend routing: the staged pipeline's route
+stage, the Router policies (Static / CostModel / LoadAware), multi-space
+batched scoring (``Autotuner.scores_multi``), online latency calibration,
+and the per-backend load counters that drive spilling.
+"""
+import functools
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.autotune import Autotuner, KernelAutotuner
+from repro.core.cognate import CostModelConfig, init_cost_model
+from repro.core.latent import zero_codec
+from repro.data import generate_matrix
+from repro.kernels import spmm_ref
+from repro.serving import (CostModelRouter, KernelRequest, LoadAwareRouter,
+                           RouteCalibration, SparseKernelEngine,
+                           StaticRouter)
+
+
+def _mats(n, seed0=0, n_rows=256, n_cols=256, nnz=1200):
+    fams = ("uniform", "banded", "powerlaw", "blockdiag")
+    return [generate_matrix(fams[i % 4], seed=seed0 + i, n_rows=n_rows,
+                            n_cols=n_cols, target_nnz=nnz) for i in range(n)]
+
+
+@functools.lru_cache(maxsize=1)
+def _learned_tuner() -> Autotuner:
+    """One small randomly-initialized learned tuner shared by the module —
+    routing exercises dispatch structure, not prediction quality."""
+    cfg = CostModelConfig(ch_scale=0.125)
+    params = init_cost_model(jax.random.PRNGKey(0), cfg)
+    return Autotuner("tpu_pallas", "spmm", params, cfg, zero_codec(),
+                     resolution=8)
+
+
+def _engine(router, **kw):
+    return SparseKernelEngine(KernelAutotuner(_learned_tuner()),
+                              router=router, **kw)
+
+
+# ------------------------------------------------------ multi-space scoring
+
+def test_scores_multi_matches_scores_batch():
+    tuner = _learned_tuner()
+    mats = _mats(5, seed0=3000)
+    batch = tuner.scores_batch(mats)
+    multi = tuner.scores_multi(mats, [tuner.space, tuner.space])
+    assert len(multi) == 2
+    for scores in multi:
+        assert scores.shape == batch.shape
+        np.testing.assert_allclose(scores, batch, atol=1e-4)
+
+
+def test_scores_multi_single_dispatch_and_foreign_space():
+    from repro.hw.configspace import spade_space
+    tuner = _learned_tuner()
+    mats = _mats(4, seed0=3100)
+    foreign = spade_space()
+    before = tuner.score_dispatches
+    own, other = tuner.scores_multi(mats, [tuner.space, foreign])
+    assert tuner.score_dispatches == before + 1     # ONE fused dispatch
+    assert own.shape == (4, tuner.space.n_configs)
+    assert other.shape == (4, foreign.n_configs)
+    assert np.isfinite(own).all() and np.isfinite(other).all()
+
+
+def test_scores_multi_varying_n_cols():
+    tuner = _learned_tuner()
+    mats = _mats(2, seed0=3200) + _mats(2, seed0=3300, n_cols=512)
+    before = tuner.score_dispatches
+    (scores,) = tuner.scores_multi(mats, [tuner.space])
+    assert tuner.score_dispatches == before + 1
+    assert scores.shape == (4, tuner.space.n_configs)
+    # per-matrix scores agree with the single-shape batched path
+    np.testing.assert_allclose(scores[:2], tuner.scores_batch(mats[:2]),
+                               atol=1e-4)
+
+
+# ----------------------------------------------------------- static routing
+
+def test_static_router_reasons_and_default():
+    engine = SparseKernelEngine()
+    mats = _mats(2, seed0=3400)
+    resps = engine.step([KernelRequest(mats[0]),
+                         KernelRequest(mats[1], platform="cpu_ref")])
+    assert resps[0].platform == engine.default_platform
+    assert resps[0].route_reason == "default"
+    assert resps[1].platform == "cpu_ref"
+    assert resps[1].route_reason == "explicit"
+    routing = engine.stats()["routing"]
+    assert routing["decisions"] == {"default": 1, "explicit": 1}
+    assert routing["by_platform"][engine.default_platform] == 1
+    engine.release_stream()
+
+
+def test_unknown_platform_fails_at_route_time_naming_backends():
+    engine = SparseKernelEngine()
+    mats = _mats(2, seed0=3500)
+    with pytest.raises(KeyError, match="no backend registered") as ei:
+        engine.step([KernelRequest(mats[0]),
+                     KernelRequest(mats[1], platform="fpga_exotic")])
+    msg = str(ei.value)
+    assert "fpga_exotic" in msg
+    assert "registered platforms" in msg and "cpu_ref" in msg
+    s = engine.stats()      # the mixed batch was rejected before ANY work
+    assert s["requests"] == 0
+    assert s["stages"]["partition"]["n"] == 0
+    assert engine.featurize_calls == 0
+    assert all(v["inflight"] == 0 for v in s["load"].values())
+
+
+# ------------------------------------------------------- cost-model routing
+
+def test_cost_model_router_single_dispatch_and_install():
+    router = CostModelRouter()
+    engine = _engine(router)
+    tuner = _learned_tuner()
+    mats = _mats(6, seed0=3600)
+    before = tuner.score_dispatches
+    resps = engine.step([KernelRequest(m) for m in mats])
+    # every untagged miss was scored against ALL candidate backends in ONE
+    # batched dispatch — and the winning config was installed from it, so
+    # the step cost exactly one cost-model round-trip total
+    assert router.dispatches == 1
+    assert tuner.score_dispatches == before + 1
+    assert router.scored_patterns == len(mats)
+    assert all(r.route_reason == "cost_model" for r in resps)
+    s = engine.stats()
+    assert s["routing"]["decisions"] == {"cost_model": len(mats)}
+    assert s["routing"]["config_installs"] == len(mats)
+    assert s["featurize_calls"] == 0    # no second scoring in the engine
+    # routed platform's calibration now holds observed-vs-predicted EMAs
+    plat = resps[0].platform
+    cal = s["routing"]["calibration"][plat]
+    assert cal["n"] == len(mats)
+    assert np.isfinite(cal["offset"])
+    engine.release_stream()
+
+
+def test_cost_model_router_sticky_repeat_no_redispatch():
+    router = CostModelRouter()
+    engine = _engine(router)
+    mats = _mats(3, seed0=3700)
+    first = engine.step([KernelRequest(m) for m in mats])
+    second = engine.step([KernelRequest(m) for m in mats])
+    assert router.dispatches == 1                   # memoized routing
+    assert [r.platform for r in second] == [r.platform for r in first]
+    assert all(r.route_reason == "sticky" for r in second)
+    assert all(r.cache_hit for r in second)
+    engine.release_stream()
+
+
+def test_cost_model_router_follows_calibrated_latency():
+    router = CostModelRouter()
+    engine = _engine(router)
+    cal = engine.telemetry.calibration
+    # observe cpu_ref as dramatically faster than both pallas platforms
+    for _ in range(30):
+        cal.observe("cpu_ref", 1e-6)
+        cal.observe("tpu_interpret", 0.5)
+        cal.observe("tpu_pallas", 0.5)
+    resps = engine.step([KernelRequest(m) for m in _mats(4, seed0=3800)])
+    assert all(r.platform == "cpu_ref" for r in resps)
+    assert all(r.route_reason == "cost_model" for r in resps)
+    engine.release_stream()
+
+
+def test_cost_model_router_priors_and_unscored_default():
+    # cold (no calibration): knob-free cpu_ref has neither a model score nor
+    # an observation, so it stays out of rotation by default...
+    engine = _engine(CostModelRouter())
+    resps = engine.step([KernelRequest(m) for m in _mats(2, seed0=3900)])
+    assert all(r.platform in ("tpu_interpret", "tpu_pallas") for r in resps)
+    engine.release_stream()
+    # ...but an explicit prior can pull it in cold
+    engine2 = _engine(CostModelRouter(priors={"cpu_ref": -1e6}))
+    resps2 = engine2.step([KernelRequest(m) for m in _mats(2, seed0=3900)])
+    assert all(r.platform == "cpu_ref" for r in resps2)
+    engine2.release_stream()
+
+
+def test_cost_model_router_mixed_explicit_passthrough():
+    router = CostModelRouter()
+    engine = _engine(router)
+    mats = _mats(2, seed0=4000)
+    resps = engine.step([KernelRequest(mats[0], platform="cpu_ref"),
+                         KernelRequest(mats[1])])
+    assert resps[0].platform == "cpu_ref"
+    assert resps[0].route_reason == "explicit"
+    assert resps[1].route_reason == "cost_model"
+    engine.release_stream()
+
+
+def test_cost_model_router_explore_probes_least_observed():
+    router = CostModelRouter(explore_every=2)
+    engine = _engine(router)
+    resps = engine.step([KernelRequest(m) for m in _mats(6, seed0=4100)])
+    reasons = [r.route_reason for r in resps]
+    assert reasons.count("explore") == 3            # every 2nd decision
+    # probes reach backends the argmin would starve (e.g. cold cpu_ref)
+    assert any(r.platform == "cpu_ref" for r in resps
+               if r.route_reason == "explore")
+    engine.release_stream()
+
+
+def test_cost_model_routed_outputs_match_reference():
+    rng = np.random.default_rng(5)
+    rhs = rng.normal(size=(256, 64)).astype(np.float32)
+    engine = _engine(CostModelRouter())
+    reqs = [KernelRequest(m, rng.normal(size=m.nnz).astype(np.float32),
+                          "spmm", rhs) for m in _mats(3, seed0=4200)]
+    for resp in engine.step(reqs):
+        want = np.asarray(spmm_ref(resp.matrix, rhs))[:, :64]
+        np.testing.assert_allclose(np.asarray(resp.output)[:, :64], want,
+                                   atol=1e-4)
+    engine.release_stream()
+
+
+# ------------------------------------------------------- load-aware routing
+
+def test_load_aware_router_spills_within_batch():
+    router = LoadAwareRouter(StaticRouter(), max_inflight=4)
+    engine = SparseKernelEngine(router=router)
+    mats = _mats(10, seed0=4300)
+    resps = engine.step([KernelRequest(m) for m in mats])
+    platforms = [r.platform for r in resps]
+    assert platforms[:4] == [engine.default_platform] * 4
+    assert platforms[4:] == ["cpu_ref"] * 6         # overflow spilled
+    assert [r.route_reason for r in resps[4:]] == ["spill"] * 6
+    s = engine.stats()
+    assert s["routing"]["spills"] == 6 and router.spills == 6
+    assert s["load"][f"{engine.default_platform}/spmm"]["inflight"] == 4
+    assert s["load"]["cpu_ref/spmm"]["inflight"] == 6
+    engine.release_stream()
+    assert all(v["inflight"] == 0
+               for v in engine.stats()["load"].values())
+
+
+def test_load_aware_router_spills_across_steps_until_leases_release():
+    # synthetic saturation: step N's leases are outstanding during step N+1
+    # (double-buffer hand-off), so a saturated backend spills the next batch
+    router = LoadAwareRouter(StaticRouter(), max_inflight=2)
+    engine = SparseKernelEngine(router=router)
+    mats = _mats(4, seed0=4400)
+    first = engine.step([KernelRequest(m) for m in mats[:2]])
+    assert [r.platform for r in first] == [engine.default_platform] * 2
+    second = engine.step([KernelRequest(m) for m in mats[2:]])
+    assert [r.platform for r in second] == ["cpu_ref"] * 2
+    assert engine.stats()["routing"]["spills"] == 2
+    # draining the stream frees the depth; traffic returns to the default
+    engine.release_stream()
+    third = engine.step([KernelRequest(m) for m in mats[:2]])
+    assert [r.platform for r in third] == [engine.default_platform] * 2
+    engine.release_stream()
+
+
+def test_load_aware_spilled_outputs_match_reference():
+    rng = np.random.default_rng(6)
+    rhs = rng.normal(size=(256, 64)).astype(np.float32)
+    engine = SparseKernelEngine(
+        router=LoadAwareRouter(StaticRouter(), max_inflight=1))
+    reqs = [KernelRequest(m, rng.normal(size=m.nnz).astype(np.float32),
+                          "spmm", rhs) for m in _mats(3, seed0=4500)]
+    resps = engine.step(reqs)
+    assert [r.platform for r in resps] == \
+        [engine.default_platform, "cpu_ref", "cpu_ref"]
+    for resp in resps:
+        want = np.asarray(spmm_ref(resp.matrix, rhs))[:, :64]
+        np.testing.assert_allclose(np.asarray(resp.output)[:, :64], want,
+                                   atol=1e-4)
+    engine.release_stream()
+
+
+def test_load_aware_wraps_cost_model_router():
+    inner = CostModelRouter(priors={"tpu_interpret": -1e6})
+    router = LoadAwareRouter(inner, max_inflight=3)
+    engine = _engine(router)
+    resps = engine.step([KernelRequest(m) for m in _mats(5, seed0=4600)])
+    platforms = [r.platform for r in resps]
+    assert platforms[:3] == ["tpu_interpret"] * 3   # inner's pick
+    assert platforms[3:] == ["cpu_ref"] * 2         # then load shed
+    reasons = [r.route_reason for r in resps]
+    assert reasons[:3] == ["cost_model"] * 3
+    assert reasons[3:] == ["spill"] * 2
+    engine.release_stream()
+
+
+# ----------------------------------------------------------------- plumbing
+
+def test_route_calibration_offsets():
+    cal = RouteCalibration(alpha=0.5)
+    assert cal.offset("x") is None
+    cal.observe("x", 0.010, predicted=2.0)          # 10 ms
+    assert cal.n_observed("x") == 1
+    assert cal.offset("x") == pytest.approx(10.0 - 2.0)
+    cal.observe("x", 0.020, predicted=4.0)
+    snap = cal.snapshot()["x"]
+    assert snap["n"] == 2
+    assert snap["observed_ms"] == pytest.approx(15.0)   # EMA, alpha .5
+    assert snap["predicted"] == pytest.approx(3.0)
+    # latency-only observations (spills, sticky routes) still calibrate
+    cal.observe("y", 0.001)
+    assert cal.offset("y") == pytest.approx(1.0)
+
+
+def test_route_stage_histogram_records():
+    engine = SparseKernelEngine()
+    engine.step([KernelRequest(m) for m in _mats(2, seed0=4700)])
+    stages = engine.stats()["stages"]
+    for name in ("route", "partition", "score", "build", "execute", "step"):
+        assert stages[name]["n"] == 1
+    engine.release_stream()

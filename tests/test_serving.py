@@ -276,6 +276,94 @@ def test_engine_save_and_warm_start(tmp_path):
     assert s["featurize_calls"] == 0
 
 
+# ------------------------------------------------- per-thread lease lifecycle
+
+def test_release_stream_idempotent_and_flush_alias():
+    m = _mats(1, seed0=1700)[0]
+    engine = SparseKernelEngine()
+    engine.step([KernelRequest(m, np.ones(m.nnz, np.float32))])
+    s = engine.stats()
+    assert s["arenas"]["outstanding_leases"] == 1
+    assert s["load"][f"{engine.default_platform}/spmm"]["inflight"] == 1
+    engine.release_stream()
+    s = engine.stats()
+    assert s["arenas"]["outstanding_leases"] == 0
+    assert s["load"][f"{engine.default_platform}/spmm"]["inflight"] == 0
+    engine.release_stream()         # second call: no-op, never negative
+    s = engine.stats()
+    assert s["arenas"]["outstanding_leases"] == 0
+    assert s["load"][f"{engine.default_platform}/spmm"]["inflight"] == 0
+    engine.step([KernelRequest(m, np.ones(m.nnz, np.float32))])
+    engine.flush()                  # historical alias still releases
+    assert engine.stats()["arenas"]["outstanding_leases"] == 0
+
+
+def test_interleaved_steps_never_release_other_streams_leases():
+    m = _mats(1, seed0=1800)[0]
+    engine = SparseKernelEngine(arena_slots=2)
+    ones = np.ones(m.nnz, np.float32)
+    out, b_done, b_go, errors = {}, threading.Event(), threading.Event(), []
+
+    def stream_b():
+        try:
+            out["b1"] = engine.step([KernelRequest(m, 2 * ones)])[0]
+            b_done.set()
+            b_go.wait(timeout=30)
+            out["b2"] = engine.step([KernelRequest(m, 5 * ones)])[0]
+        except Exception as e:      # pragma: no cover
+            errors.append(e)
+            b_done.set()
+
+    a1 = engine.step([KernelRequest(m, 1 * ones)])[0]       # slot 1 (A)
+    t = threading.Thread(target=stream_b)
+    t.start()
+    b_done.wait(timeout=30)
+    assert not errors
+    assert a1.arena_slot and out["b1"].arena_slot           # both slots held
+    # stream A steps again: both slots belong to live streams, so A gets the
+    # counted un-aliased fallback — it can NOT steal B's slot...
+    a2 = engine.step([KernelRequest(m, 3 * ones)])[0]
+    assert not a2.arena_slot
+    assert engine.stats()["arena_fallbacks"] == 1
+    # ...and releasing A's batch-1 lease left B's buffer untouched
+    assert np.asarray(out["b1"].matrix.data).max() == 2.0
+    assert np.asarray(a2.matrix.data).max() == 3.0
+    # B's next step recycles the slot A's hand-off freed, not B's own
+    b_go.set()
+    t.join(timeout=30)
+    assert not errors
+    assert out["b2"].arena_slot
+    assert np.asarray(out["b2"].matrix.data).max() == 5.0
+    engine.release_stream()         # A's stream (main thread)
+    # B's thread exited with its step-2 lease outstanding; only the lease
+    # count reflects it — A's release never touched it
+    assert engine.stats()["arenas"]["outstanding_leases"] == 1
+
+
+def test_step_failure_rolls_back_leases_and_load():
+    reg = default_registry()
+
+    def boom(config, matrix, operand):
+        raise RuntimeError("kaboom")
+
+    reg.register(KernelBackend("bad_accel", "spmm",
+                               KernelAutotuner(None, cache_size=8), boom))
+    engine = SparseKernelEngine(backends=reg)
+    m = _mats(1, seed0=1900)[0]
+    operand = np.ones((m.n_cols, 8), np.float32)
+    with pytest.raises(RuntimeError, match="kaboom"):
+        engine.step([KernelRequest(m, None, "spmm", operand,
+                                   platform="bad_accel")])
+    s = engine.stats()      # the failed step left nothing leaked behind
+    assert s["load"]["bad_accel/spmm"]["inflight"] == 0
+    assert s["arenas"]["outstanding_leases"] == 0
+    # the engine keeps serving: same pattern, healthy backend, arena slot
+    resp = engine.step([KernelRequest(m, None, "spmm", operand,
+                                      platform="cpu_ref")])[0]
+    assert resp.arena_slot
+    engine.release_stream()
+
+
 # ------------------------------------------------------------- multi-backend
 
 PLATFORMS = ("tpu_interpret", "tpu_pallas", "cpu_ref")
