@@ -98,7 +98,9 @@ def _bench_policy(rows, policy: str, tuner, n_steps: int, batch: int, pool,
     return s, router
 
 
-def run(quick: bool = False):
+def run(quick: bool | None = None):
+    if quick is None:       # benchmarks.run path: REPRO_BENCH_QUICK=1
+        quick = os.environ.get("REPRO_BENCH_QUICK", "") == "1"
     rows = []
     batch = 18
     n_steps = 6 if quick else 24

@@ -21,7 +21,11 @@ whole surface:
    ``stats()`` shows both tags with independent caches.
 3. **Warm restart** — the engine persists every backend's cache to one
    namespaced file and restarts from it: the warm-started engine serves the
-   same traffic with ZERO featurizations on every backend.
+   same traffic with ZERO featurizations on every backend.  A dispatch
+   whose activations are already device-resident (``jax.Array`` — the
+   residency MoE router outputs naturally have) then takes the *device
+   build path*: block data is assembled by one jitted on-device scatter,
+   zero host numpy in the warm loop (``stats()["build_paths"]``).
 4. **Routed serving** — a second engine gets a routing policy instead of
    explicit tags: ``CostModelRouter`` scores each untagged dispatch pattern
    against every candidate backend's config space in ONE batched dispatch
@@ -168,6 +172,24 @@ def main():
     assert s2["warm_start_entries"] == 2 * n_routing_patterns  # both backends
     assert s2["featurize_calls"] == 0
     assert s2["misses"] == 0
+
+    # device-resident dispatch: hand the engine the values as a jax array
+    # (MoE router outputs live on device anyway) and the build stage takes
+    # the jitted device-scatter path — no host numpy touches the warm loop,
+    # and the async dispatch overlaps any in-flight kernels.
+    x = rng.normal(size=(T, D)).astype(np.float32)
+    topk = routings[0]
+    _, req = make_request(topk, x, T, E, D, K, w_dev)
+    resp = engine2.step([KernelRequest(req.mat, jnp.asarray(req.values),
+                                       "spmm", w_dev)])[0]
+    assert resp.device_built and resp.cache_hit
+    want = np.einsum("td,tkdf->tf", x, w_gathered[topk])
+    assert np.abs(np.asarray(resp.output)[:T] - want).max() < 1e-3
+    engine2.drain()                     # force completion, release leases
+    bp = engine2.stats()["build_paths"]
+    print(f"device build path: device={bp['device']} host={bp['host']} "
+          f"drain_waits={bp['drain_waits']}")
+    assert bp["device"] == 1
 
     # routed serving: drop the explicit tags and let the engine place each
     # request.  A (randomly initialized — placement mechanics, not accuracy)

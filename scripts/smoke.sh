@@ -87,10 +87,32 @@ if [ "$QUICK" != "1" ]; then
   python -m benchmarks.run bsr_preproc
 fi
 
-echo "== serving engine benchmark (quick) =="
-python benchmarks/serving_engine.py --quick
+echo "== serving + routing benchmarks (quick) -> BENCH_5.json =="
+REPRO_BENCH_QUICK=1 python -m benchmarks.run serving routing \
+  --json BENCH_5.json
 
-echo "== routing policy benchmark (quick) =="
-python benchmarks/serving_routing.py --quick
+echo "== device_build overlap gate =="
+python - <<'EOF'
+"""The async pipeline must not regress below the synchronous path: the
+device_build scenario's overlapped req/s is gated against the per-step
+drain() baseline.  On a saturated single-CPU container the expected
+ratio is ~1.0 (compute has no spare core to overlap into), so a small
+noise tolerance applies — the gate catches the async path becoming
+*materially* slower than draining every step, which is the regression
+mode this guards against."""
+import json
+
+doc = json.load(open("BENCH_5.json"))
+by = {r["name"]: r for r in doc["rows"]}
+ov = by["serving/device_build/overlapped_requests_per_s"]["metrics"]["req_per_s"]
+sy = by["serving/device_build/synchronous_requests_per_s"]["metrics"]["req_per_s"]
+host = by["serving/device_build/overlapped_requests_per_s"]["metrics"]["host_builds"]
+print(f"overlapped={ov:.1f} req/s synchronous={sy:.1f} req/s "
+      f"({ov / sy:.2f}x), host_builds={host:.0f}")
+assert host == 0, "warm device-resident mix did host-numpy scatters"
+assert ov >= 0.95 * sy, (
+    f"overlapped execute ({ov:.1f} req/s) regressed below the "
+    f"synchronous path ({sy:.1f} req/s)")
+EOF
 
 echo "smoke OK"

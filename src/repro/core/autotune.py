@@ -408,6 +408,12 @@ class TunedKernel:
         for a cached pattern collapses to one warm fancy-indexed write."""
         return self.plan.build(values, dtype, reuse=reuse)
 
+    def build_device(self, values, dtype=jnp.float32) -> BsrMatrix:
+        """Device-resident counterpart of ``build``: one jitted
+        gather+scatter, no host numpy — for values already on device (bit-
+        identical output; see ``BsrPlan.build_device``)."""
+        return self.plan.build_device(values, dtype)
+
 
 class AutotuneCache:
     """Pattern-keyed LRU of ``TunedKernel`` entries.

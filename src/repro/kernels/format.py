@@ -21,11 +21,28 @@ function of the sparsity pattern) from the *values*, so a serving loop that
 sees the same pattern with fresh values (e.g. MoE dispatch: fixed routing,
 new activations) pays only one fancy-indexed scatter per batch.  Plans are
 what ``repro.core.autotune.KernelAutotuner`` caches per pattern digest.
+
+Two scatter paths share each plan's structure:
+
+* **Host** (``build``/``scatter_into``): numpy fancy-indexed write into a
+  host buffer, converted to a device array on ``wrap``.  The cold /
+  reference path, and the right one for values that live in host memory.
+* **Device** (``build_device``/``device_update``): the same scatter as ONE
+  jitted gather+scatter on whatever device JAX runs on.  Values that are
+  already device-resident (MoE router outputs, activations straight from a
+  preceding kernel) become kernel-ready block data without a host
+  round-trip, and the dispatch is asynchronous — the serving engine
+  overlaps it with in-flight kernels.  ``device_update`` additionally
+  donates the previous block buffer (every build writes the exact same
+  positions), so the steady-state rebuild is in place.  Outputs are
+  bit-identical to the host path.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -59,6 +76,30 @@ class BsrMatrix:
         return (self.n_blockrows * self.block_m, self.n_blockcols * BK)
 
 
+_I32_MAX = np.iinfo(np.int32).max
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "dtype"))
+def _device_scatter(values, take, flat, *, shape, dtype):
+    """values -> (nnzb, bm, BK) block data in one jitted gather + scatter.
+    Scatter positions are unique by construction (plans are built from
+    deduplicated coordinates), so ``unique_indices`` is safe."""
+    v = values.reshape(-1).astype(dtype)[take]
+    size = shape[0] * shape[1] * shape[2]
+    flatbuf = jnp.zeros((size,), dtype).at[flat].set(v, unique_indices=True)
+    return flatbuf.reshape(shape)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _device_rescatter(buf, values, take, flat):
+    """In-place (donated) rebuild: every build writes the exact same
+    positions, so overwriting the previous block data needs no re-zeroing.
+    ``buf`` is invalid after this call — callers own the returned array."""
+    v = values.reshape(-1).astype(buf.dtype)[take]
+    return buf.reshape(-1).at[flat].set(v, unique_indices=True) \
+        .reshape(buf.shape)
+
+
 @dataclasses.dataclass
 class BsrPlan:
     """Structure-only half of a BSR conversion, reusable across value sets.
@@ -67,9 +108,15 @@ class BsrPlan:
     (aligned with the rows/cols the plan was built from) into block data:
     ``data[slot[i], rloc[i], cloc[i]] = values[take[i]]``.
 
+    The same structure drives two paths: the numpy host scatter
+    (``build``/``scatter_into``) and the jitted device scatter
+    (``build_device``/``device_update``), which consumes device-resident
+    values without a host round-trip and produces bit-identical block data.
+
     Thread-safety: the scatter arrays are immutable after construction, so
-    concurrent ``scatter_into``/``wrap`` calls into *caller-owned* buffers
-    are safe.  ``build(..., reuse=True)`` and ``build_data(reuse=True)``
+    concurrent ``scatter_into``/``wrap``/``build_device`` calls into
+    *caller-owned* buffers are safe (the cached index arrays are built
+    idempotently).  ``build(..., reuse=True)`` and ``build_data(reuse=True)``
     share one plan-owned buffer and must be externally serialized — serving
     code uses ``repro.serving.arena.PlanArena`` (per-slot buffers plus
     leases) instead of ``reuse`` for exactly this reason.
@@ -85,6 +132,9 @@ class BsrPlan:
     cloc: np.ndarray        # (n_entries,) int16 col within block (< BK)
     _buf: np.ndarray | None = dataclasses.field(default=None, repr=False)
     _jids: tuple | None = dataclasses.field(default=None, repr=False)
+    _flat: np.ndarray | None = dataclasses.field(default=None, repr=False)
+    _dev: tuple | None = dataclasses.field(default=None, repr=False)
+    _need: int | None = dataclasses.field(default=None, repr=False)
 
     @property
     def nnzb(self) -> int:
@@ -137,6 +187,81 @@ class BsrPlan:
         ``reuse=True`` the result aliases plan-owned storage (valid until the
         next reusing ``build`` on this plan) — the serving-loop fast path."""
         return self.wrap(self.build_data(values, reuse=reuse), dtype)
+
+    # --------------------------------------------------- device scatter path
+
+    def flat_index(self) -> np.ndarray:
+        """Flattened destination index of every entry in the (nnzb, bm, BK)
+        block-data buffer — ``(slot * bm + rloc) * BK + cloc`` — the scatter
+        half of the device build.  Computed once and cached (int32 when the
+        buffer size fits, so cached plans stay small); ``repro.serving
+        .persist`` format v3 carries it so a warm-started pattern's first
+        device build pays neither the sort nor this pass."""
+        if self._flat is None:
+            flat = (self.slot.astype(np.int64) * self.block_m
+                    + self.rloc.astype(np.int64)) * BK \
+                + self.cloc.astype(np.int64)
+            size = self.nnzb * self.block_m * BK
+            self._flat = flat.astype(np.int32 if size <= _I32_MAX
+                                     else np.int64)
+        return self._flat
+
+    def device_indices(self) -> tuple:
+        """(take, flat) as device arrays, converted once and cached — the
+        gather/scatter pair ``build_device``/``device_update`` consume."""
+        if self._dev is None:
+            flat = jnp.asarray(self.flat_index())
+            if flat.dtype != self.flat_index().dtype:
+                # x64-disabled JAX silently wraps an int64 index to int32 —
+                # scatter corruption, not an error.  Refuse instead.
+                raise ValueError(
+                    "plan's block buffer needs int64 scatter indices; "
+                    "enable jax_enable_x64 or use the host build path")
+            self._dev = (jnp.asarray(self.take, jnp.int32), flat)
+        return self._dev
+
+    def _check_values(self, v: jnp.ndarray) -> jnp.ndarray:
+        """The device gather clamps out-of-range indices instead of raising
+        like the numpy host path — reject short values up front so the two
+        paths fail identically.  The bound is computed once per plan (a
+        size check per build, no per-build host scan)."""
+        if self._need is None:
+            self._need = int(self.take.max()) + 1 if self.take.size else 0
+        if v.size < self._need:
+            raise ValueError(f"values has {v.size} elements; plan scatters "
+                             f"from indices up to {self._need - 1}")
+        return v
+
+    def device_data(self, values, dtype=jnp.float32) -> jnp.ndarray:
+        """Device-resident (nnzb, bm, BK) block data from ``values`` in a
+        single jitted gather+scatter — no host numpy in the path, so values
+        already on device (MoE router outputs, activations from a previous
+        kernel) never round-trip through the host.  Bit-identical to
+        ``build_data``.  The dispatch is asynchronous: the returned array is
+        a future the next kernel launch can consume immediately."""
+        take, flat = self.device_indices()
+        return _device_scatter(self._check_values(jnp.asarray(values)),
+                               take, flat,
+                               shape=(self.nnzb, self.block_m, BK),
+                               dtype=np.dtype(dtype).name)
+
+    def device_update(self, buf: jnp.ndarray, values) -> jnp.ndarray:
+        """Rebuild device block data in place: ``buf`` (a previous
+        ``device_data``/``device_update`` result) is **donated** to the
+        jitted scatter, so the steady-state rebuild allocates nothing and
+        re-zeroes nothing (every build writes the same positions).  ``buf``
+        is invalid afterwards — use only the returned array.  Callers must
+        guarantee no in-flight consumer still needs ``buf``'s *alias* (the
+        arena's lease protocol exists for exactly this)."""
+        take, flat = self.device_indices()
+        return _device_rescatter(buf, self._check_values(jnp.asarray(values)),
+                                 take, flat)
+
+    def build_device(self, values, dtype=jnp.float32) -> BsrMatrix:
+        """Values -> BsrMatrix entirely on device (one jitted scatter; no
+        host numpy in the warm path).  The cold/reference counterpart is
+        ``build``; outputs are bit-identical."""
+        return self.wrap(self.device_data(values, dtype), dtype)
 
 
 def _as_jax(data: np.ndarray, dtype) -> jnp.ndarray:

@@ -30,8 +30,12 @@ subsystem owns that layer:
   fronts them all, each with an isolated cache.
 * ``arena`` — ``PlanArena``: a two-slot (configurable) rotation of BSR
   scatter buffers per cached pattern, generalizing
-  ``BsrPlan.build(reuse=True)``.  Batch N+1's host-side scatter overlaps
-  batch N's in-flight kernel; slot-generation leases guarantee an alias is
+  ``BsrPlan.build(reuse=True)``.  Each slot carries a host buffer (numpy
+  scatter) and a device buffer (jitted scatter, steady state donated in
+  place — the path device-resident values take with zero host numpy).
+  Batch N+1's scatter overlaps batch N's in-flight kernel — kernel
+  launches stay asynchronous and ``SparseKernelEngine.drain()`` is the
+  synchronous point; slot-generation leases guarantee an alias is
   never overwritten while referenced (exhaustion raises ``ArenaOverrun`` and
   the engine falls back to an un-aliased build).
 * ``persist`` — atomic single-file serialization of every backend's autotune

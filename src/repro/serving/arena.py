@@ -17,6 +17,16 @@ generalizes that single buffer to an n-slot (default two-slot) rotation:
   slots raises ``ArenaOverrun`` (callers fall back to a fresh, un-aliased
   allocation; ``repro.serving.engine`` counts those).
 
+Each slot carries **two** buffers, allocated lazily per path: a host numpy
+buffer for ``build`` (the cold/reference scatter) and a device-resident
+block buffer for ``build_device`` (the jitted scatter — after the slot's
+first device build, rebuilds *donate* the previous buffer to the jitted
+update, so the steady state allocates nothing and never touches host
+memory).  Donation means a released device lease's matrix is physically
+invalidated when its slot is reused — JAX raises on any further access, so
+a protocol violation is loud, never silent corruption; host-path matrices,
+by contrast, survive slot reuse because ``wrap`` copies to device.
+
 The arena is per-plan (buffer shape is a function of the plan's nnzb and
 block size); ``repro.serving.engine`` keeps one per cached pattern.
 """
@@ -40,7 +50,8 @@ class ArenaOverrun(RuntimeError):
 
 @dataclasses.dataclass
 class _Slot:
-    buf: np.ndarray
+    buf: np.ndarray | None = None   # host scatter buffer (lazy)
+    dev: object = None              # device-resident block data (lazy)
     generation: int = 0
     leased: bool = False
 
@@ -75,11 +86,11 @@ class PlanArena:
             raise ValueError("need at least one slot")
         self.plan = plan
         self.buf_dtype = buf_dtype
-        self._slots = [_Slot(plan.alloc_buffer(buf_dtype))
-                       for _ in range(n_slots)]
+        self._slots = [_Slot() for _ in range(n_slots)]
         self._next = 0
         self._lock = threading.Lock()
         self.builds = 0
+        self.device_builds = 0
         self.overruns = 0
 
     @property
@@ -115,10 +126,46 @@ class PlanArena:
                 slot.leased = False
 
     def build(self, values, dtype=jnp.float32) -> ArenaLease:
-        """Scatter ``values`` through the plan into the next free slot."""
+        """Host-scatter ``values`` through the plan into the next free
+        slot's host buffer (allocated zeroed on the slot's first host
+        build — every build writes the same positions, so it never needs
+        re-zeroing)."""
         i, slot = self._checkout()
-        self.plan.scatter_into(values, slot.buf)
+        try:
+            if slot.buf is None or slot.buf.dtype != np.dtype(self.buf_dtype):
+                slot.buf = self.plan.alloc_buffer(self.buf_dtype)
+            self.plan.scatter_into(values, slot.buf)
+        except BaseException:
+            self._release(i, slot.generation)   # never leak a slot
+            raise
         with self._lock:
             self.builds += 1
         return ArenaLease(self.plan.wrap(slot.buf, dtype), self, i,
+                          slot.generation)
+
+    def build_device(self, values, dtype=jnp.float32) -> ArenaLease:
+        """Device-scatter ``values`` into the next free slot's device
+        buffer — one asynchronous jitted dispatch, zero host numpy.
+
+        The slot's first device build allocates on device
+        (``BsrPlan.device_data``); every later build *donates* the slot's
+        previous buffer to the jitted update (``BsrPlan.device_update``),
+        so the steady state is an in-place rewrite.  Donation physically
+        invalidates the previous generation's matrix when its slot is
+        reused — safe because a slot is only rehanded once its lease was
+        released (accessing the stale alias raises instead of reading
+        corrupted data)."""
+        i, slot = self._checkout()
+        try:
+            if slot.dev is not None and slot.dev.dtype == np.dtype(dtype):
+                slot.dev = self.plan.device_update(slot.dev, values)
+            else:
+                slot.dev = self.plan.device_data(values, dtype)
+        except BaseException:
+            self._release(i, slot.generation)   # never leak a slot
+            raise
+        with self._lock:
+            self.builds += 1
+            self.device_builds += 1
+        return ArenaLease(self.plan.wrap(slot.dev, dtype), self, i,
                           slot.generation)

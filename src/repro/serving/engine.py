@@ -29,22 +29,41 @@ six-stage pipeline — each stage a separate method, so scheduling PRs
    skip featurization entirely.  Backends never share cache entries.
 4. **Build** — values scatter through each pattern's cached ``BsrPlan``
    into a two-slot double-buffered ``PlanArena`` (keyed per backend tag);
-   slot exhaustion falls back to a counted un-aliased build.
+   slot exhaustion falls back to a counted un-aliased build.  Two scatter
+   paths: values already on device (e.g. MoE router outputs) take the
+   **device** path — one asynchronous jitted gather+scatter, steady state
+   donating the slot's previous device buffer in place, zero host numpy —
+   while host values take the classic numpy scatter.  ``device_build``
+   selects ``"auto"`` (by value residency) / ``"always"`` / ``"never"``;
+   ``stats()["build_paths"]`` counts both paths, the overlap ratio, and
+   drain waits.
 5. **Execute** — requests carrying a dense operand run through their
-   backend's executor with the tuned tile config; operand-less requests
-   are "prepare-only".
+   backend's executor with the tuned tile config; the launch is JAX-async
+   (nothing calls ``block_until_ready``), so the kernel is still in
+   flight when ``step`` returns and the *next* batch's scatter overlaps
+   it.  Operand-less requests are "prepare-only".
 6. **Account** — responses assemble in request order; routing decisions,
    per-backend serve latency, and observed-vs-predicted calibration
-   (``RouteCalibration`` — what keeps ``CostModelRouter`` honest) fold
-   into telemetry; the *previous* batch's leases and load accounting
-   release (double-buffer hand-off); autosave runs if due.
+   (``RouteCalibration`` — what keeps ``CostModelRouter`` honest, now fed
+   per ``(platform, op)``) fold into telemetry; the batch is stamped with
+   a dispatch generation and handed to the calling thread's stream; the
+   *previous* generation — dispatched a full step ago, its kernels
+   overlapped by everything this step just did — is awaited and its
+   leases and load accounting release (double-buffer hand-off with
+   backpressure: run-ahead is bounded at two generations, so the host can
+   never flood the dispatch queue, and a donated device buffer is never
+   re-donated under a live consumer).
 
-Batch N's leases are released only after batch N+1 is dispatched, so the
-engine is safe even when kernel launches are asynchronous.  ``stats()``
-renders global hit rates, per-stage latency histograms (p50/p99),
-evictions, persistence events, a per-backend section, a ``"routing"``
-section (decision reasons, per-platform shares, spill counts, calibration),
-and per-backend live load.
+Batch N's leases are released only after batch N+1 is dispatched
+(generation hand-off), so the engine is safe with asynchronous kernel
+launches; ``drain()`` forces completion of the calling thread's in-flight
+work (blocks on every dispatched array) and releases every generation —
+call it before reading results out-of-band or timing a synchronous
+baseline.  ``stats()`` renders global hit rates, per-stage latency
+histograms (p50/p99), build-path counters, evictions, persistence events,
+a per-backend section, a ``"routing"`` section (decision reasons,
+per-platform shares, spill + hysteresis counts, calibration), and
+per-backend live load.
 
 With ``persist_path`` set, the engine warm-starts every backend's cache from
 one namespaced file at construction (zero featurizations for
@@ -66,6 +85,7 @@ import time
 from collections import OrderedDict
 from pathlib import Path
 
+import jax
 import numpy as np
 
 from repro.core.autotune import (Autotuner, KernelAutotuner, TunedKernel,
@@ -105,7 +125,15 @@ class KernelRequest:
 class KernelResponse:
     """Per-request result: the tuned config, built BSR matrix, kernel output
     (``None`` for prepare-only), and routing/caching provenance
-    (``platform`` + ``route_reason`` say where the request ran and why)."""
+    (``platform`` + ``route_reason`` say where the request ran and why).
+
+    ``output`` and ``matrix.data`` are asynchronously dispatched device
+    arrays — consuming them (or ``engine.drain()``) forces completion.  A
+    *device-built* arena matrix additionally aliases arena device storage:
+    it is physically invalidated (JAX raises on access) once its slot
+    rotates, i.e. after the thread's next-next ``step`` — consume or copy
+    it before then, exactly the lease contract.  Host-built matrices are
+    independent device copies and never invalidate."""
     digest: str
     config: dict
     matrix: BsrMatrix
@@ -114,6 +142,8 @@ class KernelResponse:
     arena_slot: bool            # False -> overflow fallback (fresh buffer)
     platform: str = ""          # backend tag the request was served by
     route_reason: str = ""      # router's reason (explicit/default/... )
+    device_built: bool = False  # True -> jitted device scatter built it
+    generation: int = 0         # engine dispatch generation of this batch
 
 
 @dataclasses.dataclass
@@ -127,6 +157,7 @@ class _StepState:
     hit_of: dict = dataclasses.field(default_factory=dict)
     entries: list = dataclasses.field(default_factory=list)
     built: list = dataclasses.field(default_factory=list)
+    device_flags: list = dataclasses.field(default_factory=list)
     outputs: list = dataclasses.field(default_factory=list)
     leases: list = dataclasses.field(default_factory=list)
     loads: list = dataclasses.field(default_factory=list)   # (backend, n)
@@ -156,6 +187,12 @@ class SparseKernelEngine:
         router: the routing policy (``repro.serving.router``) deciding which
             backend serves each request.  Default ``StaticRouter`` —
             explicit tags honored, untagged traffic to the default platform.
+        device_build: which scatter path builds block data.  ``"auto"``
+            (default) takes the jitted device path for values that are
+            already device-resident (``jax.Array``) and the numpy host
+            path otherwise; ``"always"`` forces the device path (host
+            values are transferred first); ``"never"`` forces the host
+            path.  ``True``/``False`` alias always/never.
 
     Thread-safety: all public methods are safe under concurrent callers;
     see the module docstring for the per-thread lease protocol.
@@ -166,7 +203,8 @@ class SparseKernelEngine:
                  persist_path: str | Path | None = None,
                  autosave_every: int | None = None, interpret: bool = True,
                  backends: BackendRegistry | None = None,
-                 router: Router | None = None):
+                 router: Router | None = None,
+                 device_build: str | bool = "auto"):
         if backends is None:
             backends = default_registry(
                 tuner, cache_size=cache_size,
@@ -190,6 +228,14 @@ class SparseKernelEngine:
             if not all_bes:
                 raise ValueError("backend registry has no backends")
             self.tuner = all_bes[0].tuner
+        if device_build is True:
+            device_build = "always"
+        elif device_build is False:
+            device_build = "never"
+        if device_build not in ("auto", "always", "never"):
+            raise ValueError(f"device_build must be auto/always/never, "
+                             f"got {device_build!r}")
+        self.device_build = device_build
         self.arena_slots = arena_slots
         self.autosave_every = autosave_every
         self.telemetry = EngineTelemetry()
@@ -207,7 +253,8 @@ class SparseKernelEngine:
         # counted un-aliased fallback.
         self._stream = threading.local()
         self._outstanding = 0
-        self._lock = threading.Lock()   # guards _arenas and _outstanding
+        self._generation = 0            # monotonically stamps dispatches
+        self._lock = threading.Lock()   # guards _arenas/_outstanding/_generation
         if self.persist_path is not None:
             self._warm_start()
 
@@ -333,29 +380,56 @@ class SparseKernelEngine:
             if unscored:
                 self.telemetry.count(score_dispatches=1)
 
+    def _device_path(self, values) -> bool:
+        """Whether this request's values take the jitted device scatter."""
+        if self.device_build == "always":
+            return True
+        if self.device_build == "never":
+            return False
+        return isinstance(values, jax.Array)
+
     def _build_stage(self, st: _StepState) -> None:
         """Scatter each request's values through its cached plan into an
         arena slot (double buffer), falling back to a counted un-aliased
-        build on slot exhaustion."""
+        build on slot exhaustion.  Device-resident values scatter on
+        device (one async jitted dispatch, no host numpy); host values
+        take the numpy path.  Builds issued while this thread's previous
+        generation is still in flight count as *overlapped* — the async
+        pipeline working as intended."""
         st.built = [None] * len(st.requests)
+        st.device_flags = [False] * len(st.requests)
+        overlapped = bool(getattr(self._stream, "leases", ()))
+        n_device = n_host = 0
         for tag, idxs in st.groups.items():
             t0 = time.perf_counter()
             for i in idxs:
                 r, entry = st.requests[i], st.entries[i]
                 values = r.values if r.values is not None \
                     else np.ones(r.mat.nnz, np.float32)
+                on_device = self._device_path(values)
+                st.device_flags[i] = on_device
                 arena = self._arena_for(tag + (st.digests[i],), entry)
                 try:
-                    lease = arena.build(values)
+                    lease = arena.build_device(values) if on_device \
+                        else arena.build(values)
                     st.leases.append(lease)
                     st.built[i] = (lease.matrix, True)
                 except ArenaOverrun:
                     self.telemetry.count(arena_fallbacks=1)
-                    st.built[i] = (entry.plan.build(values), False)
+                    built = entry.plan.build_device(values) if on_device \
+                        else entry.plan.build(values)
+                    st.built[i] = (built, False)
+                if on_device:
+                    n_device += 1
+                else:
+                    n_host += 1
             dt = time.perf_counter() - t0
             st.tag_seconds[tag] = st.tag_seconds.get(tag, 0.0) + dt
             st.tag_serve_seconds[tag] = \
                 st.tag_serve_seconds.get(tag, 0.0) + dt
+        self.telemetry.count(
+            device_builds=n_device, host_builds=n_host,
+            overlapped_builds=(n_device + n_host) if overlapped else 0)
 
     def _execute_stage(self, st: _StepState) -> None:
         """Launch each backend's kernel for requests carrying a dense
@@ -399,7 +473,7 @@ class SparseKernelEngine:
                 if idxs else 0.0
             for i in idxs:
                 self.telemetry.calibration.observe(
-                    tag[0], per_req, st.decisions[i].predicted)
+                    tag[0], per_req, st.decisions[i].predicted, op=tag[1])
         reasons: dict[tuple[str, str], int] = {}
         for d in st.decisions:
             key = (d.platform, d.reason)
@@ -410,18 +484,40 @@ class SparseKernelEngine:
             self.telemetry.count(route_config_installs=st.installs)
         self.telemetry.count(hits=total_hits, misses=total_misses)
 
+        with self._lock:
+            self._generation += 1
+            generation = self._generation
         responses = [
             KernelResponse(dg, entry.config, matrix, output, st.hit_of[i],
                            in_arena, st.decisions[i].platform,
-                           st.decisions[i].reason)
+                           st.decisions[i].reason, st.device_flags[i],
+                           generation)
             for i, (dg, entry, (matrix, in_arena), output) in enumerate(
                 zip(st.digests, st.entries, st.built, st.outputs))]
 
+        # everything this generation dispatched asynchronously — every
+        # built matrix (arena-leased AND overrun-fallback builds, which
+        # carry no lease but were still async device dispatches) plus the
+        # kernel outputs — so drain() can force completion of all of it
+        refs = [matrix.data for matrix, _ in st.built] \
+            + [o for o in st.outputs if o is not None]
+
         # this stream's batch N-1 kernels were dispatched a full step ago —
         # its slots can rotate now that batch N is in flight (double-buffer
-        # hand-off), and its backend in-flight depth drops with it
-        prev_leases, prev_loads = self._swap_stream(st.leases, st.loads)
+        # hand-off), and its backend in-flight depth drops with it.  The
+        # thread-local swap is what keys release to the dispatch
+        # generation: a stream holds exactly one outstanding generation,
+        # and only the one being swapped out is ever released.
+        prev_leases, prev_loads, prev_refs = self._swap_stream(
+            st.leases, st.loads, refs)
         st.handed_off = True
+        # two-deep pipeline backpressure: wait for generation N-1 (its
+        # entire step overlapped batch N's host work) before rotating its
+        # slots — run-ahead stays bounded at two generations instead of
+        # flooding the dispatch queue, and a donated device buffer can
+        # never be re-donated while a consumer might still read it.
+        for ref in prev_refs:
+            jax.block_until_ready(ref)
         for lease in prev_leases:
             lease.release()
         for be, n in prev_loads:
@@ -448,28 +544,57 @@ class SparseKernelEngine:
             return arena
 
     def _swap_stream(self, leases: list[ArenaLease],
-                     loads: list[tuple[KernelBackend, int]]):
-        """Install this thread's new outstanding batch; return the old one
-        (its leases and backend-load shares, to be released together)."""
+                     loads: list[tuple[KernelBackend, int]],
+                     refs: list = ()):
+        """Install this thread's new outstanding batch (leases, backend-load
+        shares, async dispatch refs); return the old one (leases, loads,
+        refs — to be released, and optionally waited on, together).  A
+        stream holds exactly one outstanding generation, so this swap IS
+        the generation hand-off."""
         prev_leases = getattr(self._stream, "leases", [])
         prev_loads = getattr(self._stream, "loads", [])
+        prev_refs = getattr(self._stream, "refs", [])
         self._stream.leases = leases
         self._stream.loads = loads
+        self._stream.refs = list(refs)
         with self._lock:
             self._outstanding += len(leases) - len(prev_leases)
-        return prev_leases, prev_loads
+        return prev_leases, prev_loads, prev_refs
 
     def release_stream(self) -> None:
         """Release the calling thread's outstanding arena leases and drop
         its backend in-flight accounting (call once this stream's last
         results have been consumed or copied).  Idempotent: a second call
         with nothing outstanding is a no-op, and it never touches another
-        thread's leases."""
-        prev_leases, prev_loads = self._swap_stream([], [])
+        thread's leases.  Does NOT wait for in-flight dispatches — use
+        ``drain()`` to force completion first."""
+        prev_leases, prev_loads, _ = self._swap_stream([], [])
         for lease in prev_leases:
             lease.release()
         for be, n in prev_loads:
             be.load.end(n)
+
+    def drain(self) -> None:
+        """Force completion of the calling thread's in-flight work, then
+        release every outstanding generation.
+
+        Blocks until every array the stream's last dispatched batch
+        produced (arena matrices and kernel outputs) is ready, releases the
+        leases and load accounting, and counts a ``drain_wait`` when there
+        was anything to wait on.  After ``drain()`` the thread holds no
+        leases of any generation — the synchronous point the async pipeline
+        is measured against, and the right call before tearing a stream
+        down or handing its results across threads.  Idempotent."""
+        prev_leases, prev_loads, prev_refs = self._swap_stream([], [])
+        pending = bool(prev_leases or prev_loads or prev_refs)
+        for ref in prev_refs:
+            jax.block_until_ready(ref)
+        for lease in prev_leases:
+            lease.release()
+        for be, n in prev_loads:
+            be.load.end(n)
+        if pending:
+            self.telemetry.count(drain_waits=1)
 
     def flush(self) -> None:
         """Alias of ``release_stream()`` (the historical name)."""
@@ -485,16 +610,20 @@ class SparseKernelEngine:
 
     def stats(self) -> dict:
         """Snapshot of all counters: global hit rates, per-stage latency
-        histograms, a ``"backends"`` section keyed ``"platform/op"`` with
-        per-backend requests / hit rate / serve p50-p99, a ``"routing"``
-        section (decision reasons, per-platform request shares, spill
-        count, per-platform observed-vs-predicted calibration), per-backend
+        histograms, ``"build_paths"`` (device vs host scatter counts,
+        overlap ratio, drain waits), a ``"backends"`` section keyed
+        ``"platform/op"`` with per-backend requests / hit rate / serve
+        p50-p99, a ``"routing"`` section (decision reasons, per-platform
+        request shares, spill + hysteresis counts, per-platform
+        observed-vs-predicted calibration with per-op detail), per-backend
         live load (``"load"``: in-flight depth / peak / total), cache and
         arena occupancy, and persistence events.  ``"cache"`` is the
         *default* backend's cache (pre-registry compat); ``"caches"``
         reports every platform's occupancy and eviction counters.  Safe to
         call concurrently with ``step``."""
         out = self.telemetry.snapshot(cache=self.tuner.cache)
+        out["routing"]["spill_hysteresis"] = getattr(self.router,
+                                                     "spill_hysteresis", 0)
         out["featurize_calls"] = self.featurize_calls
         out["caches"] = {}
         for plat, caches in self.backends.caches_by_platform().items():
@@ -508,7 +637,8 @@ class SparseKernelEngine:
                        for tag, load in self.backends.loads_by_tag().items()}
         with self._lock:
             out["arenas"] = {"resident": len(self._arenas),
-                             "outstanding_leases": self._outstanding}
+                             "outstanding_leases": self._outstanding,
+                             "generation": self._generation}
         return out
 
     # --------------------------------------------------------- persistence

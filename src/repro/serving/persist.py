@@ -15,9 +15,22 @@ entries into that backend's own cache with one load.  Entries without a tag
 — version-1 files (the pre-registry single-backend format) and tag-less
 ``save_cache`` output — surface under the ``LEGACY_NAMESPACE`` key and the
 restoring engine maps them to its *own* default backend.
-Entries whose tag no backend claims, or whose arrays fail validation, are
+Entries whose tag no backend claims, or whose arrays fail validation
+(shape, index range, or a scatter-array dtype that doesn't match the plan
+layout — a defect that would otherwise surface only at first scatter), are
 *individually* skipped (counted in ``GroupedCacheLoad.skipped``) — one bad
 or orphaned entry never costs the rest of the file.
+
+**Device index arrays (format version 3).**  Each entry additionally
+carries the plan's flattened device-scatter index (``BsrPlan.flat_index``
+— the scatter half of the jitted device build path).  At load it is
+checked for consistency against the scatter arrays it derives from (an
+in-range but *wrong* index would mis-scatter silently, and only on the
+device path), so the flatten cost is folded into load-time validation —
+the restored plan is device-ready, and its first device build on the
+serving path is already the steady-state single jitted dispatch.
+Version-2 and version-1 files still restore (the index is recomputed
+lazily on first device build).
 
 Restore is strictly best-effort: a structurally unreadable file (missing,
 truncated/garbled npz, unknown version) logs and returns ``None`` so the
@@ -46,13 +59,19 @@ __all__ = ["CACHE_FORMAT_VERSION", "LEGACY_NAMESPACE", "GroupedCacheLoad",
            "save_cache", "save_backends", "load_cache", "load_grouped",
            "warm_start"]
 
-CACHE_FORMAT_VERSION = 2
+CACHE_FORMAT_VERSION = 3
 
 #: Namespace key ``load_grouped`` files version-1 (pre-tag) entries under;
 #: callers route it to their default backend.
 LEGACY_NAMESPACE = None
 
 _PLAN_ARRAYS = ("rowids", "colids", "take", "slot", "rloc", "cloc")
+
+#: The plan layout's scatter-array dtypes — validated at load so a file
+#: whose arrays were tampered with (or written by foreign code) is skipped
+#: at restore instead of failing at first scatter.
+_PLAN_DTYPES = {"rowids": np.int32, "colids": np.int32, "take": np.int32,
+                "slot": np.int32, "rloc": np.int16, "cloc": np.int16}
 
 
 @dataclasses.dataclass
@@ -96,7 +115,8 @@ def _atomic_savez(path: Path, arrays: dict) -> Path:
 
 def _serialize(flat: list[tuple], path: Path, version: int) -> Path:
     """[(tag, (op, digest), entry), ...] -> atomically committed ``.npz``.
-    ``version=1`` omits the per-entry backend tag (the legacy format)."""
+    ``version=1`` omits the per-entry backend tag (the legacy format);
+    ``version=2`` omits the device-scatter index arrays."""
     manifest = {"version": version, "entries": []}
     arrays = {}
     for i, (tag, (op, digest), e) in enumerate(flat):
@@ -109,23 +129,30 @@ def _serialize(flat: list[tuple], path: Path, version: int) -> Path:
         manifest["entries"].append(m)
         for name in _PLAN_ARRAYS:
             arrays[f"e{i}_{name}"] = getattr(plan, name)
+        if version >= 3:
+            arrays[f"e{i}_dindex"] = plan.flat_index()
     arrays["manifest"] = np.frombuffer(
         json.dumps(manifest).encode(), np.uint8)
     return _atomic_savez(path, arrays)
 
 
-def save_backends(grouped, path: str | os.PathLike) -> Path:
+def save_backends(grouped, path: str | os.PathLike, *,
+                  version: int = CACHE_FORMAT_VERSION) -> Path:
     """Atomically write every backend's cache to one namespaced ``.npz``.
 
     ``grouped`` is ``{platform_tag: AutotuneCache | [AutotuneCache, ...]}``
     (the shape ``BackendRegistry.caches_by_platform`` returns) — a backend
     registry itself also works.  Entries keep their in-cache ``(op, digest)``
     keys; the platform tag is recorded per entry in the manifest.
+    ``version=2`` writes the pre-device-index byte layout (compatibility
+    tests / older readers).
     """
+    if version not in (2, CACHE_FORMAT_VERSION):
+        raise ValueError(f"save_backends writes version 2 or "
+                         f"{CACHE_FORMAT_VERSION}, not {version}")
     if hasattr(grouped, "caches_by_platform"):      # a BackendRegistry
         grouped = grouped.caches_by_platform()
-    return _serialize(_flat_entries(grouped), Path(path),
-                      CACHE_FORMAT_VERSION)
+    return _serialize(_flat_entries(grouped), Path(path), version)
 
 
 def save_cache(cache: AutotuneCache, path: str | os.PathLike,
@@ -138,17 +165,25 @@ def save_cache(cache: AutotuneCache, path: str | os.PathLike,
     restoring engine maps them to its **own** default platform, whatever
     that is — exactly how pre-registry round-trips behaved.  ``version=1``
     writes the legacy single-backend format byte-layout — useful for
-    compatibility tests and for producing files consumable by older code.
+    compatibility tests and for producing files consumable by older code;
+    ``version=2`` the pre-device-index namespaced layout.
     """
     if version == 1:
         return _serialize([(None, key, e) for key, e in cache.items()],
                           Path(path), 1)
-    return save_backends({backend: cache}, path)
+    return save_backends({backend: cache}, path,
+                         version=version or CACHE_FORMAT_VERSION)
 
 
 def _decode_entry(data, i: int, m: dict) -> tuple:
     """One manifest entry -> ((op, digest), TunedKernel); raises on defects."""
     arrs = {name: data[f"e{i}_{name}"] for name in _PLAN_ARRAYS}
+    for name, want in _PLAN_DTYPES.items():
+        # a wrong-dtype scatter array would restore fine and then fail (or
+        # silently mis-scatter) on the entry's first build — reject it here
+        if arrs[name].dtype != np.dtype(want):
+            raise ValueError(f"entry {i}: {name} dtype {arrs[name].dtype} "
+                             f"!= {np.dtype(want)}")
     n_entries = arrs["take"].shape[0]
     for name in _PLAN_ARRAYS[2:]:
         if arrs[name].shape[0] != n_entries:
@@ -168,6 +203,21 @@ def _decode_entry(data, i: int, m: dict) -> tuple:
     plan = BsrPlan(n_blockrows=int(m["n_blockrows"]),
                    n_blockcols=int(m["n_blockcols"]),
                    block_m=int(m["block_m"]), **arrs)
+    dkey = f"e{i}_dindex"
+    if dkey in data:            # v3: restored device-scatter index
+        dindex = data[dkey]
+        # an in-range but *wrong* index would silently mis-scatter on the
+        # device path only — validate against the (already range-checked)
+        # scatter arrays it is derived from, not just its bounds
+        want = (arrs["slot"].astype(np.int64) * int(m["block_m"])
+                + arrs["rloc"].astype(np.int64)) * BK \
+            + arrs["cloc"].astype(np.int64)
+        if (dindex.dtype not in (np.int32, np.int64)
+                or dindex.shape != want.shape
+                or not np.array_equal(dindex, want)):
+            raise ValueError(f"entry {i}: device scatter index inconsistent "
+                             f"with plan arrays")
+        plan._flat = dindex
     entry = TunedKernel(m["digest"], m["op"], dict(m["config"]), plan)
     return (m["op"], m["digest"]), entry
 
@@ -175,19 +225,21 @@ def _decode_entry(data, i: int, m: dict) -> tuple:
 def load_grouped(path: str | os.PathLike) -> GroupedCacheLoad | None:
     """Read a persisted cache file into per-backend namespaces.
 
-    Version-2 entries land under their recorded platform tag; version-1
+    Version-2/3 entries land under their recorded platform tag (version 3
+    additionally restores each plan's device-scatter index); version-1
     entries (no tags) land under ``LEGACY_NAMESPACE``.  Individually broken
-    entries are dropped and counted in ``.skipped`` (version 2) — the rest
-    of the file still loads.  Returns ``None`` only when the file as a
-    whole is unreadable (absent, torn zip, bad manifest, unknown version),
-    so callers fall back to a cold cache.
+    entries — ragged or out-of-range arrays, scatter dtypes that don't
+    match the plan layout — are dropped and counted in ``.skipped``
+    (versions >= 2) — the rest of the file still loads.  Returns ``None``
+    only when the file as a whole is unreadable (absent, torn zip, bad
+    manifest, unknown version), so callers fall back to a cold cache.
     """
     path = Path(path)
     try:
         with np.load(path) as data:
             manifest = json.loads(bytes(data["manifest"]).decode())
             version = manifest.get("version")
-            if version not in (1, CACHE_FORMAT_VERSION):
+            if version not in (1, 2, CACHE_FORMAT_VERSION):
                 raise ValueError(f"unsupported cache version {version}")
             out = GroupedCacheLoad(entries={})
             for i, m in enumerate(manifest["entries"]):

@@ -39,11 +39,13 @@ Three policies ship:
     Wraps any other router and overrides its decision when the chosen
     backend is saturated: if the backend's in-flight depth
     (``KernelBackend.load`` — outstanding leases plus requests already
-    assigned earlier in this batch) has reached ``max_inflight``, the
-    request spills to ``spill_to`` (default ``cpu_ref``).  Spills are
-    counted (``stats()["routing"]["spills"]``) and their observed latencies
-    feed the spill target's calibration, so a cost-model inner router
-    learns what the fallback actually costs.
+    assigned earlier in this batch) has reached ``max_inflight`` for
+    ``spill_after`` consecutive decisions (hysteresis — one transient
+    burst doesn't flap traffic), the request spills to ``spill_to``
+    (default ``cpu_ref``).  Spills and hysteresis suppressions are counted
+    (``stats()["routing"]["spills"]`` / ``["spill_hysteresis"]``) and
+    spilled latencies feed the spill target's calibration, so a cost-model
+    inner router learns what the fallback actually costs.
 
 Routers are pure policy objects: all engine state they need arrives in the
 per-step ``RoutingContext`` (registry, calibration, default platform), so a
@@ -184,8 +186,10 @@ class CostModelRouter:
     # ------------------------------------------------------------- helpers
 
     def _effective_offset(self, platform: str, ctx: RoutingContext,
-                          scored: bool) -> float:
-        off = ctx.calibration.offset(platform)
+                          scored: bool, op: str | None = None) -> float:
+        # per-(platform, op) calibration when that pair has been served;
+        # RouteCalibration itself falls back to the platform aggregate
+        off = ctx.calibration.offset(platform, op)
         if off is not None:
             return off
         if platform in self.priors:
@@ -283,7 +287,7 @@ class CostModelRouter:
                     argmin_cfg[j] = np.asarray(scores.argmin(axis=1))
         scored_pos = {j for j, _ in scorable}
         offs = np.asarray([self._effective_offset(be.platform, ctx,
-                                                  j in scored_pos)
+                                                  j in scored_pos, op)
                            for j, be in enumerate(candidates)], np.float32)
         eff = base + offs[None, :]
         picks = np.argmin(eff, axis=1)
@@ -313,9 +317,13 @@ class LoadAwareRouter:
     """Spill traffic off a saturated backend onto a fallback.
 
     Wraps another router (default ``StaticRouter``) and overrides its
-    decision whenever the chosen backend's in-flight depth — outstanding
-    arena leases plus requests already assigned earlier in the same batch —
-    has reached ``max_inflight``.  Spilled requests go to ``spill_to``
+    decision when the chosen backend is saturated: its in-flight depth —
+    outstanding arena leases plus requests already assigned earlier in the
+    same batch — has reached ``max_inflight`` for ``spill_after``
+    *consecutive* decisions (default 2 — hysteresis, so one transient
+    burst doesn't flap traffic to the fallback; a backend saturated for a
+    single decision keeps its assignment and the suppression is counted in
+    ``spill_hysteresis``).  Spilled requests go to ``spill_to``
     (which must serve the same op; otherwise the original decision stands)
     with reason ``spill``.  The spill target itself is never spilled *from*
     — when the whole system is saturated, shedding to the fallback is still
@@ -326,29 +334,48 @@ class LoadAwareRouter:
             requests that don't spill).
         max_inflight: per-backend depth at which spilling starts.
         spill_to: platform absorbing the overflow (default ``cpu_ref``).
+        spill_after: consecutive saturated decisions (per backend tag)
+            required before the first spill.  ``1`` restores the immediate
+            pre-hysteresis behavior.  The streak resets as soon as a
+            decision finds the backend below ``max_inflight``.
     """
 
     def __init__(self, inner: Router | None = None, max_inflight: int = 16,
-                 spill_to: str = "cpu_ref"):
+                 spill_to: str = "cpu_ref", spill_after: int = 2):
         self.inner = inner if inner is not None else StaticRouter()
         self.max_inflight = int(max_inflight)
         self.spill_to = spill_to
+        self.spill_after = max(int(spill_after), 1)
         #: lifetime spill count (also in ``stats()["routing"]["spills"]``)
         self.spills = 0
+        #: saturated decisions whose spill was suppressed by hysteresis
+        #: (also in ``stats()["routing"]["spill_hysteresis"]``)
+        self.spill_hysteresis = 0
+        self._streak: dict[tuple[str, str], int] = {}
+        self._lock = threading.Lock()
 
     def route(self, requests, digests, ctx: RoutingContext) \
             -> list[RouteDecision]:
         decisions = self.inner.route(requests, digests, ctx)
         pending: dict[tuple[str, str], int] = {}
-        for i, (r, d) in enumerate(zip(requests, decisions)):
-            tag = (d.platform, r.op)
-            if d.platform != self.spill_to and tag in ctx.registry:
-                depth = ctx.registry.get(*tag).load.inflight \
-                    + pending.get(tag, 0)
-                if depth >= self.max_inflight \
-                        and (self.spill_to, r.op) in ctx.registry:
-                    d = decisions[i] = RouteDecision(self.spill_to, "spill")
-                    self.spills += 1
-                    tag = (self.spill_to, r.op)
-            pending[tag] = pending.get(tag, 0) + 1
+        with self._lock:
+            for i, (r, d) in enumerate(zip(requests, decisions)):
+                tag = (d.platform, r.op)
+                if d.platform != self.spill_to and tag in ctx.registry:
+                    depth = ctx.registry.get(*tag).load.inflight \
+                        + pending.get(tag, 0)
+                    if depth >= self.max_inflight \
+                            and (self.spill_to, r.op) in ctx.registry:
+                        streak = self._streak.get(tag, 0) + 1
+                        self._streak[tag] = streak
+                        if streak >= self.spill_after:
+                            d = decisions[i] = RouteDecision(self.spill_to,
+                                                             "spill")
+                            self.spills += 1
+                            tag = (self.spill_to, r.op)
+                        else:       # transient burst: hold the assignment
+                            self.spill_hysteresis += 1
+                    else:
+                        self._streak[tag] = 0
+                pending[tag] = pending.get(tag, 0) + 1
         return decisions

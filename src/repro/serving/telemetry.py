@@ -18,11 +18,15 @@ so concurrent engine steps can share one instance.
 
 ``RouteCalibration`` is the engine's observed-vs-predicted latency ledger:
 for every served route it folds the request's observed serve latency (and,
-for cost-model routes, the predicted rank score) into per-platform EMAs.
-``offset(platform)`` turns those into the additive correction
+for cost-model routes, the predicted rank score) into per-platform EMAs —
+and, when the caller names the op, into finer per-``(platform, op)`` EMAs.
+``offset(platform[, op])`` turns those into the additive correction
 ``CostModelRouter`` applies to the unitless cost-model score — once a
 backend has been observed, its effective routing cost tracks its *real*
-latency scale while the cost model keeps breaking ties per pattern.
+latency scale while the cost model keeps breaking ties per pattern.  The
+per-platform aggregate is always maintained, so existing consumers (and
+``stats()["routing"]["calibration"]``'s shape) are unchanged; per-op detail
+nests under each platform's ``"by_op"`` key.
 """
 from __future__ import annotations
 
@@ -107,48 +111,78 @@ class RouteCalibration:
         self.alpha = alpha
         self._lock = threading.Lock()
         self._by_platform: dict[str, dict] = {}
+        self._by_op: dict[tuple[str, str], dict] = {}
+
+    def _fold(self, c: dict, observed_s: float,
+              predicted: float | None) -> None:
+        a = self.alpha
+        ms = observed_s * 1e3
+        c["observed_ms"] = ms if c["n"] == 0 \
+            else (1 - a) * c["observed_ms"] + a * ms
+        c["n"] += 1
+        if predicted is not None:
+            p = float(predicted)
+            c["predicted"] = p if c["n_pred"] == 0 \
+                else (1 - a) * c["predicted"] + a * p
+            c["n_pred"] += 1
+
+    @staticmethod
+    def _fresh() -> dict:
+        return {"n": 0, "observed_ms": 0.0, "n_pred": 0, "predicted": 0.0}
 
     def observe(self, platform: str, observed_s: float,
-                predicted: float | None = None) -> None:
+                predicted: float | None = None, op: str | None = None) -> None:
         """Fold one served request: observed serve latency, and the routing
-        score that predicted it (``None`` for routes made without one)."""
-        a = self.alpha
+        score that predicted it (``None`` for routes made without one).
+        With ``op`` given, the sample also feeds the finer ``(platform,
+        op)`` ledger routers prefer when deciding per-op placement; the
+        per-platform aggregate is maintained either way."""
         with self._lock:
-            c = self._by_platform.get(platform)
-            if c is None:
-                c = self._by_platform[platform] = {
-                    "n": 0, "observed_ms": 0.0, "n_pred": 0, "predicted": 0.0}
-            ms = observed_s * 1e3
-            c["observed_ms"] = ms if c["n"] == 0 \
-                else (1 - a) * c["observed_ms"] + a * ms
-            c["n"] += 1
-            if predicted is not None:
-                p = float(predicted)
-                c["predicted"] = p if c["n_pred"] == 0 \
-                    else (1 - a) * c["predicted"] + a * p
-                c["n_pred"] += 1
+            c = self._by_platform.setdefault(platform, self._fresh())
+            self._fold(c, observed_s, predicted)
+            if op is not None:
+                co = self._by_op.setdefault((platform, op), self._fresh())
+                self._fold(co, observed_s, predicted)
 
-    def n_observed(self, platform: str) -> int:
+    def n_observed(self, platform: str, op: str | None = None) -> int:
         with self._lock:
-            c = self._by_platform.get(platform)
+            c = self._by_op.get((platform, op)) if op is not None \
+                else self._by_platform.get(platform)
             return c["n"] if c else 0
 
-    def offset(self, platform: str) -> float | None:
+    def offset(self, platform: str,
+               op: str | None = None) -> float | None:
         """Additive score correction for ``platform``; ``None`` until it has
-        been observed at least once."""
+        been observed at least once.  With ``op`` given, the per-``(platform,
+        op)`` offset when that pair has been observed, falling back to the
+        platform aggregate (a new op on a measured platform starts from the
+        platform's latency scale instead of cold)."""
         with self._lock:
+            if op is not None:
+                co = self._by_op.get((platform, op))
+                if co is not None and co["n"]:
+                    return co["observed_ms"] - co["predicted"]
             c = self._by_platform.get(platform)
             if c is None or c["n"] == 0:
                 return None
             return c["observed_ms"] - c["predicted"]
 
+    @staticmethod
+    def _render(c: dict) -> dict:
+        return {"n": c["n"], "observed_ms": c["observed_ms"],
+                "predicted": c["predicted"],
+                "offset": c["observed_ms"] - c["predicted"]}
+
     def snapshot(self) -> dict:
+        """Per-platform aggregate view (the pre-per-op shape, unchanged),
+        with per-op detail nested under each platform's ``"by_op"`` key."""
         with self._lock:
-            return {plat: {"n": c["n"],
-                           "observed_ms": c["observed_ms"],
-                           "predicted": c["predicted"],
-                           "offset": c["observed_ms"] - c["predicted"]}
-                    for plat, c in self._by_platform.items() if c["n"]}
+            out = {plat: self._render(c)
+                   for plat, c in self._by_platform.items() if c["n"]}
+            for (plat, op), c in self._by_op.items():
+                if c["n"] and plat in out:
+                    out[plat].setdefault("by_op", {})[op] = self._render(c)
+            return out
 
 
 class EngineTelemetry:
@@ -163,6 +197,10 @@ class EngineTelemetry:
         self.misses = 0
         self.score_dispatches = 0       # batched featurize+score round-trips
         self.arena_fallbacks = 0        # builds that couldn't get a slot
+        self.device_builds = 0          # jitted device-scatter builds
+        self.host_builds = 0            # numpy host-scatter builds
+        self.overlapped_builds = 0      # builds issued over an in-flight batch
+        self.drain_waits = 0            # drain() calls that really had to wait
         self.warm_start_entries = 0     # cache entries restored from disk
         self.warm_start_skipped = 0     # persisted entries no backend claimed
         self.persist_saves = 0
@@ -222,6 +260,16 @@ class EngineTelemetry:
                 "hit_rate": self.hits / served if served else 0.0,
                 "score_dispatches": self.score_dispatches,
                 "arena_fallbacks": self.arena_fallbacks,
+                "build_paths": {
+                    "device": self.device_builds,
+                    "host": self.host_builds,
+                    "overlapped": self.overlapped_builds,
+                    "overlap_ratio": (
+                        self.overlapped_builds
+                        / (self.device_builds + self.host_builds)
+                        if self.device_builds + self.host_builds else 0.0),
+                    "drain_waits": self.drain_waits,
+                },
                 "warm_start_entries": self.warm_start_entries,
                 "warm_start_skipped": self.warm_start_skipped,
                 "persist_saves": self.persist_saves,

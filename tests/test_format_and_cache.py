@@ -154,6 +154,103 @@ def test_bsr_from_blocks_rejects_duplicates():
         bsr_from_blocks([0, 0], [1, 1], blocks, 2, 2)
 
 
+# ------------------------------------------------------ device build path
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       m=st.integers(1, 300), k=st.integers(1, 500),
+       block_m=st.sampled_from([8, 16, 32, 64]),
+       nnz=st.integers(0, 1500),
+       dtype=st.sampled_from(["float32", "float64", "int32"]))
+def test_build_device_bit_identical_property(seed, m, k, block_m, nnz,
+                                             dtype):
+    """The jitted device scatter is bit-identical to the numpy host path
+    across duplicate entries (last-write-wins through ``take``), explicit
+    zero values, empty block-rows (pad blocks stay zero), and non-float32
+    value dtypes."""
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, m, nnz)          # duplicates likely for dense nnz
+    cols = rng.integers(0, k, nnz)
+    plan = plan_from_coo(rows, cols, (m, k), block_m=block_m)
+    values = rng.normal(size=nnz) * 10
+    values[rng.random(nnz) < 0.15] = 0.0    # explicit zeros stay structural
+    values = values.astype(dtype)
+    host = plan.build(values)
+    dev = plan.build_device(jnp.asarray(values))
+    np.testing.assert_array_equal(np.asarray(host.data),
+                                  np.asarray(dev.data))
+    np.testing.assert_array_equal(np.asarray(host.rowids),
+                                  np.asarray(dev.rowids))
+    np.testing.assert_array_equal(np.asarray(host.colids),
+                                  np.asarray(dev.colids))
+    # the donated in-place update rebuilds to the same bits as a cold build
+    v2 = (values * 2).astype(dtype)
+    buf = plan.device_update(dev.data, jnp.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(plan.build(v2).data),
+                                  np.asarray(buf))
+
+
+def test_build_device_duplicates_and_empty_rows():
+    rows = np.array([5, 5, 5, 130])         # dup entries + empty block-rows
+    cols = np.array([7, 7, 7, 0])
+    plan = plan_from_coo(rows, cols, (160, 256), block_m=32)
+    vals = np.array([1.0, 2.0, 3.0, 4.0], np.float32)
+    dev = plan.build_device(jnp.asarray(vals))
+    np.testing.assert_array_equal(np.asarray(plan.build(vals).data),
+                                  np.asarray(dev.data))
+    assert np.asarray(dev.data)[0, 5, 7] == 3.0          # last dup wins
+    assert plan.n_blockrows == 5                         # rows 1..3 empty
+    assert set(np.asarray(dev.rowids).tolist()) == set(range(5))
+
+
+def test_build_device_empty_pattern():
+    plan = plan_from_coo(np.array([], np.int64), np.array([], np.int64),
+                         (100, 100), block_m=32)
+    host = plan.build(np.array([], np.float32))
+    dev = plan.build_device(jnp.zeros((0,), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(host.data),
+                                  np.asarray(dev.data))
+
+
+def test_build_device_rejects_short_values_like_host_path():
+    # the device gather would silently clamp out-of-range indices; the
+    # host numpy path raises — both must fail on malformed input
+    rows = np.array([0, 40]); cols = np.array([0, 130])
+    plan = plan_from_coo(rows, cols, (64, 256), block_m=32)
+    with pytest.raises(IndexError):
+        plan.build(np.ones(1, np.float32))
+    with pytest.raises(ValueError, match="values has 1"):
+        plan.build_device(jnp.ones(1, jnp.float32))
+
+
+def test_device_indices_refuses_silent_int64_truncation():
+    # x64-disabled JAX would wrap an int64 scatter index to int32 —
+    # corruption, not an error.  A plan whose buffer needs int64 must
+    # refuse the device path instead.
+    from repro.kernels.format import BsrPlan
+    n = 140_000                     # nnzb * 128 * 128 > 2**31
+    plan = BsrPlan(rowids=np.zeros(n, np.int32),
+                   colids=np.zeros(n, np.int32),
+                   n_blockrows=n, n_blockcols=1, block_m=128,
+                   take=np.array([0], np.int32),
+                   slot=np.array([n - 1], np.int32),
+                   rloc=np.array([127], np.int16),
+                   cloc=np.array([127], np.int16))
+    assert plan.flat_index().dtype == np.int64
+    with pytest.raises(ValueError, match="int64"):
+        plan.device_indices()
+
+
+def test_flat_index_cached_and_consistent():
+    rows = np.array([0, 33, 64]); cols = np.array([0, 130, 255])
+    plan = plan_from_coo(rows, cols, (96, 256), block_m=32)
+    flat = plan.flat_index()
+    assert flat is plan.flat_index()                     # cached
+    want = (plan.slot.astype(np.int64) * plan.block_m
+            + plan.rloc) * 128 + plan.cloc
+    np.testing.assert_array_equal(flat.astype(np.int64), want)
+
+
 # -------------------------------------------------------- autotune cache
 
 def test_cached_config_matches_uncached():

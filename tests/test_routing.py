@@ -222,7 +222,8 @@ def test_cost_model_routed_outputs_match_reference():
 # ------------------------------------------------------- load-aware routing
 
 def test_load_aware_router_spills_within_batch():
-    router = LoadAwareRouter(StaticRouter(), max_inflight=4)
+    # spill_after=1: immediate spill (no hysteresis), the sharpest assertion
+    router = LoadAwareRouter(StaticRouter(), max_inflight=4, spill_after=1)
     engine = SparseKernelEngine(router=router)
     mats = _mats(10, seed0=4300)
     resps = engine.step([KernelRequest(m) for m in mats])
@@ -242,7 +243,7 @@ def test_load_aware_router_spills_within_batch():
 def test_load_aware_router_spills_across_steps_until_leases_release():
     # synthetic saturation: step N's leases are outstanding during step N+1
     # (double-buffer hand-off), so a saturated backend spills the next batch
-    router = LoadAwareRouter(StaticRouter(), max_inflight=2)
+    router = LoadAwareRouter(StaticRouter(), max_inflight=2, spill_after=1)
     engine = SparseKernelEngine(router=router)
     mats = _mats(4, seed0=4400)
     first = engine.step([KernelRequest(m) for m in mats[:2]])
@@ -261,7 +262,8 @@ def test_load_aware_spilled_outputs_match_reference():
     rng = np.random.default_rng(6)
     rhs = rng.normal(size=(256, 64)).astype(np.float32)
     engine = SparseKernelEngine(
-        router=LoadAwareRouter(StaticRouter(), max_inflight=1))
+        router=LoadAwareRouter(StaticRouter(), max_inflight=1,
+                               spill_after=1))
     reqs = [KernelRequest(m, rng.normal(size=m.nnz).astype(np.float32),
                           "spmm", rhs) for m in _mats(3, seed0=4500)]
     resps = engine.step(reqs)
@@ -276,7 +278,7 @@ def test_load_aware_spilled_outputs_match_reference():
 
 def test_load_aware_wraps_cost_model_router():
     inner = CostModelRouter(priors={"tpu_interpret": -1e6})
-    router = LoadAwareRouter(inner, max_inflight=3)
+    router = LoadAwareRouter(inner, max_inflight=3, spill_after=1)
     engine = _engine(router)
     resps = engine.step([KernelRequest(m) for m in _mats(5, seed0=4600)])
     platforms = [r.platform for r in resps]
@@ -285,6 +287,40 @@ def test_load_aware_wraps_cost_model_router():
     reasons = [r.route_reason for r in resps]
     assert reasons[:3] == ["cost_model"] * 3
     assert reasons[3:] == ["spill"] * 2
+    engine.release_stream()
+
+
+def test_load_aware_hysteresis_suppresses_transient_burst():
+    # default spill_after=2: the FIRST saturated decision keeps its
+    # assignment (counted), the second consecutive one spills
+    router = LoadAwareRouter(StaticRouter(), max_inflight=2)
+    engine = SparseKernelEngine(router=router)
+    mats = _mats(4, seed0=4800)
+    resps = engine.step([KernelRequest(m) for m in mats])
+    platforms = [r.platform for r in resps]
+    assert platforms == [engine.default_platform] * 3 + ["cpu_ref"]
+    assert router.spill_hysteresis == 1 and router.spills == 1
+    s = engine.stats()
+    assert s["routing"]["spill_hysteresis"] == 1
+    assert s["routing"]["spills"] == 1
+    engine.release_stream()
+
+
+def test_load_aware_hysteresis_streak_resets_below_threshold():
+    router = LoadAwareRouter(StaticRouter(), max_inflight=2)
+    engine = SparseKernelEngine(router=router)
+    mats = _mats(6, seed0=4900)
+    # burst 1: exactly one saturated decision -> suppressed, no spill
+    engine.step([KernelRequest(m) for m in mats[:3]])
+    assert router.spills == 0 and router.spill_hysteresis == 1
+    # back below threshold: the streak resets...
+    engine.release_stream()
+    engine.step([KernelRequest(m) for m in mats[3:5]])
+    engine.release_stream()
+    # ...so the next single-decision burst is again suppressed, not spilled
+    resps = engine.step([KernelRequest(m) for m in mats[:3]])
+    assert [r.platform for r in resps] == [engine.default_platform] * 3
+    assert router.spills == 0 and router.spill_hysteresis == 2
     engine.release_stream()
 
 
@@ -304,6 +340,37 @@ def test_route_calibration_offsets():
     # latency-only observations (spills, sticky routes) still calibrate
     cal.observe("y", 0.001)
     assert cal.offset("y") == pytest.approx(1.0)
+
+
+def test_route_calibration_per_op_ledger():
+    cal = RouteCalibration(alpha=0.5)
+    cal.observe("x", 0.010, op="spmm")
+    cal.observe("x", 0.030, op="sddmm")
+    # per-(platform, op) offsets diverge; the aggregate EMAs both samples
+    assert cal.offset("x", "spmm") == pytest.approx(10.0)
+    assert cal.offset("x", "sddmm") == pytest.approx(30.0)
+    assert cal.offset("x") == pytest.approx(20.0)       # EMA .5: 10 -> 20
+    assert cal.n_observed("x") == 2
+    assert cal.n_observed("x", "spmm") == 1
+    # an op never observed on a measured platform falls back to aggregate
+    assert cal.offset("x", "conv") == pytest.approx(20.0)
+    assert cal.offset("z", "spmm") is None
+    # snapshot keeps the aggregate per-platform shape, nesting op detail
+    snap = cal.snapshot()["x"]
+    assert snap["n"] == 2
+    assert snap["by_op"]["spmm"]["observed_ms"] == pytest.approx(10.0)
+    assert snap["by_op"]["sddmm"]["observed_ms"] == pytest.approx(30.0)
+
+
+def test_engine_feeds_per_op_calibration():
+    engine = SparseKernelEngine()
+    mats = _mats(2, seed0=5000)
+    engine.step([KernelRequest(mats[0], op="spmm"),
+                 KernelRequest(mats[1], op="sddmm")])
+    cal = engine.stats()["routing"]["calibration"][engine.default_platform]
+    assert set(cal["by_op"]) == {"spmm", "sddmm"}
+    assert cal["n"] == 2
+    engine.release_stream()
 
 
 def test_route_stage_histogram_records():

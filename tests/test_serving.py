@@ -11,6 +11,8 @@ import types
 import numpy as np
 import pytest
 
+import jax.numpy as jnp
+
 from repro.core.autotune import (AutotuneCache, KernelAutotuner, StatsMemo,
                                  _STATS_MEMO, matrix_digest, pattern_digest)
 from repro.data import generate_matrix
@@ -152,6 +154,47 @@ def test_stale_release_does_not_free_new_lease():
     assert l2.valid
 
 
+def test_arena_device_build_rotation_and_donation():
+    m = _mats(1, seed0=660)[0]
+    plan = plan_from_coo(m.rows, m.cols, (m.n_rows, m.n_cols), block_m=32,
+                         assume_unique=True)
+    arena = PlanArena(plan, n_slots=2)
+    rng = np.random.default_rng(7)
+    v = [jnp.asarray(rng.normal(size=m.nnz).astype(np.float32))
+         for _ in range(3)]
+    l1 = arena.build_device(v[0])
+    l2 = arena.build_device(v[1])
+    for lease, vals in ((l1, v[0]), (l2, v[1])):
+        np.testing.assert_array_equal(np.asarray(lease.matrix.data),
+                                      np.asarray(plan.build(
+                                          np.asarray(vals)).data))
+    l1.release()
+    l3 = arena.build_device(v[2])       # recycles l1's slot via donation
+    assert not l1.valid
+    assert l1.matrix.data.is_deleted()  # stale alias raises, never corrupts
+    np.testing.assert_array_equal(np.asarray(l3.matrix.data),
+                                  np.asarray(plan.build(
+                                      np.asarray(v[2])).data))
+    assert arena.builds == 3 and arena.device_builds == 3
+    l2.release()
+    l3.release()
+
+
+def test_arena_mixed_host_and_device_slots():
+    m = _mats(1, seed0=670)[0]
+    plan = plan_from_coo(m.rows, m.cols, (m.n_rows, m.n_cols), block_m=32,
+                         assume_unique=True)
+    arena = PlanArena(plan, n_slots=2)
+    vals = np.random.default_rng(8).normal(size=m.nnz).astype(np.float32)
+    lh = arena.build(vals)                       # host path
+    ld = arena.build_device(jnp.asarray(vals))   # device path, other slot
+    np.testing.assert_array_equal(np.asarray(lh.matrix.data),
+                                  np.asarray(ld.matrix.data))
+    assert arena.builds == 2 and arena.device_builds == 1
+    lh.release()
+    ld.release()
+
+
 # -------------------------------------------------------------------- engine
 
 def test_engine_outputs_match_reference():
@@ -211,6 +254,79 @@ def test_engine_telemetry_hit_accounting():
     s = engine.stats()
     assert s["requests"] == 4 and s["batches"] == 2
     assert 0 < s["hit_rate"] < 1
+
+
+# ------------------------------------------------- device builds + drain
+
+def test_engine_device_build_auto_routes_by_residency():
+    m = _mats(1, seed0=2900)[0]
+    vals = np.random.default_rng(9).normal(size=m.nnz).astype(np.float32)
+    engine = SparseKernelEngine()
+    r_dev = engine.step([KernelRequest(m, jnp.asarray(vals))])[0]
+    r_host = engine.step([KernelRequest(m, vals)])[0]
+    assert r_dev.device_built and not r_host.device_built
+    np.testing.assert_array_equal(np.asarray(r_dev.matrix.data),
+                                  np.asarray(r_host.matrix.data))
+    bp = engine.stats()["build_paths"]
+    assert bp["device"] == 1 and bp["host"] == 1
+    # the second step's build overlapped the first step's in-flight batch
+    assert bp["overlapped"] == 1 and bp["overlap_ratio"] == 0.5
+    engine.drain()
+
+
+def test_engine_device_build_always_and_never():
+    m = _mats(1, seed0=2950)[0]
+    vals = np.ones(m.nnz, np.float32)
+    always = SparseKernelEngine(device_build="always")
+    assert always.step([KernelRequest(m, vals)])[0].device_built
+    always.drain()
+    never = SparseKernelEngine(device_build="never")
+    assert not never.step([KernelRequest(m, jnp.asarray(vals))])[0] \
+        .device_built
+    never.drain()
+    with pytest.raises(ValueError, match="device_build"):
+        SparseKernelEngine(device_build="sometimes")
+
+
+def test_engine_drain_releases_every_generation():
+    mats = _mats(2, seed0=2960)
+    rhs = np.ones((256, 32), np.float32)
+    engine = SparseKernelEngine()
+    gens = []
+    for i in range(3):      # three async generations on one stream
+        resp = engine.step([KernelRequest(mats[i % 2],
+                                          np.ones(mats[i % 2].nnz,
+                                                  np.float32),
+                                          "spmm", rhs)])[0]
+        gens.append(resp.generation)
+    assert gens == sorted(gens) and len(set(gens)) == 3
+    s = engine.stats()
+    assert s["arenas"]["outstanding_leases"] == 1   # only the last gen
+    assert s["arenas"]["generation"] == gens[-1]
+    engine.drain()
+    s = engine.stats()
+    assert s["arenas"]["outstanding_leases"] == 0
+    assert all(v["inflight"] == 0 for v in s["load"].values())
+    assert s["build_paths"]["drain_waits"] == 1
+    engine.drain()          # idempotent: nothing outstanding, no new wait
+    assert engine.stats()["build_paths"]["drain_waits"] == 1
+
+
+def test_engine_drain_device_path_end_to_end():
+    m = _mats(1, seed0=2970)[0]
+    rhs = np.random.default_rng(10).normal(size=(256, 32)) \
+        .astype(np.float32)
+    vals = np.random.default_rng(11).normal(size=m.nnz).astype(np.float32)
+    engine = SparseKernelEngine()
+    outs = []
+    for scale in (1.0, 2.0):
+        resp = engine.step([KernelRequest(m, jnp.asarray(scale * vals),
+                                          "spmm", rhs)])[0]
+        assert resp.device_built
+        # consume the async output BEFORE the slot can rotate
+        outs.append(np.asarray(resp.output))
+    engine.drain()
+    np.testing.assert_allclose(outs[1], 2.0 * outs[0], rtol=1e-4)
 
 
 # --------------------------------------------------------------- persistence
@@ -562,6 +678,79 @@ def test_load_grouped_namespaces_and_counts(tmp_path):
     (key_a, entry_a), = g.entries["a"]
     assert key_a == ("spmm", matrix_digest(ma))
     assert entry_a.config["block_m"] == entry_a.plan.block_m
+
+
+def test_persist_v3_carries_device_index(tmp_path):
+    path = tmp_path / "cache.npz"
+    m = _mats(1, seed0=3000)[0]
+    kt = KernelAutotuner()
+    entry = kt.get(m)
+    save_cache(kt.cache, path, backend="tpu_interpret")
+    (_, restored), = load_grouped(path).entries["tpu_interpret"]
+    # the device-scatter index came off disk (no recompute on first device
+    # build) and matches the original plan's
+    assert restored.plan._flat is not None
+    np.testing.assert_array_equal(restored.plan._flat,
+                                  entry.plan.flat_index())
+    vals = np.random.default_rng(12).normal(size=m.nnz).astype(np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(restored.plan.build_device(jnp.asarray(vals)).data),
+        np.asarray(entry.build(vals).data))
+
+
+def test_persist_v2_file_still_restores(tmp_path):
+    path = tmp_path / "cache.npz"
+    m = _mats(1, seed0=3100)[0]
+    kt = KernelAutotuner()
+    kt.get(m)
+    save_cache(kt.cache, path, backend="tpu_interpret", version=2)
+    g = load_grouped(path)
+    (_, restored), = g.entries["tpu_interpret"]
+    assert g.skipped == 0
+    assert restored.plan._flat is None      # v2: computed lazily instead
+    vals = np.ones(m.nnz, np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(restored.plan.build_device(jnp.asarray(vals)).data),
+        np.asarray(restored.plan.build(vals).data))
+
+
+def test_persist_tampered_device_index_skipped(tmp_path):
+    # an in-range but WRONG device index would silently mis-scatter on the
+    # device path only — load validates it against the plan arrays it is
+    # derived from and skips the entry
+    path = tmp_path / "cache.npz"
+    m = _mats(1, seed0=3150)[0]
+    kt = KernelAutotuner()
+    kt.get(m)
+    save_backends({"tpu_interpret": kt.cache}, path)
+    with np.load(path) as data:
+        arrays = dict(data.items())
+    arrays["e0_dindex"] = np.roll(arrays["e0_dindex"], 1)   # still in range
+    np.savez(path, **arrays)
+    with pytest.warns(UserWarning, match="inconsistent"):
+        g = load_grouped(path)
+    assert g.skipped == 1 and len(g) == 0
+
+
+def test_persist_dtype_mismatch_entry_skipped(tmp_path):
+    # a v2/v3 entry whose scatter arrays carry the wrong dtype used to
+    # restore fine and then blow up at its first scatter; now it is
+    # validated at load and skipped like any other bad entry
+    path = tmp_path / "cache.npz"
+    mats = _mats(2, seed0=3200)
+    kt = KernelAutotuner()
+    kt.get_batch(mats)
+    save_backends({"tpu_interpret": kt.cache}, path)
+    with np.load(path) as data:
+        arrays = dict(data.items())
+    arrays["e0_slot"] = arrays["e0_slot"].astype(np.float32)   # tampered
+    np.savez(path, **arrays)
+    with pytest.warns(UserWarning, match="dtype"):
+        g = load_grouped(path)
+    assert g.skipped == 1 and len(g) == 1
+    engine = SparseKernelEngine(persist_path=path)
+    s = engine.stats()
+    assert s["warm_start_entries"] == 1 and s["warm_start_skipped"] == 1
 
 
 # ----------------------------------------------------------------- telemetry
