@@ -54,6 +54,7 @@ def main(argv: list[str] | None = None) -> None:
         ("bsr_preproc", "benchmarks.bsr_preproc"),
         ("serving", "benchmarks.serving_engine"),
         ("routing", "benchmarks.serving_routing"),
+        ("faults", "benchmarks.serving_faults"),
     ]
     only = set(argv)
     failures = []

@@ -1,0 +1,246 @@
+"""Degraded-mode serving benchmark (ours): kill one backend mid-stream.
+
+The same repeated traffic — micro-batches of untagged requests, every
+request carrying a dense operand so backends really execute — is served
+twice through identical stock registries under ``StaticRouter``:
+
+* **baseline** — no faults: every request lands on the default platform
+  (``tpu_interpret``) and the health layer must be invisible (zero
+  failures, zero failovers, all-``default`` routing decisions).
+* **degraded** — ``repro.serving.faults`` hard-fails the default backend's
+  executor on calls ``[16, 40)``.  With an 8-request batch that is exactly
+  the deterministic script from the faults module docstring: two healthy
+  warm-up steps, one hard-down **kill step** (the breaker trips on the
+  third consecutive error; all eight requests fail over to ``cpu_ref``
+  through the retry lane), two **failed half-open probes** (still served,
+  degraded), then a successful probe that closes the breaker — and healthy
+  traffic returns to the default platform, undegraded.
+
+Faults are keyed on executor call index, not wall clock (the breaker runs
+a zero backoff so every open step probes), so the failure script replays
+identically on any machine.  The scenario asserts the ISSUE's degradation
+contract in-process: **zero lost requests** (every request gets a
+response), every failed-over output **bit-identical** to the ``cpu_ref``
+oracle (``spmm_ref``), breaker opens/probes/recovery exactly on schedule,
+and ``stats()["health"]`` accounting for every failure, failover, and
+probe.  Wall-clock p99 inflation of the degraded stream over the baseline
+is *emitted* (``p99_inflation_x``) and gated in ``scripts/smoke.sh``
+(``<= 3x``) rather than asserted here, since it is the one
+machine-dependent number.
+
+A second mini-scenario drives the opt-in output guard: the default
+backend's outputs are NaN-poisoned for one batch (``validate_outputs=True``),
+every poisoned request fails over with a finite, reference-exact output,
+and the guard counters account for all of it.
+
+``python benchmarks/serving_faults.py [--quick] [--json PATH]`` runs it
+standalone; ``python -m benchmarks.run faults`` runs it registered.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+if __package__ in (None, ""):   # `python benchmarks/serving_faults.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks import common
+from repro.data import generate_matrix
+from repro.kernels import spmm_ref
+from repro.serving import (DEFAULT_PLATFORM, FaultPlan, HealthConfig,
+                           HealthRegistry, KernelRequest, SparseKernelEngine,
+                           default_registry, inject_faults)
+
+FAMILIES = ("uniform", "banded", "powerlaw", "blockdiag")
+BATCH = 8
+#: Executor-call fault window (counted from post-warm-up injection): two
+#: healthy steps (calls 0..15), one kill step (16..23), two failed
+#: half-open probes (24..31, 32..39), then recovery — pure arithmetic on
+#: BATCH, independent of machine speed.
+KILL_WINDOW = (16, 40)
+KILL_STEP, RECOVERY_STEP = 2, 5
+
+
+def _pool(n=BATCH, seed0=0, n_rows=256, nnz=1200):
+    return [generate_matrix(FAMILIES[i % len(FAMILIES)], seed=seed0 + i,
+                            n_rows=n_rows, n_cols=n_rows, target_nnz=nnz)
+            for i in range(n)]
+
+
+def _engine(registry):
+    # zero backoff: every step an open breaker is due its half-open probe,
+    # so breaker transitions are a pure function of executor call indices
+    return SparseKernelEngine(
+        backends=registry,
+        health=HealthRegistry(HealthConfig(consecutive_errors=3,
+                                           backoff_s=0.0)))
+
+
+def _warm(engine, pool, values, rhs):
+    """Per-engine warm-up, untimed and pre-fault: one untagged step tunes
+    the default platform's caches, one pinned step tunes ``cpu_ref`` — so
+    the timed runs (and the retry lane) serve steady-state cache hits and
+    the p99 comparison measures serving, not compilation or tuning."""
+    engine.step([KernelRequest(m, v, "spmm", rhs)
+                 for m, v in zip(pool, values)])
+    engine.step([KernelRequest(m, v, "spmm", rhs, platform="cpu_ref")
+                 for m, v in zip(pool, values)])
+    engine.drain()
+
+
+def _serve(engine, pool, values, rhs, n_steps):
+    per_step, step_s = [], []
+    for _ in range(n_steps):
+        t0 = time.perf_counter()
+        per_step.append(engine.step(
+            [KernelRequest(m, v, "spmm", rhs)
+             for m, v in zip(pool, values)]))
+        step_s.append(time.perf_counter() - t0)
+    engine.drain()
+    return per_step, step_s
+
+
+def _p(step_s, q):
+    return float(np.percentile(np.asarray(step_s) * 1e3, q))
+
+
+def _check_degraded_contract(per_step, rhs, engine, fx, n_steps):
+    """The deterministic degradation contract, asserted in-process."""
+    flat = [r for step in per_step for r in step]
+    lost = sum(r.output is None for r in flat)
+    assert lost == 0, f"{lost} requests lost a response"
+    degraded = [r for r in flat if r.degraded]
+    # kill step + two failed probes: every one of those batches failed over
+    assert len(degraded) == 3 * BATCH, len(degraded)
+    for r in degraded:
+        assert r.platform == "cpu_ref" and r.attempts >= 1
+        assert r.failed_over_from == DEFAULT_PLATFORM
+        np.testing.assert_array_equal(         # bit-identical to the oracle
+            np.asarray(r.output), np.asarray(spmm_ref(r.matrix, rhs)))
+    for step in (KILL_STEP, KILL_STEP + 1, KILL_STEP + 2):
+        assert all(r.degraded for r in per_step[step])
+    for step in list(range(KILL_STEP)) + list(range(RECOVERY_STEP, n_steps)):
+        assert all(r.platform == DEFAULT_PLATFORM and not r.degraded
+                   for r in per_step[step]), f"step {step} not healthy"
+
+    n_faults = (KILL_WINDOW[1] - KILL_WINDOW[0])
+    assert fx.calls == n_steps * BATCH          # probes always granted
+    assert fx.injected["error"] == n_faults
+    h = engine.stats()["health"]
+    assert h["execute_failures"] == n_faults    # every failure accounted
+    assert h["failovers"] == n_faults           # ...and every failover
+    assert h["retry_failures"] == 0
+    br = h["breakers"][f"{DEFAULT_PLATFORM}/spmm"]
+    assert br["state"] == "closed"              # recovered
+    assert br["opens"] == 3                     # trip + two probe reopens
+    assert br["probe_failures"] == 2 and br["probe_successes"] == 1
+    assert br["failures"] == n_faults
+    return len(degraded)
+
+
+def _bench_kill_one_backend(rows, pool, values, rhs, n_steps):
+    base_engine = _engine(default_registry())
+    _warm(base_engine, pool, values, rhs)
+    base_steps, base_s = _serve(base_engine, pool, values, rhs, n_steps)
+    bs = base_engine.stats()
+    # the no-fault path must be indistinguishable from a health-less engine
+    assert bs["health"]["execute_failures"] == 0
+    assert bs["health"]["failovers"] == 0
+    assert bs["health"]["circuit_fast_fails"] == 0
+    assert bs["routing"]["decisions"] == {"default": (n_steps + 1) * BATCH,
+                                          "explicit": BATCH}  # +warm-up
+    assert all(not r.degraded and r.attempts == 1
+               for step in base_steps for r in step)
+    n_req = n_steps * BATCH
+    base_p50, base_p99 = _p(base_s, 50), _p(base_s, 99)
+    rows.append((
+        "faults/baseline/requests_per_s", f"{n_req / sum(base_s):.0f}",
+        "", f"p50={base_p50:.2f}ms p99={base_p99:.2f}ms no faults, all "
+            f"{DEFAULT_PLATFORM}, health layer silent",
+        {"req_per_s": n_req / sum(base_s),
+         "p50_ms": base_p50, "p99_ms": base_p99}))
+
+    reg = default_registry()
+    engine = _engine(reg)
+    _warm(engine, pool, values, rhs)    # fault window starts post-warm-up
+    fx = inject_faults(reg, DEFAULT_PLATFORM, "spmm",
+                       FaultPlan.fail_calls(*KILL_WINDOW))
+    per_step, fault_s = _serve(engine, pool, values, rhs, n_steps)
+    n_degraded = _check_degraded_contract(per_step, rhs, engine, fx, n_steps)
+    p50, p99 = _p(fault_s, 50), _p(fault_s, 99)
+    inflation = p99 / max(base_p99, 1e-9)
+    h = engine.stats()["health"]
+    rows.append((
+        "faults/degraded/requests_per_s", f"{n_req / sum(fault_s):.0f}",
+        "", f"p50={p50:.2f}ms p99={p99:.2f}ms "
+            f"({inflation:.2f}x baseline) kill={DEFAULT_PLATFORM} "
+            f"calls[{KILL_WINDOW[0]},{KILL_WINDOW[1]}) "
+            f"degraded={n_degraded}/{n_req} lost=0 "
+            f"failovers={h['failovers']} opens=3 probes=2fail+1ok "
+            f"-> recovered",
+        {"req_per_s": n_req / sum(fault_s),
+         "p50_ms": p50, "p99_ms": p99,
+         "p99_inflation_x": inflation, "lost_requests": 0.0,
+         "degraded_responses": float(n_degraded),
+         "failovers": float(h["failovers"]),
+         "execute_failures": float(h["execute_failures"]),
+         "breaker_opens": 3.0, "probe_failures": 2.0,
+         "probe_successes": 1.0, "recovered": 1.0}))
+
+
+def _bench_nan_guard(rows, pool, values, rhs):
+    reg = default_registry()
+    inject_faults(reg, DEFAULT_PLATFORM, "spmm",
+                  FaultPlan.nan_calls(0, BATCH))
+    engine = SparseKernelEngine(
+        backends=reg, validate_outputs=True,
+        health=HealthRegistry(HealthConfig(consecutive_errors=3,
+                                           backoff_s=0.0)))
+    poisoned, = [engine.step([KernelRequest(m, v, "spmm", rhs)
+                              for m, v in zip(pool, values)])]
+    healthy = engine.step([KernelRequest(m, v, "spmm", rhs)
+                           for m, v in zip(pool, values)])
+    engine.drain()
+    for r in poisoned:                  # every poisoned output was caught
+        assert r.degraded and r.platform == "cpu_ref"
+        assert np.isfinite(np.asarray(r.output)).all()
+        np.testing.assert_array_equal(
+            np.asarray(r.output), np.asarray(spmm_ref(r.matrix, rhs)))
+    assert all(not r.degraded and r.platform == DEFAULT_PLATFORM
+               for r in healthy)        # probe succeeded, breaker closed
+    h = engine.stats()["health"]
+    assert h["output_guard_failures"] == BATCH
+    rows.append((
+        "faults/nan_guard/guarded_failovers", f"{h['failovers']}", "",
+        f"one NaN-poisoned batch: {h['output_guard_failures']} guard "
+        f"failures, all failed over finite + reference-exact, next batch "
+        f"healthy on {DEFAULT_PLATFORM}",
+        {"output_guard_failures": float(h["output_guard_failures"]),
+         "failovers": float(h["failovers"]), "finite_outputs": 1.0}))
+
+
+def run(quick: bool | None = None):
+    if quick is None:       # benchmarks.run path: REPRO_BENCH_QUICK=1
+        quick = os.environ.get("REPRO_BENCH_QUICK", "") == "1"
+    rows = []
+    n_steps = 8 if quick else 12        # >= RECOVERY_STEP + post-recovery
+    pool = _pool()
+    rng = np.random.default_rng(5)
+    values = [rng.normal(size=m.nnz).astype(np.float32) for m in pool]
+    rhs = rng.normal(size=(pool[0].n_cols, 64)).astype(np.float32)
+
+    _bench_kill_one_backend(rows, pool, values, rhs, n_steps)
+    _bench_nan_guard(rows, pool, values, rhs)
+    common.emit(rows)
+
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    common.begin_section("faults")
+    run(quick="--quick" in args)
+    if "--json" in args:
+        common.write_json(args[args.index("--json") + 1])

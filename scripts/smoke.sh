@@ -8,8 +8,10 @@
 #   bash scripts/smoke.sh
 #
 # SMOKE_QUICK=1 runs the reduced CI path: docs check, example, and the quick
-# serving/routing benchmarks — skipping tier-1 (CI runs it as its own step),
-# the slow stress tests, and the bsr_preproc bench.
+# serving/routing/faults benchmarks — skipping tier-1 (CI runs it as its own
+# step), the slow stress tests, and the bsr_preproc bench.
+# SMOKE_FAULTS=1 additionally re-runs the degraded-mode fault benchmark
+# standalone (full length) after the gates.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -41,6 +43,7 @@ for doc in doc_files:
 for mod in ("repro.serving", "repro.serving.backends", "repro.serving.engine",
             "repro.serving.persist", "repro.serving.arena",
             "repro.serving.router", "repro.serving.telemetry",
+            "repro.serving.health", "repro.serving.faults",
             "repro.core.autotune", "repro.kernels.ops", "repro.kernels.ref"):
     try:
         __import__(mod)
@@ -61,7 +64,8 @@ except Exception as e:
 
 # 4. benchmark names named in the docs are registered in benchmarks/run.py
 run_py = Path("benchmarks/run.py").read_text()
-for name in ("serving", "routing", "bsr_preproc", "fig4", "kernel"):
+for name in ("serving", "routing", "faults", "bsr_preproc", "fig4",
+             "kernel"):
     if f'("{name}"' not in run_py:
         failures.append(f"documented benchmark {name!r} not in benchmarks/run.py")
 
@@ -87,9 +91,9 @@ if [ "$QUICK" != "1" ]; then
   python -m benchmarks.run bsr_preproc
 fi
 
-echo "== serving + routing benchmarks (quick) -> BENCH_5.json =="
-REPRO_BENCH_QUICK=1 python -m benchmarks.run serving routing \
-  --json BENCH_5.json
+echo "== serving + routing + faults benchmarks (quick) -> BENCH_6.json =="
+REPRO_BENCH_QUICK=1 python -m benchmarks.run serving routing faults \
+  --json BENCH_6.json
 
 echo "== device_build overlap gate =="
 python - <<'EOF'
@@ -102,7 +106,7 @@ noise tolerance applies — the gate catches the async path becoming
 mode this guards against."""
 import json
 
-doc = json.load(open("BENCH_5.json"))
+doc = json.load(open("BENCH_6.json"))
 by = {r["name"]: r for r in doc["rows"]}
 ov = by["serving/device_build/overlapped_requests_per_s"]["metrics"]["req_per_s"]
 sy = by["serving/device_build/synchronous_requests_per_s"]["metrics"]["req_per_s"]
@@ -114,5 +118,39 @@ assert ov >= 0.95 * sy, (
     f"overlapped execute ({ov:.1f} req/s) regressed below the "
     f"synchronous path ({sy:.1f} req/s)")
 EOF
+
+echo "== degraded-mode fault gate =="
+python - <<'EOF'
+"""Kill-one-backend scenario: the deterministic degradation contract
+(zero lost requests, bit-exact failovers, breaker opens -> half-open
+probe -> recovery) is asserted inside benchmarks/serving_faults.py
+itself; this gate checks the accounting landed in the artifact and the
+one machine-dependent number — p99 on the surviving mix must stay
+within 3x the no-fault baseline (the retry lane roughly doubles the
+kill step's work; 3x leaves noise headroom without letting a
+pathological retry path through)."""
+import json
+
+doc = json.load(open("BENCH_6.json"))
+by = {r["name"]: r for r in doc["rows"]}
+m = by["faults/degraded/requests_per_s"]["metrics"]
+print(f"degraded p99={m['p99_ms']:.2f}ms "
+      f"({m['p99_inflation_x']:.2f}x baseline), "
+      f"lost={m['lost_requests']:.0f} failovers={m['failovers']:.0f} "
+      f"opens={m['breaker_opens']:.0f} recovered={m['recovered']:.0f}")
+assert m["lost_requests"] == 0, "requests lost during backend failure"
+assert m["recovered"] == 1, "breaker never recovered via half-open probe"
+assert m["failovers"] == m["execute_failures"], "unaccounted failures"
+assert m["p99_inflation_x"] <= 3.0, (
+    f"degraded p99 inflated {m['p99_inflation_x']:.2f}x over the "
+    f"no-fault baseline (gate: 3x)")
+g = by["faults/nan_guard/guarded_failovers"]["metrics"]
+assert g["output_guard_failures"] == g["failovers"] > 0
+EOF
+
+if [ "${SMOKE_FAULTS:-0}" = "1" ]; then
+  echo "== degraded-mode fault benchmark (standalone, full) =="
+  python benchmarks/serving_faults.py
+fi
 
 echo "smoke OK"

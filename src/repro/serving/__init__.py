@@ -49,6 +49,18 @@ subsystem owns that layer:
   (log-bucketed p50/p99), routing-decision counters, per-platform
   observed-vs-predicted latency calibration (``RouteCalibration`` — what
   keeps cost-model routing honest), eviction and arena-overflow counters.
+* ``health`` — per-``(platform, op)`` ``BackendHealth`` (rolling
+  success/failure/latency windows) behind a three-state circuit breaker
+  (closed -> open -> half-open probe with escalating backoff), fed from
+  the engine's execute/account stages; a failing backend's traffic
+  fast-fails into the retry lane (failover to the healthiest surviving
+  candidate, ``cpu_ref`` as the stock floor) instead of aborting the
+  batch.  ``stats()["health"]`` renders it all.
+* ``faults`` — a deterministic, seedable fault-injection harness
+  (``FaultPlan``: raise-on-nth-call windows, NaN outputs, latency spikes,
+  plus torn-write/bit-rot helpers for persistence files) that wraps any
+  registered backend's executor in place — what the fault-tolerance tests
+  and ``benchmarks/serving_faults.py`` drive.
 
 Typical use::
 
@@ -78,7 +90,12 @@ from repro.serving.backends import (DEFAULT_PLATFORM, BackendLoad,
                                     cpu_ref_backend, default_registry,
                                     pallas_backend)
 from repro.serving.engine import (KernelRequest, KernelResponse,
-                                  SparseKernelEngine)
+                                  OutputGuardError, SparseKernelEngine)
+from repro.serving.faults import (FaultPlan, FaultWindow, FaultyExecutor,
+                                  InjectedFault, flip_byte, inject_faults,
+                                  truncate_file)
+from repro.serving.health import (BackendHealth, HealthConfig,
+                                  HealthRegistry)
 from repro.serving.persist import (CACHE_FORMAT_VERSION, GroupedCacheLoad,
                                    LEGACY_NAMESPACE, load_cache,
                                    load_grouped, save_backends, save_cache,
@@ -99,4 +116,8 @@ __all__ = ["SparseKernelEngine", "KernelRequest", "KernelResponse",
            "save_cache", "save_backends", "load_cache", "load_grouped",
            "warm_start", "CACHE_FORMAT_VERSION", "LEGACY_NAMESPACE",
            "GroupedCacheLoad", "EngineTelemetry", "LatencyHistogram",
-           "RouteCalibration"]
+           "RouteCalibration",
+           "BackendHealth", "HealthConfig", "HealthRegistry",
+           "OutputGuardError",
+           "FaultPlan", "FaultWindow", "FaultyExecutor", "InjectedFault",
+           "inject_faults", "truncate_file", "flip_byte"]

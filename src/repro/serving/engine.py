@@ -54,6 +54,25 @@ six-stage pipeline — each stage a separate method, so scheduling PRs
    never flood the dispatch queue, and a donated device buffer is never
    re-donated under a live consumer).
 
+**Fault tolerance.**  Every executor launch runs under per-request fault
+isolation: one backend raising (or, with ``validate_outputs=True``,
+returning NaN/inf or a mis-shaped output) fails only its own partition's
+requests.  Failed requests re-enter the pipeline once via a **retry
+lane** that re-routes them to the healthiest surviving backend for their
+op (stock registries bottom out at ``cpu_ref``, which never dies); the
+response then reports ``attempts=2``, ``failed_over_from``, and
+``degraded=True``.  Outcomes feed a per-``(platform, op)`` circuit
+breaker (``repro.serving.health``): a backend crossing the failure-rate
+or consecutive-error threshold trips **open** and its traffic is
+rewritten to the failover target at route time (no executor call at
+all), until a **half-open** probe — granted after an exponentially
+escalating backoff — succeeds and closes the circuit.  Health-aware
+routers (``RoutingContext.health``) additionally keep open-circuit
+backends out of candidate sets and sticky memos.  ``stats()["health"]``
+accounts for every failure, fast-fail, failover, and probe, and
+``repro.serving.faults`` injects deterministic failures for tests and
+the ``benchmarks/serving_faults.py`` degraded-mode scenario.
+
 Batch N's leases are released only after batch N+1 is dispatched
 (generation hand-off), so the engine is safe with asynchronous kernel
 launches; ``drain()`` forces completion of the calling thread's in-flight
@@ -95,12 +114,22 @@ from repro.kernels.format import BsrMatrix
 from repro.serving.arena import ArenaLease, ArenaOverrun, PlanArena
 from repro.serving.backends import (BackendRegistry, KernelBackend,
                                     default_registry)
+from repro.serving.health import CLOSED, HealthConfig, HealthRegistry
 from repro.serving.persist import (LEGACY_NAMESPACE, load_grouped,
                                    save_backends)
-from repro.serving.router import Router, RoutingContext, StaticRouter
+from repro.serving.router import (RouteDecision, Router, RoutingContext,
+                                  StaticRouter)
 from repro.serving.telemetry import EngineTelemetry
 
-__all__ = ["KernelRequest", "KernelResponse", "SparseKernelEngine"]
+__all__ = ["KernelRequest", "KernelResponse", "OutputGuardError",
+           "SparseKernelEngine"]
+
+
+class OutputGuardError(RuntimeError):
+    """An executed kernel produced an invalid output (NaN/inf or wrong
+    shape) — raised by the engine's opt-in output guard
+    (``validate_outputs=True``) and treated exactly like an executor
+    failure: recorded against the backend's health and failed over."""
 
 
 @dataclasses.dataclass
@@ -144,6 +173,9 @@ class KernelResponse:
     route_reason: str = ""      # router's reason (explicit/default/... )
     device_built: bool = False  # True -> jitted device scatter built it
     generation: int = 0         # engine dispatch generation of this batch
+    attempts: int = 1           # executions tried (2 -> retry lane served it)
+    failed_over_from: str | None = None  # platform the request was moved off
+    degraded: bool = False      # True -> served by a fallback, not the route
 
 
 @dataclasses.dataclass
@@ -165,6 +197,11 @@ class _StepState:
     tag_serve_seconds: dict = dataclasses.field(default_factory=dict)
     installs: int = 0           # router config hints installed this step
     handed_off: bool = False    # leases/loads transferred to the stream
+    errors: list = dataclasses.field(default_factory=list)  # per-request
+    failover_from: dict = dataclasses.field(default_factory=dict)  # i -> tag
+    retried: set = dataclasses.field(default_factory=set)   # retry-lane idxs
+    probes: set = dataclasses.field(default_factory=set)    # tags probing
+    replaced_refs: list = dataclasses.field(default_factory=list)
 
 
 class SparseKernelEngine:
@@ -193,6 +230,25 @@ class SparseKernelEngine:
             path otherwise; ``"always"`` forces the device path (host
             values are transferred first); ``"never"`` forces the host
             path.  ``True``/``False`` alias always/never.
+        health: an explicit ``HealthRegistry`` (inject one with a fake
+            clock for deterministic breaker tests, or share one across
+            engines fronting the same hardware).  Default: a fresh
+            registry built from ``health_config``.
+        health_config: breaker thresholds/backoff for the default-built
+            registry (ignored when ``health`` is given).
+        max_retries: ``1`` (default) re-serves a failed request once via
+            the retry lane — re-routed to the healthiest surviving
+            backend for its op; the response reports ``attempts=2``,
+            ``failed_over_from``, and ``degraded=True``.  ``0`` disables
+            the lane: the first executor failure propagates out of
+            ``step()`` (leases and load still release).  The lane runs at
+            most once per request regardless of larger values.
+        validate_outputs: when ``True``, every executed output is checked
+            for NaN/inf and the op's expected shape before it is returned;
+            a bad output counts as a backend failure (feeding the breaker)
+            and the request fails over like an executor raise.  Off by
+            default — the check forces the async dispatch to completion,
+            serializing the pipeline.
 
     Thread-safety: all public methods are safe under concurrent callers;
     see the module docstring for the per-thread lease protocol.
@@ -204,7 +260,10 @@ class SparseKernelEngine:
                  autosave_every: int | None = None, interpret: bool = True,
                  backends: BackendRegistry | None = None,
                  router: Router | None = None,
-                 device_build: str | bool = "auto"):
+                 device_build: str | bool = "auto",
+                 health: HealthRegistry | None = None,
+                 health_config: HealthConfig | None = None,
+                 max_retries: int = 1, validate_outputs: bool = False):
         if backends is None:
             backends = default_registry(
                 tuner, cache_size=cache_size,
@@ -238,6 +297,10 @@ class SparseKernelEngine:
         self.device_build = device_build
         self.arena_slots = arena_slots
         self.autosave_every = autosave_every
+        self.health = health if health is not None \
+            else HealthRegistry(health_config)
+        self.max_retries = int(max_retries)
+        self.validate_outputs = bool(validate_outputs)
         self.telemetry = EngineTelemetry()
         self.persist_path = Path(persist_path) if persist_path else None
         self._arenas: OrderedDict = OrderedDict()  # (plat, op, digest) -> arena
@@ -259,12 +322,22 @@ class SparseKernelEngine:
             self._warm_start()
 
     def _warm_start(self) -> None:
-        """Route every persisted namespace to its registered backend."""
-        loaded = load_grouped(self.persist_path)
+        """Route every persisted namespace to its registered backend.
+        Corrupt files (or files with corrupt entries) are quarantined —
+        renamed/copied to ``<path>.corrupt`` by ``load_grouped`` — and
+        counted, never silently dropped."""
+        existed = self.persist_path.exists()
+        loaded = load_grouped(self.persist_path, quarantine=True)
         if loaded is None:
-            if self.persist_path.exists():
-                self.telemetry.count(persist_load_failures=1)
+            if existed:
+                self.telemetry.count(
+                    persist_load_failures=1,
+                    # the unreadable file was renamed out of the way
+                    persist_quarantined=int(
+                        not self.persist_path.exists()))
             return
+        if loaded.quarantined:
+            self.telemetry.count(persist_quarantined=1)
         restored = 0
         skipped = loaded.skipped
         for tag, items in loaded.entries.items():
@@ -286,10 +359,14 @@ class SparseKernelEngine:
         """Serve one micro-batch; returns responses in request order.
 
         Runs the staged pipeline route -> partition -> score -> build ->
-        execute -> account (each stage is a ``_*_stage`` method and gets its
-        own latency histogram).  Raises ``KeyError`` — before any work is
-        done — if routing produces a ``(platform, op)`` tag with no
-        registered backend."""
+        execute -> retry -> account (each stage is a ``_*_stage`` method and
+        gets its own latency histogram).  Raises ``KeyError`` — before any
+        work is done — if routing produces a ``(platform, op)`` tag with no
+        registered backend.  An executor failure fails only its own
+        request: with ``max_retries >= 1`` the request is re-served once on
+        the healthiest surviving backend (retry lane); only a failed retry
+        — or ``max_retries=0`` — propagates the error, and even then every
+        arena lease and load counter this step took is released."""
         t_step = time.perf_counter()
         st = _StepState(requests)
         try:
@@ -297,7 +374,8 @@ class SparseKernelEngine:
                                 ("partition", self._partition_stage),
                                 ("score", self._score_stage),
                                 ("build", self._build_stage),
-                                ("execute", self._execute_stage)):
+                                ("execute", self._execute_stage),
+                                ("retry", self._retry_stage)):
                 t0 = time.perf_counter()
                 stage(st)
                 self.telemetry.record_stage(name, time.perf_counter() - t0)
@@ -306,34 +384,90 @@ class SparseKernelEngine:
             # a stage failed mid-step: roll back this step's arena leases
             # and load accounting so a caller that catches the error keeps
             # a consistent engine (no permanently-saturated backend, no
-            # exhausted arena).  Once _account_stage has handed the batch
-            # to the stream, the normal hand-off owns the cleanup.
+            # exhausted arena).  Per-item, not all-or-nothing: one lease
+            # whose release throws must not leak the rest.  Once
+            # _account_stage has handed the batch to the stream, the
+            # normal hand-off owns the cleanup.
             if not st.handed_off:
                 for lease in st.leases:
-                    lease.release()
+                    try:
+                        lease.release()
+                    except Exception:
+                        pass            # the original error propagates
                 for be, n in st.loads:
-                    be.load.end(n)
+                    try:
+                        be.load.end(n)
+                    except Exception:
+                        pass
             raise
 
     # ------------------------------------------------------ pipeline stages
 
     def routing_context(self) -> RoutingContext:
         """The engine state routers consult (registry, calibration ledger,
-        default platform) — also handy for driving a ``Router`` directly in
-        tests."""
+        default platform, backend health) — also handy for driving a
+        ``Router`` directly in tests."""
         return RoutingContext(self.backends, self.telemetry.calibration,
-                              self.default_platform)
+                              self.default_platform, self.health)
 
     def _route_stage(self, st: _StepState) -> None:
         """Digest every pattern once, let the router decide each request's
         backend, and validate every decision against the registry — an
-        unknown tag fails here, with nothing partially served."""
+        unknown tag fails here, with nothing partially served.  Then the
+        health gate runs: a decision aimed at an open circuit is rewritten
+        to the failover target *before* any work is partitioned its way (a
+        dead backend costs a dict lookup, not an executor timeout), unless
+        the breaker grants a half-open probe."""
         st.digests = [matrix_digest(r.mat) for r in st.requests]
         st.decisions = self.router.route(st.requests, st.digests,
                                          self.routing_context())
         for r, d in zip(st.requests, st.decisions):
             if (d.platform, r.op) not in self.backends:
                 self.backends.get(d.platform, r.op)   # raises the KeyError
+        self._health_gate(st)
+
+    def _health_gate(self, st: _StepState) -> None:
+        """Fast-fail requests whose decided backend's circuit is open."""
+        admitted: dict[tuple[str, str], bool] = {}
+        fast_fails = 0
+        for i, (r, d) in enumerate(zip(st.requests, st.decisions)):
+            tag = (d.platform, r.op)
+            if tag not in admitted:
+                was_closed = self.health.state(tag) == CLOSED
+                ok = self.health.allow(tag)
+                if ok and not was_closed:
+                    # this admission *is* the half-open probe grant; the
+                    # execute stage returns it if nothing actually runs
+                    st.probes.add(tag)
+                admitted[tag] = ok
+            if admitted[tag]:
+                continue
+            target = self._failover_target(r.op, exclude={d.platform})
+            if target is None:
+                continue    # nowhere to go: let the executor try anyway
+            st.failover_from[i] = d.platform
+            st.decisions[i] = RouteDecision(target, "failover")
+            fast_fails += 1
+        if fast_fails:
+            self.telemetry.count(circuit_fast_fails=fast_fails)
+
+    def _failover_target(self, op: str, exclude=frozenset()) -> str | None:
+        """The healthiest surviving backend for ``op``: lowest rolling
+        failure rate among routable (non-open-circuit) candidates, ties
+        resolved toward the default platform then alphabetically — with
+        ``cpu_ref`` (never failing, always registered in the stock
+        registry) as the natural floor.  When *every* candidate's circuit
+        is open, the least-failing one is still returned — serving a
+        request on a suspect backend beats dropping it."""
+        cands = [be for be in self.backends
+                 if be.op == op and be.platform not in exclude]
+        if not cands:
+            return None
+        alive = [be for be in cands if self.health.routable(be.tag)]
+        pool = alive or cands
+        return min(pool, key=lambda be: (
+            self.health.failure_rate(be.tag),
+            be.platform != self.default_platform, be.platform)).platform
 
     def _partition_stage(self, st: _StepState) -> None:
         """Split the batch into one partition per decided (platform, op)
@@ -433,20 +567,134 @@ class SparseKernelEngine:
 
     def _execute_stage(self, st: _StepState) -> None:
         """Launch each backend's kernel for requests carrying a dense
-        operand; operand-less requests stay prepare-only."""
+        operand; operand-less requests stay prepare-only.
+
+        Fault isolation: each request's launch (and opt-in output guard)
+        runs under its own ``try`` — one backend raising fails only its
+        partition's requests, captured per index in ``st.errors`` for the
+        retry stage, recorded against the backend's health.  A granted
+        half-open probe whose partition had nothing to execute is returned
+        to the breaker (no outcome will ever arrive for it)."""
         st.outputs = [None] * len(st.requests)
+        st.errors = [None] * len(st.requests)
         for tag, idxs in st.groups.items():
             be = st.resolved[tag]
             t0 = time.perf_counter()
+            executed = 0
             for i in idxs:
                 r = st.requests[i]
-                if r.operand is not None:
-                    st.outputs[i] = be.run(st.entries[i].config,
-                                           st.built[i][0], r.operand)
+                if r.operand is None:
+                    continue
+                executed += 1
+                try:
+                    out = be.run(st.entries[i].config, st.built[i][0],
+                                 r.operand)
+                    if self.validate_outputs:
+                        self._guard_output(out, r, st.built[i][0])
+                except Exception as e:      # KeyboardInterrupt etc. escape
+                    st.errors[i] = e
+                    self.health.record_failure(tag)
+                    self.telemetry.count(
+                        execute_failures=1,
+                        output_guard_failures=int(
+                            isinstance(e, OutputGuardError)))
+                else:
+                    st.outputs[i] = out
+            if executed == 0 and tag in st.probes:
+                self.health.cancel_probe(tag)
             dt = time.perf_counter() - t0
             st.tag_seconds[tag] = st.tag_seconds.get(tag, 0.0) + dt
             st.tag_serve_seconds[tag] = \
                 st.tag_serve_seconds.get(tag, 0.0) + dt
+
+    @staticmethod
+    def _guard_output(out, r, matrix) -> None:
+        """Opt-in output validation: NaN/inf and op shape.  Forces the
+        async dispatch to completion (that is the cost of the guard)."""
+        arr = np.asarray(out)
+        if r.op == "spmm":
+            want = (matrix.shape[0], int(np.shape(r.operand)[-1]))
+            if tuple(arr.shape) != want:
+                raise OutputGuardError(
+                    f"spmm output shape {tuple(arr.shape)} != {want}")
+        elif r.op == "sddmm":
+            if tuple(arr.shape) != tuple(np.shape(matrix.data)):
+                raise OutputGuardError(
+                    f"sddmm output shape {tuple(arr.shape)} != "
+                    f"{tuple(np.shape(matrix.data))}")
+        if arr.dtype.kind == "f" and not np.all(np.isfinite(arr)):
+            raise OutputGuardError("non-finite values in kernel output")
+
+    def _retry_stage(self, st: _StepState) -> None:
+        """Re-serve this step's failed requests once on the healthiest
+        surviving backend for their op (``cpu_ref`` as the stock floor).
+
+        The failed indices run through partition -> score -> build ->
+        execute as a sub-batch whose leases and load accounting merge into
+        the parent step (so hand-off and unwind cover them); on success
+        each index's partition bookkeeping moves to the fallback tag and
+        its response will report ``attempts=2`` / ``failed_over_from`` /
+        ``degraded``.  A failed *retry* — or ``max_retries=0`` — re-raises
+        the failure to the caller."""
+        failed = [i for i, e in enumerate(st.errors) if e is not None] \
+            if st.errors else []
+        if not failed:
+            return
+        if self.max_retries < 1:
+            raise st.errors[failed[0]]
+        targets: dict[tuple[str, str], str | None] = {}
+        for i in failed:
+            key = (st.decisions[i].platform, st.requests[i].op)
+            if key not in targets:
+                targets[key] = self._failover_target(
+                    st.requests[i].op, exclude={st.decisions[i].platform})
+            if targets[key] is None:    # nowhere to fail over to
+                raise st.errors[i]
+        sub = _StepState([st.requests[i] for i in failed])
+        sub.digests = [st.digests[i] for i in failed]
+        sub.decisions = [
+            RouteDecision(targets[(st.decisions[i].platform,
+                                   st.requests[i].op)], "failover")
+            for i in failed]
+        try:
+            self._partition_stage(sub)
+            self._score_stage(sub)
+            self._build_stage(sub)
+            self._execute_stage(sub)
+        finally:
+            # parent step owns the sub-batch's resources on every path
+            st.leases.extend(sub.leases)
+            st.loads.extend(sub.loads)
+        for k, i in enumerate(failed):
+            if sub.errors[k] is not None:
+                self.telemetry.count(retry_failures=1)
+                raise sub.errors[k]     # double failure: surface it
+        self.telemetry.count(failovers=len(failed))
+        for k, i in enumerate(failed):
+            old_tag = (st.decisions[i].platform, st.requests[i].op)
+            new_tag = (sub.decisions[k].platform, st.requests[i].op)
+            st.groups[old_tag].remove(i)
+            st.groups.setdefault(new_tag, []).append(i)
+            st.resolved.setdefault(new_tag, sub.resolved[new_tag])
+            if st.built[i] is not None:
+                # the abandoned first-attempt build was still an async
+                # dispatch — keep its ref so drain() can force it
+                st.replaced_refs.append(st.built[i][0].data)
+            st.failover_from[i] = st.decisions[i].platform
+            st.decisions[i] = sub.decisions[k]
+            st.retried.add(i)
+            st.entries[i] = sub.entries[k]
+            st.built[i] = sub.built[k]
+            st.device_flags[i] = sub.device_flags[k]
+            st.hit_of[i] = sub.hit_of[k]
+            st.outputs[i] = sub.outputs[k]
+            st.errors[i] = None
+        for tag, s in sub.tag_seconds.items():
+            st.tag_seconds[tag] = st.tag_seconds.get(tag, 0.0) + s
+        for tag, s in sub.tag_serve_seconds.items():
+            st.tag_serve_seconds[tag] = \
+                st.tag_serve_seconds.get(tag, 0.0) + s
+        st.installs += sub.installs
 
     def _account_stage(self, st: _StepState,
                        t_step: float) -> list[KernelResponse]:
@@ -456,6 +704,8 @@ class SparseKernelEngine:
         load accounting release now that this batch is in flight."""
         total_hits = total_misses = 0
         for tag, idxs in st.groups.items():
+            if not idxs:        # retry lane moved this tag's last request
+                continue
             d_hits = sum(st.hit_of[i] for i in idxs)
             total_hits += d_hits
             total_misses += len(idxs) - d_hits
@@ -474,6 +724,10 @@ class SparseKernelEngine:
             for i in idxs:
                 self.telemetry.calibration.observe(
                     tag[0], per_req, st.decisions[i].predicted, op=tag[1])
+                # only executed requests feed the breaker — a prepare-only
+                # request proves nothing about the executor
+                if st.requests[i].operand is not None:
+                    self.health.record_success(tag, per_req)
         reasons: dict[tuple[str, str], int] = {}
         for d in st.decisions:
             key = (d.platform, d.reason)
@@ -491,15 +745,18 @@ class SparseKernelEngine:
             KernelResponse(dg, entry.config, matrix, output, st.hit_of[i],
                            in_arena, st.decisions[i].platform,
                            st.decisions[i].reason, st.device_flags[i],
-                           generation)
+                           generation, 2 if i in st.retried else 1,
+                           st.failover_from.get(i), i in st.failover_from)
             for i, (dg, entry, (matrix, in_arena), output) in enumerate(
                 zip(st.digests, st.entries, st.built, st.outputs))]
 
         # everything this generation dispatched asynchronously — every
         # built matrix (arena-leased AND overrun-fallback builds, which
-        # carry no lease but were still async device dispatches) plus the
-        # kernel outputs — so drain() can force completion of all of it
+        # carry no lease but were still async device dispatches, plus
+        # first-attempt builds the retry lane abandoned) and the kernel
+        # outputs — so drain() can force completion of all of it
         refs = [matrix.data for matrix, _ in st.built] \
+            + st.replaced_refs \
             + [o for o in st.outputs if o is not None]
 
         # this stream's batch N-1 kernels were dispatched a full step ago —
@@ -516,12 +773,12 @@ class SparseKernelEngine:
         # slots — run-ahead stays bounded at two generations instead of
         # flooding the dispatch queue, and a donated device buffer can
         # never be re-donated while a consumer might still read it.
-        for ref in prev_refs:
-            jax.block_until_ready(ref)
-        for lease in prev_leases:
-            lease.release()
-        for be, n in prev_loads:
-            be.load.end(n)
+        # A ref that errors at completion time (poisoned async dispatch)
+        # must not leak the generation's leases/loads: release everything
+        # first, then surface the first error.
+        err = self._release_generation(prev_refs, prev_leases, prev_loads)
+        if err is not None:
+            raise err
 
         self.telemetry.count(requests=len(st.requests), batches=1)
         self.telemetry.record_stage("step", time.perf_counter() - t_step)
@@ -542,6 +799,29 @@ class SparseKernelEngine:
             while len(self._arenas) > max(self._arena_cap, 1):
                 self._arenas.popitem(last=False)
             return arena
+
+    @staticmethod
+    def _release_generation(refs, leases, loads) -> BaseException | None:
+        """Wait on a generation's dispatch refs, then release its leases
+        and load accounting — per item, unconditionally.  Returns the
+        first completion error (if any) instead of raising, so one
+        poisoned ref can never leak the rest of the generation."""
+        err = None
+        for ref in refs:
+            try:
+                jax.block_until_ready(ref)
+            except Exception as e:
+                if err is None:
+                    err = e
+        for lease in leases:
+            try:
+                lease.release()
+            except Exception as e:
+                if err is None:
+                    err = e
+        for be, n in loads:
+            be.load.end(n)
+        return err
 
     def _swap_stream(self, leases: list[ArenaLease],
                      loads: list[tuple[KernelBackend, int]],
@@ -587,14 +867,11 @@ class SparseKernelEngine:
         down or handing its results across threads.  Idempotent."""
         prev_leases, prev_loads, prev_refs = self._swap_stream([], [])
         pending = bool(prev_leases or prev_loads or prev_refs)
-        for ref in prev_refs:
-            jax.block_until_ready(ref)
-        for lease in prev_leases:
-            lease.release()
-        for be, n in prev_loads:
-            be.load.end(n)
+        err = self._release_generation(prev_refs, prev_leases, prev_loads)
         if pending:
             self.telemetry.count(drain_waits=1)
+        if err is not None:
+            raise err
 
     def flush(self) -> None:
         """Alias of ``release_stream()`` (the historical name)."""
@@ -616,8 +893,12 @@ class SparseKernelEngine:
         p50-p99, a ``"routing"`` section (decision reasons, per-platform
         request shares, spill + hysteresis counts, per-platform
         observed-vs-predicted calibration with per-op detail), per-backend
-        live load (``"load"``: in-flight depth / peak / total), cache and
-        arena occupancy, and persistence events.  ``"cache"`` is the
+        live load (``"load"``: in-flight depth / peak / total, plus the
+        EMA-``"smoothed"`` depth when a ``LoadAwareRouter`` maintains
+        one), a ``"health"`` section (per-tag circuit-breaker snapshots
+        under ``"breakers"`` plus execute-failure / output-guard /
+        fast-fail / failover counters — see ``docs/serving.md``), cache
+        and arena occupancy, and persistence events.  ``"cache"`` is the
         *default* backend's cache (pre-registry compat); ``"caches"``
         reports every platform's occupancy and eviction counters.  Safe to
         call concurrently with ``step``."""
@@ -635,6 +916,19 @@ class SparseKernelEngine:
         out["load"] = {tag: {"inflight": load.inflight, "peak": load.peak,
                              "total": load.total}
                        for tag, load in self.backends.loads_by_tag().items()}
+        smoothed = getattr(self.router, "smoothed_depth", None)
+        if smoothed:
+            for tag, v in smoothed.items():
+                out["load"].setdefault(tag, {})["smoothed"] = v
+        t = self.telemetry
+        out["health"] = {
+            "breakers": self.health.snapshot(),
+            "execute_failures": t.execute_failures,
+            "output_guard_failures": t.output_guard_failures,
+            "circuit_fast_fails": t.circuit_fast_fails,
+            "failovers": t.failovers,
+            "retry_failures": t.retry_failures,
+        }
         with self._lock:
             out["arenas"] = {"resident": len(self._arenas),
                              "outstanding_leases": self._outstanding,

@@ -1,0 +1,199 @@
+"""Deterministic fault injection for the serving stack.
+
+Testing a fault-tolerance layer against *real* hardware failures is not
+reproducible; testing it against ``unittest.mock`` side effects doesn't
+exercise the pipeline.  This module sits in between: a seedable,
+call-indexed fault schedule (``FaultPlan``) wraps any registered backend's
+executor in place (``inject_faults`` — ``KernelBackend.run`` is plain
+attribute assignment), so a test or benchmark can kill a backend on
+exactly the Nth kernel launch, poison its outputs with NaNs, or spike its
+latency — and replay the identical failure sequence on every run.
+
+Faults are keyed on the executor's **call index** (0-based, counted under
+a lock), not wall-clock time, so a schedule composes deterministically
+with the engine's batching: "fail calls 16..39" is exactly one healthy
+warm-up batch, one hard-down batch, and two failed half-open probes for
+an 8-request micro-batch, independent of machine speed.  The optional
+``prob`` knob keeps determinism by hashing ``(seed, call_index)`` into a
+per-call Bernoulli draw — same seed, same faults, any interleaving.
+
+Injected errors raise ``InjectedFault`` (a ``RuntimeError``), so tests can
+distinguish scheduled failures from genuine bugs.  ``truncate_file`` /
+``flip_byte`` are the matching *persistence* fault tools — torn and
+bit-rotted cache files for ``repro.serving.persist``'s quarantine path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+import numpy as np
+
+__all__ = ["InjectedFault", "FaultWindow", "FaultPlan", "FaultyExecutor",
+           "inject_faults", "truncate_file", "flip_byte"]
+
+
+class InjectedFault(RuntimeError):
+    """A scheduled executor failure (never raised by real serving code)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultWindow:
+    """One fault rule over a half-open range of executor call indices.
+
+    Args:
+        kind: ``"error"`` (raise ``InjectedFault`` instead of executing),
+            ``"nan"`` (execute, then poison the output with NaNs — what
+            the engine's opt-in output guard must catch), or
+            ``"latency"`` (sleep ``latency_s`` before executing).
+        start: first call index (0-based) the rule applies to.
+        stop: one past the last affected call; ``None`` = forever.
+        every: within the window, apply to every ``every``-th call.
+        prob: probability the rule fires on a matching call (drawn
+            deterministically from the plan seed and the call index).
+        latency_s: injected delay for ``kind="latency"``.
+    """
+    kind: str = "error"
+    start: int = 0
+    stop: int | None = None
+    every: int = 1
+    prob: float = 1.0
+    latency_s: float = 0.0
+
+    def matches(self, i: int) -> bool:
+        return (i >= self.start
+                and (self.stop is None or i < self.stop)
+                and (i - self.start) % max(self.every, 1) == 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A deterministic fault schedule: a set of windows + one seed.
+
+    ``active(i)`` returns the fault kinds firing on call ``i`` — a pure
+    function of ``(windows, seed, i)``, so a plan replays identically
+    across runs and thread interleavings."""
+    windows: tuple[FaultWindow, ...] = ()
+    seed: int = 0
+
+    @classmethod
+    def fail_calls(cls, start: int, stop: int | None = None,
+                   seed: int = 0) -> "FaultPlan":
+        """Hard-fail every executor call in ``[start, stop)``."""
+        return cls((FaultWindow("error", start, stop),), seed)
+
+    @classmethod
+    def nan_calls(cls, start: int, stop: int | None = None,
+                  seed: int = 0) -> "FaultPlan":
+        """Poison the output of every call in ``[start, stop)`` with NaNs."""
+        return cls((FaultWindow("nan", start, stop),), seed)
+
+    @classmethod
+    def latency_calls(cls, start: int, stop: int | None, latency_s: float,
+                      seed: int = 0) -> "FaultPlan":
+        """Delay every call in ``[start, stop)`` by ``latency_s``."""
+        return cls((FaultWindow("latency", start, stop,
+                                latency_s=latency_s),), seed)
+
+    def active(self, i: int) -> list[FaultWindow]:
+        out = []
+        for w in self.windows:
+            if not w.matches(i):
+                continue
+            if w.prob < 1.0:
+                # per-call deterministic Bernoulli: keyed on (seed, i) so
+                # the draw doesn't depend on evaluation order
+                draw = np.random.default_rng((self.seed, i)).random()
+                if draw >= w.prob:
+                    continue
+            out.append(w)
+        return out
+
+
+class FaultyExecutor:
+    """A backend executor wrapped with a ``FaultPlan``.
+
+    Drop-in for ``KernelBackend.run`` (``(config, matrix, operand) ->
+    output``).  Counts calls under a lock and applies the plan's rules for
+    each call index; per-kind injection counts live in ``injected``.
+    ``block_event``, when set to a ``threading.Event``, makes every
+    *faulted* error call block on the event before raising — the hook the
+    drain-under-failure tests use to hold a failure in flight.
+    """
+
+    def __init__(self, inner, plan: FaultPlan):
+        self.inner = inner
+        self.plan = plan
+        self.calls = 0
+        self.injected = {"error": 0, "nan": 0, "latency": 0}
+        self.block_event: threading.Event | None = None
+        self._lock = threading.Lock()
+        self._backend = None
+        self._orig_run = None
+
+    def __call__(self, config, matrix, operand):
+        with self._lock:
+            i = self.calls
+            self.calls += 1
+            acts = self.plan.active(i)
+            for w in acts:
+                self.injected[w.kind] += 1
+        for w in acts:
+            if w.kind == "latency":
+                time.sleep(w.latency_s)
+        if any(w.kind == "error" for w in acts):
+            if self.block_event is not None:
+                self.block_event.wait()
+            raise InjectedFault(f"injected failure on call {i}")
+        out = self.inner(config, matrix, operand)
+        if any(w.kind == "nan" for w in acts):
+            import jax.numpy as jnp
+            out = jnp.asarray(out) * jnp.float32(float("nan"))
+        return out
+
+    def restore(self) -> None:
+        """Un-inject: put the original executor back on the backend."""
+        if self._backend is not None:
+            self._backend.run = self._orig_run
+            self._backend = None
+
+
+def inject_faults(registry, platform: str, op: str,
+                  plan: FaultPlan) -> FaultyExecutor:
+    """Wrap the ``(platform, op)`` backend's executor with ``plan``.
+
+    Swaps ``KernelBackend.run`` in place on the registered backend (every
+    engine sharing the registry sees the faults — that's the point) and
+    returns the wrapper for call/injection counts and ``restore()``."""
+    be = registry.get(platform, op)
+    fx = FaultyExecutor(be.run, plan)
+    fx._backend, fx._orig_run = be, be.run
+    be.run = fx
+    return fx
+
+
+# --------------------------------------------------------- persistence faults
+
+def truncate_file(path, keep) -> None:
+    """Tear a file: keep the first ``keep`` bytes (an ``int``) or fraction
+    (a ``float`` in (0, 1)) — the shape a crash mid-write leaves behind."""
+    import os
+    size = os.path.getsize(path)
+    n = int(size * keep) if isinstance(keep, float) else int(keep)
+    with open(path, "r+b") as f:
+        f.truncate(max(n, 0))
+
+
+def flip_byte(path, offset: int, mask: int = 0xFF) -> None:
+    """Bit-rot: XOR the byte at ``offset`` (negative = from the end) with
+    ``mask``."""
+    import os
+    size = os.path.getsize(path)
+    if offset < 0:
+        offset += size
+    with open(path, "r+b") as f:
+        f.seek(offset)
+        b = f.read(1)
+        f.seek(offset)
+        f.write(bytes([b[0] ^ (mask & 0xFF)]))

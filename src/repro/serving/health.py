@@ -1,0 +1,286 @@
+"""Backend health tracking — rolling outcome windows + circuit breakers.
+
+COGNATE serves sparse kernels on *early-stage* hardware (PAPER.md), where
+executors OOM, compiles fail, and latency spikes are routine — the exact
+setting TLP and "Learning to Optimize Tensor Programs" assume when they
+build measurement noise and hardware faults into their tuning loops.  This
+module gives the serving stack the matching failure model:
+
+``BackendHealth`` — one per ``(platform, op)`` tag — keeps a rolling
+success/failure window, a latency EMA, and a three-state **circuit
+breaker**:
+
+* **closed** — the healthy steady state; every dispatch is admitted.
+* **open** — entered when the rolling failure rate crosses
+  ``failure_threshold`` (over at least ``min_samples`` outcomes) *or*
+  ``consecutive_errors`` dispatches fail back to back.  While open, the
+  engine fast-fails the backend's traffic into the failover lane without
+  touching the executor — a dead backend costs a dict lookup, not a
+  timeout.
+* **half_open** — after the open backoff elapses, exactly one *probe*
+  admission is granted.  A successful probe closes the breaker (and
+  resets the backoff and the failure window — stale failures must not
+  immediately re-trip it); a failed probe reopens it with the backoff
+  escalated by ``backoff_factor`` (capped at ``max_backoff_s``), so a
+  still-dead backend is probed at a decaying rate instead of hammered.
+
+``HealthRegistry`` owns the per-tag breakers behind one lock and is what
+the engine, the routers (via ``RoutingContext.health``), and
+``stats()["health"]`` consult.  It is deterministic under test: inject a
+fake ``clock`` (any ``() -> float`` monotonic source) and breaker
+transitions become a pure function of recorded outcomes and clock reads.
+
+Every state change bumps the tag's ``transitions`` counter;
+``generation(platform)`` sums them per platform, which is how
+``CostModelRouter`` invalidates sticky routing memos the moment a
+backend's health changes (in either direction) — a memoized pick is only
+as durable as the health snapshot it was made under.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+
+__all__ = ["CLOSED", "OPEN", "HALF_OPEN", "HealthConfig", "BackendHealth",
+           "HealthRegistry"]
+
+#: Circuit-breaker states (plain strings so they render in ``stats()``).
+CLOSED = "closed"
+OPEN = "open"
+HALF_OPEN = "half_open"
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Breaker thresholds and backoff schedule (shared by every tag).
+
+    Args:
+        window: rolling outcome window per tag — the failure *rate* is
+            measured over the last ``window`` dispatches only, so a
+            backend's ancient history can't keep a breaker open.
+        failure_threshold: open when the window failure rate reaches this
+            (and the window holds at least ``min_samples`` outcomes).
+        min_samples: outcomes required before the rate can trip the
+            breaker — one early failure on a cold backend is not a signal.
+        consecutive_errors: open immediately after this many back-to-back
+            failures, regardless of the windowed rate (hard-down detection
+            for a backend that was healthy until just now).
+        backoff_s: initial open -> half-open delay.
+        backoff_factor: multiplier applied on every *failed* probe.
+        max_backoff_s: escalation cap.
+        latency_alpha: EMA coefficient for the per-tag latency ledger.
+    """
+    window: int = 32
+    failure_threshold: float = 0.5
+    min_samples: int = 4
+    consecutive_errors: int = 3
+    backoff_s: float = 1.0
+    backoff_factor: float = 2.0
+    max_backoff_s: float = 30.0
+    latency_alpha: float = 0.2
+
+
+class BackendHealth:
+    """Rolling health of one ``(platform, op)`` tag + its circuit breaker.
+
+    Not locked itself — every mutation goes through the owning
+    ``HealthRegistry``'s lock.
+    """
+
+    def __init__(self, config: HealthConfig):
+        self.config = config
+        self.state = CLOSED
+        self.outcomes: deque = deque(maxlen=config.window)  # True = success
+        self.consecutive_failures = 0
+        self.latency_ms = 0.0           # EMA of successful serve latency
+        self.successes = 0
+        self.failures = 0
+        self.opens = 0                  # closed/half_open -> open trips
+        self.probes = 0                 # half-open admissions granted
+        self.probe_successes = 0
+        self.probe_failures = 0
+        self.transitions = 0            # every state change (any direction)
+        self._opened_at = 0.0
+        self._backoff = config.backoff_s
+        self._probe_inflight = False
+
+    # Registry-internal helpers (caller holds the registry lock).
+
+    def _set_state(self, state: str) -> None:
+        if state != self.state:
+            self.state = state
+            self.transitions += 1
+
+    def _tripped(self) -> bool:
+        if self.consecutive_failures >= self.config.consecutive_errors:
+            return True
+        n = len(self.outcomes)
+        return (n >= self.config.min_samples
+                and self.failure_rate() >= self.config.failure_threshold)
+
+    def failure_rate(self) -> float:
+        """Failure fraction over the rolling window (0.0 when empty)."""
+        n = len(self.outcomes)
+        return (sum(1 for ok in self.outcomes if not ok) / n) if n else 0.0
+
+    def snapshot(self) -> dict:
+        return {"state": self.state,
+                "successes": self.successes, "failures": self.failures,
+                "failure_rate": self.failure_rate(),
+                "consecutive_failures": self.consecutive_failures,
+                "latency_ms": self.latency_ms,
+                "opens": self.opens, "probes": self.probes,
+                "probe_successes": self.probe_successes,
+                "probe_failures": self.probe_failures,
+                "transitions": self.transitions,
+                "backoff_s": self._backoff}
+
+
+class HealthRegistry:
+    """Per-``(platform, op)`` breakers behind one lock.
+
+    Args:
+        config: shared ``HealthConfig`` (default thresholds).
+        clock: monotonic time source — injectable so tests drive breaker
+            timing deterministically (``time.monotonic`` by default).
+
+    The admission protocol the engine follows per step and tag:
+    ``allow(tag)`` — ``True`` admits the dispatch (closed breaker, or the
+    one half-open probe); ``False`` means fast-fail into the failover
+    lane.  Outcomes feed back through ``record_success(tag, latency_s)``
+    / ``record_failure(tag)``.  A granted probe whose partition turns out
+    to have nothing to execute is returned via ``cancel_probe(tag)`` so
+    the next step can claim it.
+    """
+
+    def __init__(self, config: HealthConfig | None = None,
+                 clock=time.monotonic):
+        self.config = config or HealthConfig()
+        self.clock = clock
+        self._lock = threading.Lock()
+        self._by_tag: dict[tuple[str, str], BackendHealth] = {}
+
+    def _of(self, tag) -> BackendHealth:
+        tag = tuple(tag)
+        h = self._by_tag.get(tag)
+        if h is None:
+            h = self._by_tag[tag] = BackendHealth(self.config)
+        return h
+
+    # ------------------------------------------------------------ admission
+
+    def allow(self, tag) -> bool:
+        """Admit one dispatch to ``tag``?  Closed: always.  Open: ``False``
+        until the backoff elapses, then the breaker moves to half-open and
+        this call *is* the probe grant.  Half-open: one probe at a time."""
+        with self._lock:
+            h = self._of(tag)
+            if h.state == CLOSED:
+                return True
+            if h.state == OPEN:
+                if self.clock() - h._opened_at < h._backoff:
+                    return False
+                h._set_state(HALF_OPEN)
+            # half-open: grant a single outstanding probe
+            if h._probe_inflight:
+                return False
+            h._probe_inflight = True
+            h.probes += 1
+            return True
+
+    def cancel_probe(self, tag) -> None:
+        """Return an unused probe grant (the admitted partition had nothing
+        to execute, so no outcome will ever be recorded for it)."""
+        with self._lock:
+            h = self._of(tag)
+            if h.state == HALF_OPEN and h._probe_inflight:
+                h._probe_inflight = False
+                h.probes -= 1
+
+    def routable(self, tag) -> bool:
+        """Whether a router should consider ``tag`` a live candidate:
+        ``False`` only while the breaker is open *and* its backoff has not
+        elapsed.  A probe-due open breaker (and half-open) stays routable —
+        filtering it out entirely would starve the probe that lets the
+        backend recover."""
+        with self._lock:
+            h = self._by_tag.get(tuple(tag))
+            if h is None or h.state != OPEN:
+                return True
+            return self.clock() - h._opened_at >= h._backoff
+
+    # ------------------------------------------------------------- outcomes
+
+    def record_success(self, tag, latency_s: float = 0.0) -> None:
+        with self._lock:
+            h = self._of(tag)
+            h.successes += 1
+            h.outcomes.append(True)
+            h.consecutive_failures = 0
+            a = self.config.latency_alpha
+            ms = latency_s * 1e3
+            h.latency_ms = ms if h.successes == 1 \
+                else (1 - a) * h.latency_ms + a * ms
+            if h.state == HALF_OPEN:
+                # probe succeeded: close, reset the escalation, and clear
+                # the window — stale failures must not instantly re-trip
+                h.probe_successes += 1
+                h._probe_inflight = False
+                h._backoff = self.config.backoff_s
+                h.outcomes.clear()
+                h._set_state(CLOSED)
+            # a straggler completing after the breaker opened is counted
+            # but is NOT a probe — only half-open successes close
+
+    def record_failure(self, tag) -> None:
+        with self._lock:
+            h = self._of(tag)
+            h.failures += 1
+            h.outcomes.append(False)
+            h.consecutive_failures += 1
+            if h.state == HALF_OPEN:
+                # failed probe: reopen with the backoff escalated
+                h.probe_failures += 1
+                h._probe_inflight = False
+                h._backoff = min(h._backoff * self.config.backoff_factor,
+                                 self.config.max_backoff_s)
+                h._opened_at = self.clock()
+                h.opens += 1
+                h._set_state(OPEN)
+            elif h.state == CLOSED and h._tripped():
+                h._backoff = self.config.backoff_s
+                h._opened_at = self.clock()
+                h.opens += 1
+                h._set_state(OPEN)
+
+    # ---------------------------------------------------------- observation
+
+    def state(self, tag) -> str:
+        """Current breaker state (no side effects, no transitions)."""
+        with self._lock:
+            h = self._by_tag.get(tuple(tag))
+            return h.state if h is not None else CLOSED
+
+    def failure_rate(self, tag) -> float:
+        """Rolling-window failure rate for ``tag`` (0.0 if never seen) —
+        the "healthiest surviving candidate" ordering key."""
+        with self._lock:
+            h = self._by_tag.get(tuple(tag))
+            return h.failure_rate() if h is not None else 0.0
+
+    def generation(self, platform: str) -> int:
+        """Sum of breaker transitions across the platform's tags — the
+        invalidation token health-aware memoization (sticky routing) keys
+        on: any state change, in either direction, bumps it."""
+        with self._lock:
+            return sum(h.transitions for (p, _), h in self._by_tag.items()
+                       if p == platform)
+
+    def snapshot(self) -> dict:
+        """``"platform/op" -> breaker stats`` — what
+        ``SparseKernelEngine.stats()["health"]["breakers"]`` renders."""
+        with self._lock:
+            return {f"{p}/{op}": h.snapshot()
+                    for (p, op), h in sorted(self._by_tag.items())}

@@ -21,6 +21,22 @@ layout — a defect that would otherwise surface only at first scatter), are
 *individually* skipped (counted in ``GroupedCacheLoad.skipped``) — one bad
 or orphaned entry never costs the rest of the file.
 
+**Per-entry checksums + quarantine (format version 4).**  Each manifest
+entry carries a CRC32 over the entry's plan arrays (scatter arrays +
+device index), verified at load: the zip layer's member CRCs catch rot
+*within* one stored array, but only an entry-level checksum catches
+arrays swapped between entries or a manifest re-pointed at the wrong
+member — corruption the structural checks can miss.  A file that fails
+to load — wholesale, or any individual entry — can be **quarantined**
+(``load_grouped(..., quarantine=True)``, what the engine's warm-start
+passes): an unreadable file is renamed to ``<path>.corrupt`` and a file
+with bad entries is copied there (the good entries keep serving), so
+corruption is preserved as evidence and counted
+(``stats()["persist_quarantined"]``), never silently dropped.  Saves
+additionally fsync the parent directory after the atomic rename, so the
+commit itself survives power loss.  Version 3/2/1 files still restore
+(no CRC to check).
+
 **Device index arrays (format version 3).**  Each entry additionally
 carries the plan's flattened device-scatter index (``BsrPlan.flat_index``
 — the scatter half of the jitted device build path).  At load it is
@@ -46,7 +62,9 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import shutil
 import warnings
+import zlib
 from pathlib import Path
 
 import numpy as np
@@ -59,7 +77,7 @@ __all__ = ["CACHE_FORMAT_VERSION", "LEGACY_NAMESPACE", "GroupedCacheLoad",
            "save_cache", "save_backends", "load_cache", "load_grouped",
            "warm_start"]
 
-CACHE_FORMAT_VERSION = 3
+CACHE_FORMAT_VERSION = 4
 
 #: Namespace key ``load_grouped`` files version-1 (pre-tag) entries under;
 #: callers route it to their default backend.
@@ -85,6 +103,9 @@ class GroupedCacheLoad:
     """
     entries: dict
     skipped: int = 0
+    #: True when corrupt entries were found and the file was copied to
+    #: ``<path>.corrupt`` (``quarantine=True`` loads only)
+    quarantined: bool = False
 
     def __len__(self):
         return sum(len(v) for v in self.entries.values())
@@ -110,13 +131,36 @@ def _atomic_savez(path: Path, arrays: dict) -> Path:
         f.flush()
         os.fsync(f.fileno())
     os.replace(tmp, path)               # atomic commit
+    # fsync the directory too: os.replace orders the rename against the
+    # file's data, but the *directory entry* itself can still be lost on
+    # power failure without this — then the save never happened
+    try:
+        dfd = os.open(path.parent, os.O_RDONLY)
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
+    except OSError:                     # platforms without dir fsync
+        pass
     return path
+
+
+def _entry_crc(arrs: dict, dindex) -> int:
+    """CRC32 over one entry's plan arrays (+ device index), in layout
+    order — the v4 cross-array integrity check."""
+    crc = 0
+    for name in _PLAN_ARRAYS:
+        crc = zlib.crc32(np.ascontiguousarray(arrs[name]).tobytes(), crc)
+    if dindex is not None:
+        crc = zlib.crc32(np.ascontiguousarray(dindex).tobytes(), crc)
+    return crc
 
 
 def _serialize(flat: list[tuple], path: Path, version: int) -> Path:
     """[(tag, (op, digest), entry), ...] -> atomically committed ``.npz``.
     ``version=1`` omits the per-entry backend tag (the legacy format);
-    ``version=2`` omits the device-scatter index arrays."""
+    ``version=2`` omits the device-scatter index arrays; ``version=3``
+    omits the per-entry CRC32."""
     manifest = {"version": version, "entries": []}
     arrays = {}
     for i, (tag, (op, digest), e) in enumerate(flat):
@@ -131,6 +175,10 @@ def _serialize(flat: list[tuple], path: Path, version: int) -> Path:
             arrays[f"e{i}_{name}"] = getattr(plan, name)
         if version >= 3:
             arrays[f"e{i}_dindex"] = plan.flat_index()
+        if version >= 4:
+            m["crc"] = _entry_crc(
+                {name: arrays[f"e{i}_{name}"] for name in _PLAN_ARRAYS},
+                arrays[f"e{i}_dindex"])
     arrays["manifest"] = np.frombuffer(
         json.dumps(manifest).encode(), np.uint8)
     return _atomic_savez(path, arrays)
@@ -147,8 +195,8 @@ def save_backends(grouped, path: str | os.PathLike, *,
     ``version=2`` writes the pre-device-index byte layout (compatibility
     tests / older readers).
     """
-    if version not in (2, CACHE_FORMAT_VERSION):
-        raise ValueError(f"save_backends writes version 2 or "
+    if version not in (2, 3, CACHE_FORMAT_VERSION):
+        raise ValueError(f"save_backends writes version 2, 3, or "
                          f"{CACHE_FORMAT_VERSION}, not {version}")
     if hasattr(grouped, "caches_by_platform"):      # a BackendRegistry
         grouped = grouped.caches_by_platform()
@@ -178,6 +226,12 @@ def save_cache(cache: AutotuneCache, path: str | os.PathLike,
 def _decode_entry(data, i: int, m: dict) -> tuple:
     """One manifest entry -> ((op, digest), TunedKernel); raises on defects."""
     arrs = {name: data[f"e{i}_{name}"] for name in _PLAN_ARRAYS}
+    dindex = data[f"e{i}_dindex"] if f"e{i}_dindex" in data else None
+    if "crc" in m:                      # v4: entry-level integrity check
+        got = _entry_crc(arrs, dindex)
+        if got != int(m["crc"]):
+            raise ValueError(f"entry {i}: CRC mismatch "
+                             f"(manifest {int(m['crc'])}, arrays {got})")
     for name, want in _PLAN_DTYPES.items():
         # a wrong-dtype scatter array would restore fine and then fail (or
         # silently mis-scatter) on the entry's first build — reject it here
@@ -203,9 +257,7 @@ def _decode_entry(data, i: int, m: dict) -> tuple:
     plan = BsrPlan(n_blockrows=int(m["n_blockrows"]),
                    n_blockcols=int(m["n_blockcols"]),
                    block_m=int(m["block_m"]), **arrs)
-    dkey = f"e{i}_dindex"
-    if dkey in data:            # v3: restored device-scatter index
-        dindex = data[dkey]
+    if dindex is not None:      # v3+: restored device-scatter index
         # an in-range but *wrong* index would silently mis-scatter on the
         # device path only — validate against the (already range-checked)
         # scatter arrays it is derived from, not just its bounds
@@ -222,24 +274,49 @@ def _decode_entry(data, i: int, m: dict) -> tuple:
     return (m["op"], m["digest"]), entry
 
 
-def load_grouped(path: str | os.PathLike) -> GroupedCacheLoad | None:
+def _quarantine_file(path: Path, *, rename: bool) -> bool:
+    """Preserve a corrupt cache file as ``<path>.corrupt`` (evidence,
+    never silently dropped).  ``rename=True`` moves the file out of the
+    way (wholesale-unreadable — nothing left worth serving);
+    ``rename=False`` copies it (some entries were good and the original
+    keeps serving them).  Best-effort: returns whether it happened."""
+    target = path.with_name(path.name + ".corrupt")
+    try:
+        if rename:
+            os.replace(path, target)
+        else:
+            shutil.copyfile(path, target)
+        warnings.warn(f"autotune cache quarantined to {target}")
+        return True
+    except OSError:
+        return False
+
+
+def load_grouped(path: str | os.PathLike, *,
+                 quarantine: bool = False) -> GroupedCacheLoad | None:
     """Read a persisted cache file into per-backend namespaces.
 
-    Version-2/3 entries land under their recorded platform tag (version 3
-    additionally restores each plan's device-scatter index); version-1
-    entries (no tags) land under ``LEGACY_NAMESPACE``.  Individually broken
-    entries — ragged or out-of-range arrays, scatter dtypes that don't
+    Version-2/3/4 entries land under their recorded platform tag (version
+    3 additionally restores each plan's device-scatter index; version 4
+    additionally verifies a per-entry CRC32); version-1 entries (no tags)
+    land under ``LEGACY_NAMESPACE``.  Individually broken entries — CRC
+    mismatches, ragged or out-of-range arrays, scatter dtypes that don't
     match the plan layout — are dropped and counted in ``.skipped``
     (versions >= 2) — the rest of the file still loads.  Returns ``None``
     only when the file as a whole is unreadable (absent, torn zip, bad
     manifest, unknown version), so callers fall back to a cold cache.
-    """
+
+    With ``quarantine=True`` (what the engine's warm-start passes), a
+    wholesale-unreadable file is renamed to ``<path>.corrupt`` and a file
+    with skipped entries is copied there (``.quarantined`` set on the
+    result) — corruption is preserved as evidence, never silently
+    dropped."""
     path = Path(path)
     try:
         with np.load(path) as data:
             manifest = json.loads(bytes(data["manifest"]).decode())
             version = manifest.get("version")
-            if version not in (1, 2, CACHE_FORMAT_VERSION):
+            if version not in (1, 2, 3, CACHE_FORMAT_VERSION):
                 raise ValueError(f"unsupported cache version {version}")
             out = GroupedCacheLoad(entries={})
             for i, m in enumerate(manifest["entries"]):
@@ -254,12 +331,16 @@ def load_grouped(path: str | os.PathLike) -> GroupedCacheLoad | None:
                     out.skipped += 1
                     continue
                 out.entries.setdefault(tag, []).append((key, entry))
-            return out
+        if out.skipped and quarantine:
+            out.quarantined = _quarantine_file(path, rename=False)
+        return out
     except FileNotFoundError:
         return None
     except Exception as e:             # torn file, bad json, bad zip, ...
         warnings.warn(f"autotune cache at {path} unreadable "
                       f"({type(e).__name__}: {e}); starting cold")
+        if quarantine:
+            _quarantine_file(path, rename=True)
         return None
 
 

@@ -48,10 +48,18 @@ Three policies ship:
     inner router learns what the fallback actually costs.
 
 Routers are pure policy objects: all engine state they need arrives in the
-per-step ``RoutingContext`` (registry, calibration, default platform), so a
-policy can be unit-tested with a hand-built context and swapped per engine
-via ``SparseKernelEngine(router=...)``.  A custom policy is any object with
-this protocol's ``route`` method.
+per-step ``RoutingContext`` (registry, calibration, default platform,
+backend health), so a policy can be unit-tested with a hand-built context
+and swapped per engine via ``SparseKernelEngine(router=...)``.  A custom
+policy is any object with this protocol's ``route`` method.
+
+Routing is **health-aware** (``repro.serving.health``): ``candidates()``
+filters backends whose circuit breaker is open (unless every candidate
+is), ``CostModelRouter`` sticky memos carry the health generation they
+were decided under and invalidate on any breaker transition, and
+``LoadAwareRouter`` treats an open circuit as instant saturation.  The
+engine's route-stage health gate is the second line of defense — it
+rewrites any surviving open-circuit decision to the failover target.
 """
 from __future__ import annotations
 
@@ -93,16 +101,29 @@ class RouteDecision:
 
 @dataclasses.dataclass
 class RoutingContext:
-    """Engine state a router may consult, rebuilt per ``step``."""
+    """Engine state a router may consult, rebuilt per ``step``.
+
+    ``health`` is the engine's ``HealthRegistry`` (``None`` in hand-built
+    test contexts): routers use it to keep open-circuit backends out of
+    candidate sets and memos."""
     registry: BackendRegistry
     calibration: RouteCalibration
     default_platform: str
+    health: object | None = None        # repro.serving.health.HealthRegistry
 
     def candidates(self, op: str) -> list[KernelBackend]:
         """Backends that can serve ``op``, default platform first (ties in
         scoring resolve toward it), then alphabetically — deterministic
-        whatever order the registry was populated in."""
+        whatever order the registry was populated in.  Backends whose
+        circuit breaker is open (and not yet due a recovery probe) are
+        filtered out — unless that would empty the list, in which case the
+        full set is returned (routing *somewhere* beats refusing)."""
         bes = [be for be in self.registry if be.op == op]
+        if self.health is not None:
+            alive = [be for be in bes
+                     if self.health.routable((be.platform, op))]
+            if alive:
+                bes = alive
         bes.sort(key=lambda be: (be.platform != self.default_platform,
                                  be.platform))
         return bes
@@ -172,7 +193,9 @@ class CostModelRouter:
         self.default_prior = float(default_prior)
         self.unscored_prior = float(unscored_prior)
         self.explore_every = explore_every
-        self._memo: OrderedDict = OrderedDict()   # digest -> platform
+        # digest -> (platform, health generation at decision time): a memo
+        # is only as durable as the health snapshot it was made under
+        self._memo: OrderedDict = OrderedDict()
         self._memo_size = memo_size
         self._lock = threading.Lock()
         self._decide_count = 0
@@ -182,6 +205,9 @@ class CostModelRouter:
         self.dispatches = 0
         #: patterns actually scored (cache-missed the sticky memo)
         self.scored_patterns = 0
+        #: sticky memos dropped because the memoized platform's health
+        #: changed state (in either direction) since the decision
+        self.sticky_invalidations = 0
 
     # ------------------------------------------------------------- helpers
 
@@ -228,9 +254,18 @@ class CostModelRouter:
                     continue
                 hit = self._memo.get(digests[i])
                 if hit is not None:
-                    self._memo.move_to_end(digests[i])
-                    decisions[i] = RouteDecision(hit, "sticky")
-                    continue
+                    plat, gen = hit
+                    if ctx.health is not None \
+                            and ctx.health.generation(plat) != gen:
+                        # the memoized platform's breaker transitioned
+                        # (opened, or recovered) since this pick: drop the
+                        # memo and re-decide against current health
+                        del self._memo[digests[i]]
+                        self.sticky_invalidations += 1
+                    else:
+                        self._memo.move_to_end(digests[i])
+                        decisions[i] = RouteDecision(plat, "sticky")
+                        continue
                 self._decide_count += 1
                 if self.explore_every \
                         and self._decide_count % self.explore_every == 0:
@@ -255,10 +290,16 @@ class CostModelRouter:
                 continue
             decided = self._decide(
                 [requests[i] for i in score_idx], op, candidates, ctx)
+            gen_of = {}
             with self._lock:
                 for i, d in zip(score_idx, decided):
                     decisions[i] = d
-                    self._memo[digests[i]] = d.platform
+                    if d.platform not in gen_of:
+                        gen_of[d.platform] = \
+                            ctx.health.generation(d.platform) \
+                            if ctx.health is not None else 0
+                    self._memo[digests[i]] = (d.platform,
+                                              gen_of[d.platform])
                     self._memo.move_to_end(digests[i])
                     while len(self._memo) > self._memo_size:
                         self._memo.popitem(last=False)
@@ -329,6 +370,11 @@ class LoadAwareRouter:
     — when the whole system is saturated, shedding to the fallback is still
     the right call.
 
+    An **open circuit is saturation**: when the chosen backend's breaker
+    is open (``ctx.health``), the decision spills immediately —
+    bypassing both the depth threshold and the hysteresis streak, because
+    a dead backend is not a transient burst.
+
     Args:
         inner: the policy being wrapped (its reasons are preserved for
             requests that don't spill).
@@ -338,37 +384,62 @@ class LoadAwareRouter:
             required before the first spill.  ``1`` restores the immediate
             pre-hysteresis behavior.  The streak resets as soon as a
             decision finds the backend below ``max_inflight``.
+        depth_alpha: EMA coefficient smoothing the queue-depth signal the
+            spill decision reads.  ``1.0`` (default) is the raw
+            instantaneous depth — the historical behavior, bit for bit.
+            Below 1.0, each decision sees ``(1-a)*ema + a*depth`` (seeded
+            from 0), so a single spiky batch doesn't flip the spill
+            decision but sustained saturation still does; the smoothed
+            value per tag is exposed in ``stats()["load"][tag]
+            ["smoothed"]``.
     """
 
     def __init__(self, inner: Router | None = None, max_inflight: int = 16,
-                 spill_to: str = "cpu_ref", spill_after: int = 2):
+                 spill_to: str = "cpu_ref", spill_after: int = 2,
+                 depth_alpha: float = 1.0):
         self.inner = inner if inner is not None else StaticRouter()
         self.max_inflight = int(max_inflight)
         self.spill_to = spill_to
         self.spill_after = max(int(spill_after), 1)
+        self.depth_alpha = float(depth_alpha)
         #: lifetime spill count (also in ``stats()["routing"]["spills"]``)
         self.spills = 0
         #: saturated decisions whose spill was suppressed by hysteresis
         #: (also in ``stats()["routing"]["spill_hysteresis"]``)
         self.spill_hysteresis = 0
         self._streak: dict[tuple[str, str], int] = {}
+        self._ema: dict[tuple[str, str], float] = {}
         self._lock = threading.Lock()
+
+    @property
+    def smoothed_depth(self) -> dict[str, float]:
+        """``"platform/op" -> EMA-smoothed queue depth`` (what the spill
+        decision actually compared against ``max_inflight``); surfaces in
+        the engine's ``stats()["load"]``."""
+        with self._lock:
+            return {f"{p}/{op}": v for (p, op), v in self._ema.items()}
 
     def route(self, requests, digests, ctx: RoutingContext) \
             -> list[RouteDecision]:
         decisions = self.inner.route(requests, digests, ctx)
         pending: dict[tuple[str, str], int] = {}
+        a = self.depth_alpha
         with self._lock:
             for i, (r, d) in enumerate(zip(requests, decisions)):
                 tag = (d.platform, r.op)
                 if d.platform != self.spill_to and tag in ctx.registry:
-                    depth = ctx.registry.get(*tag).load.inflight \
+                    raw = ctx.registry.get(*tag).load.inflight \
                         + pending.get(tag, 0)
-                    if depth >= self.max_inflight \
+                    depth = raw if a >= 1.0 \
+                        else (1 - a) * self._ema.get(tag, 0.0) + a * raw
+                    self._ema[tag] = depth
+                    circuit_open = (ctx.health is not None
+                                    and not ctx.health.routable(tag))
+                    if (circuit_open or depth >= self.max_inflight) \
                             and (self.spill_to, r.op) in ctx.registry:
                         streak = self._streak.get(tag, 0) + 1
                         self._streak[tag] = streak
-                        if streak >= self.spill_after:
+                        if circuit_open or streak >= self.spill_after:
                             d = decisions[i] = RouteDecision(self.spill_to,
                                                              "spill")
                             self.spills += 1

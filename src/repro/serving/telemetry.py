@@ -79,7 +79,8 @@ class LatencyHistogram:
                 "max_ms": self.max * 1e3}
 
 
-STAGES = ("route", "partition", "score", "build", "execute", "step")
+STAGES = ("route", "partition", "score", "build", "execute", "retry",
+          "step")
 
 
 class RouteCalibration:
@@ -205,6 +206,12 @@ class EngineTelemetry:
         self.warm_start_skipped = 0     # persisted entries no backend claimed
         self.persist_saves = 0
         self.persist_load_failures = 0  # corrupted/absent files -> cold start
+        self.persist_quarantined = 0    # corrupt cache files renamed .corrupt
+        self.execute_failures = 0       # executor raised (per request)
+        self.output_guard_failures = 0  # opt-in NaN/inf/shape guard trips
+        self.circuit_fast_fails = 0     # requests rerouted off an open circuit
+        self.failovers = 0              # requests re-served via the retry lane
+        self.retry_failures = 0         # retry-lane executions that also failed
         self.backends: dict = {}        # "platform/op" -> per-backend stats
         self.route_reasons: dict = {}   # reason -> requests routed that way
         self.route_platforms: dict = {} # platform -> requests routed to it
@@ -274,6 +281,7 @@ class EngineTelemetry:
                 "warm_start_skipped": self.warm_start_skipped,
                 "persist_saves": self.persist_saves,
                 "persist_load_failures": self.persist_load_failures,
+                "persist_quarantined": self.persist_quarantined,
                 "stages": {k: h.snapshot() for k, h in self.stages.items()},
                 "backends": {
                     tag: {"requests": b["requests"], "hits": b["hits"],

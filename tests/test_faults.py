@@ -1,0 +1,596 @@
+"""Fault-tolerance tests: circuit breakers (``repro.serving.health``), the
+deterministic fault-injection harness (``repro.serving.faults``), the
+engine's retry-with-failover lane and output guards, health-aware routing
+(sticky invalidation, open-circuit spill, EMA-smoothed depth), and the
+persistence CRC/quarantine hardening (format v4).
+
+Every breaker test drives time through an injected fake clock and every
+executor failure through a ``FaultPlan`` keyed on call index, so the whole
+file is deterministic — no sleeps, no wall-clock races.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.data import generate_matrix
+from repro.kernels import spmm_ref
+from repro.serving import (CostModelRouter, FaultPlan, FaultWindow,
+                           FaultyExecutor, HealthConfig, HealthRegistry,
+                           InjectedFault, KernelRequest, LoadAwareRouter,
+                           SparseKernelEngine, StaticRouter, default_registry,
+                           flip_byte, inject_faults, load_grouped,
+                           save_backends, truncate_file)
+from repro.serving.health import CLOSED, HALF_OPEN, OPEN
+
+
+def _mats(n, seed0=0, n_rows=256, nnz=1200):
+    fams = ("uniform", "banded", "powerlaw", "blockdiag")
+    return [generate_matrix(fams[i % 4], seed=seed0 + i, n_rows=n_rows,
+                            n_cols=n_rows, target_nnz=nnz) for i in range(n)]
+
+
+class FakeClock:
+    """Injectable monotonic source — breaker timing becomes deterministic."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _requests(mats, rhs, seed=0):
+    rng = np.random.default_rng(seed)
+    return [KernelRequest(m, rng.normal(size=m.nnz).astype(np.float32),
+                          "spmm", rhs) for m in mats]
+
+
+TAG = ("tpu_interpret", "spmm")
+
+
+# -------------------------------------------------------- breaker unit tests
+
+def test_breaker_trips_on_consecutive_errors():
+    clk = FakeClock()
+    hr = HealthRegistry(HealthConfig(consecutive_errors=3, backoff_s=2.0),
+                        clock=clk)
+    hr.record_failure(TAG)
+    hr.record_failure(TAG)
+    assert hr.state(TAG) == CLOSED and hr.allow(TAG)
+    hr.record_failure(TAG)                  # third back-to-back: trip
+    assert hr.state(TAG) == OPEN
+    assert not hr.allow(TAG) and not hr.routable(TAG)
+    clk.advance(2.0)                        # backoff elapsed: probe due
+    assert hr.routable(TAG)
+    assert hr.allow(TAG)                    # this admission IS the probe
+    assert hr.state(TAG) == HALF_OPEN
+    assert not hr.allow(TAG)                # one probe at a time
+    hr.record_success(TAG, 0.001)
+    assert hr.state(TAG) == CLOSED
+    snap = hr.snapshot()["tpu_interpret/spmm"]
+    assert snap["probe_successes"] == 1 and snap["opens"] == 1
+    assert snap["failure_rate"] == 0.0      # window cleared on recovery
+
+
+def test_breaker_trips_on_windowed_failure_rate():
+    # consecutive_errors out of reach: only the rolling rate can trip it
+    hr = HealthRegistry(HealthConfig(window=8, failure_threshold=0.5,
+                                     min_samples=4, consecutive_errors=100),
+                        clock=FakeClock())
+    hr.record_failure(TAG)
+    hr.record_success(TAG)
+    hr.record_failure(TAG)
+    hr.record_success(TAG)
+    assert hr.state(TAG) == CLOSED          # rate 0.5 but checked on failure
+    hr.record_failure(TAG)                  # 3/5 = 0.6 >= 0.5, n >= 4: trip
+    assert hr.state(TAG) == OPEN
+    assert hr.failure_rate(TAG) == pytest.approx(0.6)
+
+
+def test_breaker_backoff_escalates_on_failed_probes():
+    clk = FakeClock()
+    hr = HealthRegistry(HealthConfig(consecutive_errors=1, backoff_s=1.0,
+                                     backoff_factor=2.0, max_backoff_s=4.0),
+                        clock=clk)
+    hr.record_failure(TAG)                  # trip (backoff 1s)
+    clk.advance(1.0)
+    assert hr.allow(TAG)                    # probe #1
+    hr.record_failure(TAG)                  # fails: reopen, backoff -> 2s
+    assert hr.state(TAG) == OPEN
+    clk.advance(1.0)
+    assert not hr.allow(TAG)                # 1s < escalated 2s
+    clk.advance(1.0)
+    assert hr.allow(TAG)                    # probe #2
+    hr.record_failure(TAG)                  # backoff -> 4s (the cap)
+    clk.advance(4.0)
+    assert hr.allow(TAG)                    # probe #3
+    hr.record_failure(TAG)                  # capped: stays 4s
+    snap = hr.snapshot()["tpu_interpret/spmm"]
+    assert snap["probe_failures"] == 3 and snap["backoff_s"] == 4.0
+    clk.advance(4.0)
+    assert hr.allow(TAG)
+    hr.record_success(TAG)                  # recovery resets the escalation
+    assert hr.snapshot()["tpu_interpret/spmm"]["backoff_s"] == 1.0
+    assert hr.state(TAG) == CLOSED
+
+
+def test_breaker_probe_cancel_returns_grant():
+    clk = FakeClock()
+    hr = HealthRegistry(HealthConfig(consecutive_errors=1, backoff_s=1.0),
+                        clock=clk)
+    hr.record_failure(TAG)
+    clk.advance(1.0)
+    assert hr.allow(TAG)                    # probe granted...
+    hr.cancel_probe(TAG)                    # ...but nothing executed
+    assert hr.snapshot()["tpu_interpret/spmm"]["probes"] == 0
+    assert hr.allow(TAG)                    # grant is immediately reclaimable
+
+
+def test_health_generation_counts_transitions_per_platform():
+    clk = FakeClock()
+    hr = HealthRegistry(HealthConfig(consecutive_errors=1, backoff_s=1.0),
+                        clock=clk)
+    assert hr.generation("tpu_interpret") == 0
+    hr.record_failure(TAG)                  # closed -> open
+    assert hr.generation("tpu_interpret") == 1
+    clk.advance(1.0)
+    hr.allow(TAG)                           # open -> half_open
+    hr.record_success(TAG)                  # half_open -> closed
+    assert hr.generation("tpu_interpret") == 3
+    assert hr.generation("cpu_ref") == 0    # other platforms unaffected
+
+
+# ------------------------------------------------------ fault plan / harness
+
+def test_fault_plan_windows_and_determinism():
+    plan = FaultPlan.fail_calls(2, 5)
+    assert [bool(plan.active(i)) for i in range(7)] \
+        == [False, False, True, True, True, False, False]
+    stride = FaultPlan((FaultWindow("error", 0, 10, every=3),))
+    assert [i for i in range(10) if stride.active(i)] == [0, 3, 6, 9]
+    # probabilistic faults replay identically for the same seed — the draw
+    # is keyed on (seed, call index), not evaluation order
+    a = FaultPlan((FaultWindow("error", 0, 200, prob=0.5),), seed=7)
+    b = FaultPlan((FaultWindow("error", 0, 200, prob=0.5),), seed=7)
+    seq = [bool(a.active(i)) for i in range(200)]
+    assert seq == [bool(b.active(i)) for i in range(200)]
+    assert any(seq) and not all(seq)        # actually Bernoulli, not const
+    c = FaultPlan((FaultWindow("error", 0, 200, prob=0.5),), seed=8)
+    assert seq != [bool(c.active(i)) for i in range(200)]
+
+
+def test_faulty_executor_counts_inject_and_restore():
+    fx = FaultyExecutor(lambda c, m, o: 42, FaultPlan.fail_calls(1, 2))
+    assert fx(None, None, None) == 42
+    with pytest.raises(InjectedFault):
+        fx(None, None, None)
+    assert fx(None, None, None) == 42
+    assert fx.calls == 3 and fx.injected["error"] == 1
+    # inject_faults swaps KernelBackend.run in place; restore undoes it
+    reg = default_registry()
+    be = reg.get("cpu_ref", "spmm")
+    orig = be.run
+    wrapped = inject_faults(reg, "cpu_ref", "spmm", FaultPlan())
+    assert be.run is wrapped and wrapped.inner is orig
+    wrapped.restore()
+    assert be.run is orig
+
+
+# ------------------------------------------------- engine failover / retries
+
+def test_executor_failure_fails_over_and_matches_reference():
+    reg = default_registry()
+    fx = inject_faults(reg, "tpu_interpret", "spmm", FaultPlan.fail_calls(0))
+    engine = SparseKernelEngine(
+        backends=reg,
+        health=HealthRegistry(HealthConfig(backoff_s=60.0),
+                              clock=FakeClock()))
+    rng = np.random.default_rng(3)
+    rhs = rng.normal(size=(256, 64)).astype(np.float32)
+    resps = engine.step(_requests(_mats(3, seed0=9000), rhs, seed=3))
+    for r in resps:
+        # failed over to the healthiest survivor: cpu_ref (lowest failure
+        # rate, alphabetical tiebreak), output bit-identical to the oracle
+        assert r.platform == "cpu_ref" and r.route_reason == "failover"
+        assert r.attempts == 2 and r.degraded
+        assert r.failed_over_from == "tpu_interpret"
+        np.testing.assert_array_equal(
+            np.asarray(r.output)[:, :64],
+            np.asarray(spmm_ref(r.matrix, rhs))[:, :64])
+    assert fx.injected["error"] == 3
+    h = engine.stats()["health"]
+    assert h["execute_failures"] == 3 and h["failovers"] == 3
+    assert h["retry_failures"] == 0
+    br = h["breakers"]["tpu_interpret/spmm"]
+    assert br["failures"] == 3 and br["state"] == OPEN   # 3 back-to-back
+    engine.drain()
+    s = engine.stats()
+    assert all(v["inflight"] == 0 for v in s["load"].values())
+    assert s["arenas"]["outstanding_leases"] == 0
+
+
+def test_open_circuit_fast_fails_without_touching_executor():
+    reg = default_registry()
+    fx = inject_faults(reg, "tpu_interpret", "spmm", FaultPlan.fail_calls(0))
+    engine = SparseKernelEngine(
+        backends=reg,
+        health=HealthRegistry(HealthConfig(backoff_s=60.0),
+                              clock=FakeClock()))
+    rhs = np.ones((256, 64), np.float32)
+    engine.step(_requests(_mats(3, seed0=9100), rhs))     # trips the breaker
+    calls_before = fx.calls
+    resps = engine.step(_requests(_mats(2, seed0=9200), rhs))
+    # the dead backend cost a dict lookup: rerouted at the health gate,
+    # served in ONE attempt, and its executor was never called again
+    assert fx.calls == calls_before
+    for r in resps:
+        assert r.platform == "cpu_ref" and r.route_reason == "failover"
+        assert r.attempts == 1 and r.degraded
+        assert r.failed_over_from == "tpu_interpret"
+    assert engine.stats()["health"]["circuit_fast_fails"] == 2
+    engine.drain()
+
+
+def test_breaker_recovers_via_half_open_probe():
+    reg = default_registry()
+    clk = FakeClock()
+    # calls 0..2 fail (the kill batch); everything after succeeds
+    inject_faults(reg, "tpu_interpret", "spmm", FaultPlan.fail_calls(0, 3))
+    engine = SparseKernelEngine(
+        backends=reg, health=HealthRegistry(HealthConfig(backoff_s=5.0),
+                                            clock=clk))
+    rhs = np.ones((256, 64), np.float32)
+    engine.step(_requests(_mats(3, seed0=9300), rhs))     # kill batch: open
+    assert engine.health.state(TAG) == OPEN
+    engine.step(_requests(_mats(1, seed0=9400), rhs))     # still open
+    assert engine.stats()["health"]["circuit_fast_fails"] == 1
+    clk.advance(5.0)                                      # backoff elapsed
+    resps = engine.step(_requests(_mats(2, seed0=9500), rhs))
+    # the admission was the half-open probe; the (now healthy) executor
+    # served it, so the breaker closed and traffic is back, undegraded
+    for r in resps:
+        assert r.platform == "tpu_interpret" and not r.degraded
+        assert r.attempts == 1 and r.failed_over_from is None
+    snap = engine.health.snapshot()["tpu_interpret/spmm"]
+    assert snap["state"] == CLOSED
+    assert snap["probes"] == 1 and snap["probe_successes"] == 1
+    engine.drain()
+
+
+def test_failed_probe_reopens_with_escalated_backoff():
+    reg = default_registry()
+    clk = FakeClock()
+    inject_faults(reg, "tpu_interpret", "spmm", FaultPlan.fail_calls(0))
+    engine = SparseKernelEngine(
+        backends=reg,
+        health=HealthRegistry(
+            HealthConfig(consecutive_errors=1, backoff_s=5.0,
+                         backoff_factor=2.0), clock=clk))
+    rhs = np.ones((256, 64), np.float32)
+    engine.step(_requests(_mats(1, seed0=9600), rhs))     # trip
+    clk.advance(5.0)
+    resp, = engine.step(_requests(_mats(1, seed0=9700), rhs))  # probe fails
+    assert resp.degraded and resp.platform == "cpu_ref"   # still served
+    snap = engine.health.snapshot()["tpu_interpret/spmm"]
+    assert snap["state"] == OPEN and snap["probe_failures"] == 1
+    assert snap["backoff_s"] == 10.0                      # escalated 2x
+    clk.advance(5.0)                                      # old backoff: no
+    assert not engine.health.routable(TAG)
+    engine.drain()
+
+
+def test_prepare_only_probe_is_cancelled_not_leaked():
+    reg = default_registry()
+    clk = FakeClock()
+    inject_faults(reg, "tpu_interpret", "spmm", FaultPlan.fail_calls(0, 1))
+    engine = SparseKernelEngine(
+        backends=reg,
+        health=HealthRegistry(HealthConfig(consecutive_errors=1,
+                                           backoff_s=1.0), clock=clk))
+    rhs = np.ones((256, 64), np.float32)
+    engine.step(_requests(_mats(1, seed0=9800), rhs))     # trip
+    clk.advance(1.0)
+    engine.step([KernelRequest(m) for m in _mats(1, seed0=9900)])
+    # the prepare-only batch consumed the probe grant but executed nothing:
+    # the grant must be returned, or recovery would deadlock
+    assert engine.health.state(TAG) == HALF_OPEN
+    assert engine.health.snapshot()["tpu_interpret/spmm"]["probes"] == 0
+    resp, = engine.step(_requests(_mats(1, seed0=10000), rhs))  # real probe
+    assert resp.platform == "tpu_interpret" and not resp.degraded
+    assert engine.health.state(TAG) == CLOSED
+    engine.drain()
+
+
+def test_output_guard_catches_nan_and_fails_over():
+    reg = default_registry()
+    inject_faults(reg, "tpu_interpret", "spmm", FaultPlan.nan_calls(0))
+    engine = SparseKernelEngine(backends=reg, validate_outputs=True)
+    rng = np.random.default_rng(4)
+    rhs = rng.normal(size=(256, 64)).astype(np.float32)
+    resps = engine.step(_requests(_mats(2, seed0=10100), rhs, seed=4))
+    for r in resps:
+        assert r.platform == "cpu_ref" and r.degraded and r.attempts == 2
+        assert np.isfinite(np.asarray(r.output)).all()
+        np.testing.assert_array_equal(
+            np.asarray(r.output)[:, :64],
+            np.asarray(spmm_ref(r.matrix, rhs))[:, :64])
+    h = engine.stats()["health"]
+    assert h["output_guard_failures"] == 2 and h["failovers"] == 2
+    engine.drain()
+
+
+def test_output_guard_off_passes_nan_through():
+    # guards are opt-in (they force the async dispatch to completion):
+    # without them a poisoned output flows to the caller un-degraded
+    reg = default_registry()
+    inject_faults(reg, "tpu_interpret", "spmm", FaultPlan.nan_calls(0))
+    engine = SparseKernelEngine(backends=reg)
+    rhs = np.ones((256, 64), np.float32)
+    resp, = engine.step(_requests(_mats(1, seed0=10200), rhs))
+    assert resp.platform == "tpu_interpret" and not resp.degraded
+    assert np.isnan(np.asarray(resp.output)).all()
+    assert engine.stats()["health"]["output_guard_failures"] == 0
+    engine.drain()
+
+
+def test_midbatch_backend_failure_rolls_back_all_leases():
+    # three explicit partitions, the SECOND one's executor raises, retries
+    # off: the error propagates but no partition leaks a lease or a load
+    # count — including the two partitions that executed fine
+    reg = default_registry()
+    inject_faults(reg, "tpu_pallas", "spmm", FaultPlan.fail_calls(0))
+    engine = SparseKernelEngine(backends=reg, max_retries=0)
+    rhs = np.ones((256, 64), np.float32)
+    mats = _mats(3, seed0=10300)
+    reqs = [KernelRequest(m, np.ones(m.nnz, np.float32), "spmm", rhs, p)
+            for m, p in zip(mats,
+                            ("tpu_interpret", "tpu_pallas", "cpu_ref"))]
+    with pytest.raises(InjectedFault):
+        engine.step(reqs)
+    s = engine.stats()
+    assert all(v["inflight"] == 0 for v in s["load"].values())
+    assert s["arenas"]["outstanding_leases"] == 0
+    assert s["health"]["execute_failures"] == 1
+
+
+def test_double_failure_raises_but_releases_resources():
+    # primary AND failover target both dead: the retry failure surfaces,
+    # and the step's unwind still returns every lease and load count
+    reg = default_registry()
+    inject_faults(reg, "tpu_interpret", "spmm", FaultPlan.fail_calls(0))
+    inject_faults(reg, "cpu_ref", "spmm", FaultPlan.fail_calls(0))
+    inject_faults(reg, "tpu_pallas", "spmm", FaultPlan.fail_calls(0))
+    engine = SparseKernelEngine(backends=reg)
+    rhs = np.ones((256, 64), np.float32)
+    with pytest.raises(InjectedFault):
+        engine.step(_requests(_mats(1, seed0=10400), rhs))
+    s = engine.stats()
+    assert s["health"]["retry_failures"] == 1
+    assert all(v["inflight"] == 0 for v in s["load"].values())
+    assert s["arenas"]["outstanding_leases"] == 0
+
+
+def test_drain_under_failure_threaded_no_hang():
+    # a failure held in flight on another thread: once it lands, the step
+    # fails over and a subsequent drain completes — no hang, no leaked
+    # lease, no double release
+    reg = default_registry()
+    fx = inject_faults(reg, "tpu_interpret", "spmm",
+                       FaultPlan.fail_calls(0, 1))
+    fx.block_event = threading.Event()
+    engine = SparseKernelEngine(backends=reg)
+    rhs = np.ones((256, 64), np.float32)
+    box = {}
+
+    def worker():
+        try:
+            box["resps"] = engine.step(_requests(_mats(1, seed0=10500), rhs))
+            engine.drain()
+        except BaseException as e:          # pragma: no cover - test guard
+            box["err"] = e
+
+    t = threading.Thread(target=worker)
+    t.start()
+    deadline = time.monotonic() + 30.0
+    while fx.injected["error"] < 1:         # wait for the fault to be held
+        assert time.monotonic() < deadline, "executor never reached fault"
+        time.sleep(0.01)
+    assert t.is_alive()                     # step is blocked on the fault
+    fx.block_event.set()
+    t.join(timeout=60.0)
+    assert not t.is_alive() and "err" not in box
+    resp, = box["resps"]
+    assert resp.degraded and resp.platform == "cpu_ref"
+    s = engine.stats()
+    assert all(v["inflight"] == 0 for v in s["load"].values())
+    assert s["arenas"]["outstanding_leases"] == 0
+
+
+# ------------------------------------------------------ health-aware routing
+
+def test_cost_model_sticky_invalidates_on_health_transition():
+    router = CostModelRouter()
+    engine = SparseKernelEngine(
+        router=router,
+        health=HealthRegistry(HealthConfig(backoff_s=60.0),
+                              clock=FakeClock()))
+    mats = _mats(2, seed0=10600)
+    first = engine.step([KernelRequest(m) for m in mats])
+    assert all(r.platform == "tpu_interpret" for r in first)
+    second = engine.step([KernelRequest(m) for m in mats])
+    assert all(r.route_reason == "sticky" for r in second)
+    for _ in range(3):                      # trip the memoized platform
+        engine.health.record_failure(TAG)
+    third = engine.step([KernelRequest(m) for m in mats])
+    # the memo carried the health generation it was decided under: the
+    # breaker transition invalidated it and routing re-decided off the
+    # open-circuit platform
+    assert router.sticky_invalidations == len(mats)
+    for r in third:
+        assert r.platform == "cpu_ref" and r.route_reason == "cost_model"
+    # the re-decision is memoized against the NEW platform's health: it
+    # sticks (no flap back while the old platform is still suspect)
+    fourth = engine.step([KernelRequest(m) for m in mats])
+    assert all(r.platform == "cpu_ref" and r.route_reason == "sticky"
+               for r in fourth)
+    engine.release_stream()
+
+
+def test_load_aware_open_circuit_spills_immediately():
+    # an open circuit is saturation: spill bypasses both the depth
+    # threshold (far from reached) and the hysteresis streak
+    router = LoadAwareRouter(StaticRouter(), max_inflight=100, spill_after=5)
+    engine = SparseKernelEngine(
+        router=router,
+        health=HealthRegistry(HealthConfig(backoff_s=60.0),
+                              clock=FakeClock()))
+    for _ in range(3):
+        engine.health.record_failure(TAG)
+    resps = engine.step([KernelRequest(m) for m in _mats(2, seed0=10700)])
+    assert [r.platform for r in resps] == ["cpu_ref"] * 2
+    assert [r.route_reason for r in resps] == ["spill"] * 2
+    assert router.spills == 2 and router.spill_hysteresis == 0
+    engine.release_stream()
+
+
+def test_load_aware_ema_damps_transient_depth():
+    # raw depth hits max_inflight at the 5th decision of the batch; the
+    # EMA-smoothed signal (alpha=0.5) crosses only at the 6th — one fewer
+    # spill than the instantaneous router on identical traffic
+    smoothed = LoadAwareRouter(StaticRouter(), max_inflight=4,
+                               spill_after=1, depth_alpha=0.5)
+    engine = SparseKernelEngine(router=smoothed)
+    resps = engine.step([KernelRequest(m) for m in _mats(6, seed0=10800)])
+    assert [r.platform for r in resps] \
+        == [engine.default_platform] * 5 + ["cpu_ref"]
+    assert smoothed.spills == 1
+    s = engine.stats()
+    assert s["load"]["tpu_interpret/spmm"]["smoothed"] \
+        == pytest.approx(4.03125)
+    engine.release_stream()
+
+    raw = LoadAwareRouter(StaticRouter(), max_inflight=4, spill_after=1)
+    engine2 = SparseKernelEngine(router=raw)
+    resps2 = engine2.step([KernelRequest(m) for m in _mats(6, seed0=10800)])
+    assert [r.platform for r in resps2] \
+        == [engine2.default_platform] * 4 + ["cpu_ref"] * 2
+    assert raw.spills == 2
+    engine2.release_stream()
+
+
+# -------------------------------------------------- persistence v4 hardening
+
+def _populated_cache(n=2, seed0=11000):
+    from repro.core.autotune import KernelAutotuner
+    kt = KernelAutotuner()
+    mats = _mats(n, seed0=seed0)
+    kt.get_batch(mats)
+    return kt, mats
+
+
+def test_persist_v4_crc_catches_semantic_tamper(tmp_path):
+    # permuting `take` keeps every structural invariant (dtype, shape,
+    # range) — on a v3 file it restores fine and would mis-scatter
+    # silently; the v4 per-entry CRC is what catches it
+    kt, _ = _populated_cache(1)
+
+    def tamper(path):
+        with np.load(path) as data:
+            arrays = dict(data.items())
+        rolled = np.roll(arrays["e0_take"], 1)
+        assert not np.array_equal(rolled, arrays["e0_take"])
+        arrays["e0_take"] = rolled
+        np.savez(path, **arrays)
+
+    v3 = tmp_path / "v3.npz"
+    save_backends({"tpu_interpret": kt.cache}, v3, version=3)
+    tamper(v3)
+    g3 = load_grouped(v3)
+    assert g3.skipped == 0 and len(g3) == 1     # v3: silently wrong
+
+    v4 = tmp_path / "v4.npz"
+    save_backends({"tpu_interpret": kt.cache}, v4)
+    tamper(v4)
+    with pytest.warns(UserWarning, match="CRC mismatch"):
+        g4 = load_grouped(v4)
+    assert g4.skipped == 1 and len(g4) == 0     # v4: caught and dropped
+
+
+def test_persist_truncated_file_quarantined(tmp_path):
+    kt, _ = _populated_cache(2)
+    path = tmp_path / "cache.npz"
+    corrupt = tmp_path / "cache.npz.corrupt"
+    for keep in (10, 0.1, 0.5, 0.9):
+        save_backends({"tpu_interpret": kt.cache}, path)
+        truncate_file(path, keep)
+        with pytest.warns(UserWarning):
+            assert load_grouped(path, quarantine=True) is None
+        # wholesale-unreadable: renamed out of the way, evidence preserved
+        assert not path.exists() and corrupt.exists()
+        corrupt.unlink()
+
+
+def test_persist_bitflips_never_silently_wrong(tmp_path):
+    kt, mats = _populated_cache(2)
+    path = tmp_path / "cache.npz"
+    save_backends({"tpu_interpret": kt.cache}, path)
+    pristine = path.read_bytes()
+    originals = {key: entry for key, entry in kt.cache.items()}
+    size = len(pristine)
+    for offset in (64, size // 3, size // 2, -200):
+        path.write_bytes(pristine)
+        flip_byte(path, offset)
+        with pytest.warns(UserWarning):
+            g = load_grouped(path)
+        if g is None:
+            continue                        # wholesale-unreadable: fine
+        assert g.skipped >= 1               # the hit entry was dropped...
+        for tag_entries in g.entries.values():
+            for key, entry in tag_entries:  # ...survivors are bit-exact
+                orig = originals[key]
+                assert entry.config == orig.config
+                for name in ("rowids", "colids", "take", "slot",
+                             "rloc", "cloc"):
+                    np.testing.assert_array_equal(getattr(entry.plan, name),
+                                                  getattr(orig.plan, name))
+
+
+def test_engine_warm_start_quarantines_corrupt_entries(tmp_path):
+    # partial corruption: good entries keep serving, the file is COPIED to
+    # .corrupt (not renamed), and the engine counts the quarantine
+    kt, _ = _populated_cache(2)
+    path = tmp_path / "cache.npz"
+    save_backends({"tpu_interpret": kt.cache}, path)
+    with np.load(path) as data:
+        arrays = dict(data.items())
+    arrays["e0_take"] = np.roll(arrays["e0_take"], 1)   # CRC mismatch
+    np.savez(path, **arrays)
+    with pytest.warns(UserWarning):
+        engine = SparseKernelEngine(persist_path=path)
+    s = engine.stats()
+    assert s["warm_start_entries"] == 1 and s["warm_start_skipped"] == 1
+    assert s["persist_quarantined"] == 1
+    assert path.exists()                    # original still serving
+    assert (tmp_path / "cache.npz.corrupt").exists()
+
+
+def test_engine_warm_start_quarantines_truncated_file(tmp_path):
+    kt, _ = _populated_cache(1)
+    path = tmp_path / "cache.npz"
+    save_backends({"tpu_interpret": kt.cache}, path)
+    truncate_file(path, 0.5)
+    with pytest.warns(UserWarning):
+        engine = SparseKernelEngine(persist_path=path)
+    s = engine.stats()
+    assert s["persist_load_failures"] == 1 and s["persist_quarantined"] == 1
+    assert not path.exists()                # renamed to .corrupt
+    assert (tmp_path / "cache.npz.corrupt").exists()
+    # and the engine came up cold but serving
+    resp, = engine.step([KernelRequest(m) for m in _mats(1, seed0=11100)])
+    assert resp.digest
+    engine.release_stream()

@@ -464,7 +464,10 @@ def test_step_failure_rolls_back_leases_and_load():
 
     reg.register(KernelBackend("bad_accel", "spmm",
                                KernelAutotuner(None, cache_size=8), boom))
-    engine = SparseKernelEngine(backends=reg)
+    # max_retries=0 disables the failover lane: the raise must propagate
+    # AND leave the engine consistent (with the default max_retries=1 the
+    # request would instead be re-served — covered in test_faults.py)
+    engine = SparseKernelEngine(backends=reg, max_retries=0)
     m = _mats(1, seed0=1900)[0]
     operand = np.ones((m.n_cols, 8), np.float32)
     with pytest.raises(RuntimeError, match="kaboom"):
@@ -722,7 +725,9 @@ def test_persist_tampered_device_index_skipped(tmp_path):
     m = _mats(1, seed0=3150)[0]
     kt = KernelAutotuner()
     kt.get(m)
-    save_backends({"tpu_interpret": kt.cache}, path)
+    # version 3: exercises the dindex consistency check itself (in a v4
+    # file the per-entry CRC catches the tampering first)
+    save_backends({"tpu_interpret": kt.cache}, path, version=3)
     with np.load(path) as data:
         arrays = dict(data.items())
     arrays["e0_dindex"] = np.roll(arrays["e0_dindex"], 1)   # still in range
@@ -740,7 +745,8 @@ def test_persist_dtype_mismatch_entry_skipped(tmp_path):
     mats = _mats(2, seed0=3200)
     kt = KernelAutotuner()
     kt.get_batch(mats)
-    save_backends({"tpu_interpret": kt.cache}, path)
+    # version 3 again: v4's CRC would flag the tamper before the dtype check
+    save_backends({"tpu_interpret": kt.cache}, path, version=3)
     with np.load(path) as data:
         arrays = dict(data.items())
     arrays["e0_slot"] = arrays["e0_slot"].astype(np.float32)   # tampered
