@@ -232,14 +232,49 @@ def emit(rows, header=("name", "value", "paper", "notes")):
     print()
 
 
+def provenance() -> dict:
+    """Where/when/what produced this run: ISO UTC timestamp, git commit,
+    jax version, platform, python — embedded in every ``BENCH_*.json`` so
+    a number in the perf trajectory is always traceable to the tree and
+    toolchain that produced it.  Every field degrades to ``"unknown"``
+    rather than failing (benchmarks may run from a tarball without git)."""
+    import datetime
+    import platform as _platform
+    import subprocess
+    import sys
+    prov = {
+        "timestamp": datetime.datetime.now(datetime.timezone.utc)
+        .isoformat(timespec="seconds"),
+        "git_commit": "unknown",
+        "jax_version": "unknown",
+        "platform": _platform.platform(),
+        "python": sys.version.split()[0],
+    }
+    try:
+        prov["git_commit"] = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=Path(__file__).parent,
+            capture_output=True, text=True, timeout=10,
+            check=True).stdout.strip()
+    except Exception:
+        pass
+    try:
+        import jax
+        prov["jax_version"] = jax.__version__
+    except Exception:
+        pass
+    return prov
+
+
 def write_json(path, extra: dict | None = None) -> None:
-    """Write every collected row (plus run metadata) as one JSON document —
-    the ``BENCH_*.json`` artifact the perf trajectory is tracked with."""
+    """Write every collected row (plus run metadata and ``provenance()``)
+    as one JSON document — the ``BENCH_*.json`` artifact the perf
+    trajectory is tracked with."""
     import json
     s = scale()
     doc = {
         "schema": 1,
         "scale": s.name,
+        "provenance": provenance(),
         "rows": _COLLECTED,
     }
     doc.update(extra or {})
@@ -249,3 +284,18 @@ def write_json(path, extra: dict | None = None) -> None:
         json.dump(doc, f, indent=2, sort_keys=True)
     os.replace(tmp, path)
     print(f"# wrote {len(_COLLECTED)} rows to {path}")
+
+
+def dump_debug(name: str, payload) -> Path:
+    """Drop a JSON debug artifact under ``benchmarks/artifacts/`` —
+    engine stats snapshots, error-ring traces, anything a failed smoke
+    gate should surface.  ``scripts/smoke.sh`` prints these on gate
+    failure so CI logs carry the evidence, not just the assertion."""
+    import json
+    path = ARTIFACT_DIR / f"{name}_debug.json"
+    tmp = path.with_suffix(".tmp")
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True, default=str)
+    os.replace(tmp, path)
+    print(f"# wrote debug artifact {path}")
+    return path

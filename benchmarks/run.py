@@ -55,6 +55,7 @@ def main(argv: list[str] | None = None) -> None:
         ("serving", "benchmarks.serving_engine"),
         ("routing", "benchmarks.serving_routing"),
         ("faults", "benchmarks.serving_faults"),
+        ("observability", "benchmarks.serving_observability"),
     ]
     only = set(argv)
     failures = []

@@ -190,6 +190,12 @@ def _bench_kill_one_backend(rows, pool, values, rhs, n_steps):
          "execute_failures": float(h["execute_failures"]),
          "breaker_opens": 3.0, "probe_failures": 2.0,
          "probe_successes": 1.0, "recovered": 1.0}))
+    # evidence for smoke-gate failures: the degraded engine's full stats,
+    # its tail-retained error-ring traces, and the structured event log
+    common.dump_debug("faults", {
+        "degraded_stats": engine.stats(),
+        "error_traces": [t.to_dict() for t in engine.traces(errors=True)],
+        "events": engine.events.events()})
 
 
 def _bench_nan_guard(rows, pool, values, rhs):

@@ -8,8 +8,8 @@
 #   bash scripts/smoke.sh
 #
 # SMOKE_QUICK=1 runs the reduced CI path: docs check, example, and the quick
-# serving/routing/faults benchmarks — skipping tier-1 (CI runs it as its own
-# step), the slow stress tests, and the bsr_preproc bench.
+# serving/routing/faults/observability benchmarks — skipping tier-1 (CI runs
+# it as its own step), the slow stress tests, and the bsr_preproc bench.
 # SMOKE_FAULTS=1 additionally re-runs the degraded-mode fault benchmark
 # standalone (full length) after the gates.
 set -euo pipefail
@@ -17,6 +17,20 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 QUICK="${SMOKE_QUICK:-0}"
+
+# On any failing step, surface the engines' debug artifacts (full stats()
+# snapshots, tail-retained error-ring traces, structured event logs) that
+# the benchmarks drop under benchmarks/artifacts/*_debug.json — so a CI
+# log carries the evidence, not just the tripped assertion.
+dump_debug_artifacts() {
+  echo "== FAILURE: dumping engine debug artifacts =="
+  for f in benchmarks/artifacts/*_debug.json; do
+    [ -e "$f" ] || continue
+    echo "--- $f"
+    cat "$f"
+  done
+}
+trap dump_debug_artifacts ERR
 
 echo "== docs reference check =="
 python - <<'EOF'
@@ -44,6 +58,7 @@ for mod in ("repro.serving", "repro.serving.backends", "repro.serving.engine",
             "repro.serving.persist", "repro.serving.arena",
             "repro.serving.router", "repro.serving.telemetry",
             "repro.serving.health", "repro.serving.faults",
+            "repro.serving.trace", "repro.serving.export",
             "repro.core.autotune", "repro.kernels.ops", "repro.kernels.ref"):
     try:
         __import__(mod)
@@ -64,8 +79,8 @@ except Exception as e:
 
 # 4. benchmark names named in the docs are registered in benchmarks/run.py
 run_py = Path("benchmarks/run.py").read_text()
-for name in ("serving", "routing", "faults", "bsr_preproc", "fig4",
-             "kernel"):
+for name in ("serving", "routing", "faults", "observability",
+             "bsr_preproc", "fig4", "kernel"):
     if f'("{name}"' not in run_py:
         failures.append(f"documented benchmark {name!r} not in benchmarks/run.py")
 
@@ -91,9 +106,9 @@ if [ "$QUICK" != "1" ]; then
   python -m benchmarks.run bsr_preproc
 fi
 
-echo "== serving + routing + faults benchmarks (quick) -> BENCH_6.json =="
+echo "== serving + routing + faults + observability benchmarks (quick) -> BENCH_7.json =="
 REPRO_BENCH_QUICK=1 python -m benchmarks.run serving routing faults \
-  --json BENCH_6.json
+  observability --json BENCH_7.json
 
 echo "== device_build overlap gate =="
 python - <<'EOF'
@@ -106,7 +121,7 @@ noise tolerance applies — the gate catches the async path becoming
 mode this guards against."""
 import json
 
-doc = json.load(open("BENCH_6.json"))
+doc = json.load(open("BENCH_7.json"))
 by = {r["name"]: r for r in doc["rows"]}
 ov = by["serving/device_build/overlapped_requests_per_s"]["metrics"]["req_per_s"]
 sy = by["serving/device_build/synchronous_requests_per_s"]["metrics"]["req_per_s"]
@@ -131,7 +146,7 @@ kill step's work; 3x leaves noise headroom without letting a
 pathological retry path through)."""
 import json
 
-doc = json.load(open("BENCH_6.json"))
+doc = json.load(open("BENCH_7.json"))
 by = {r["name"]: r for r in doc["rows"]}
 m = by["faults/degraded/requests_per_s"]["metrics"]
 print(f"degraded p99={m['p99_ms']:.2f}ms "
@@ -146,6 +161,41 @@ assert m["p99_inflation_x"] <= 3.0, (
     f"no-fault baseline (gate: 3x)")
 g = by["faults/nan_guard/guarded_failovers"]["metrics"]
 assert g["output_guard_failures"] == g["failovers"] > 0
+EOF
+
+echo "== observability gate =="
+python - <<'EOF'
+"""Tracing must stay near-free and incidents must never be sampled away:
+sampled tracing (rate 0.1) may cost at most 5% req/s vs tracing-off
+(interleaved best-of protocol, so the margin is real headroom, not noise
+allowance), and the fault scenario must show every degraded/failed-over
+request tail-retained in the error ring with a complete span tree —
+asserted in-process by benchmarks/serving_observability.py, checked here
+to have landed in the artifact.  Also re-validates the exported
+Prometheus scrape parses and the Chrome trace loads."""
+import json
+
+from repro.serving import parse_prometheus_text
+
+doc = json.load(open("BENCH_7.json"))
+by = {r["name"]: r for r in doc["rows"]}
+m = by["observability/tracing_sampled/requests_per_s"]["metrics"]
+print(f"tracing overhead={m['overhead_pct']:.2f}% at "
+      f"rate={m['sample_rate']} ({m['sampled_steps']:.0f}/"
+      f"{m['steps']:.0f} steps materialized)")
+assert m["overhead_pct"] <= 5.0, (
+    f"sampled tracing cost {m['overhead_pct']:.2f}% req/s "
+    f"(gate: 5%)")
+e = by["observability/error_ring/complete"]["metrics"]
+assert e["error_ring_complete"] == 1, "error ring lost a degraded trace"
+assert e["error_traces"] > 0, "fault scenario produced no error traces"
+samples = parse_prometheus_text(
+    open("benchmarks/artifacts/obs_prometheus.txt").read())
+trace = json.load(open("benchmarks/artifacts/obs_chrome_trace.json"))
+assert samples and trace["traceEvents"]
+print(f"error_ring_complete=1 ({e['error_traces']:.0f} traces); "
+      f"prometheus scrape {len(samples)} samples; chrome trace "
+      f"{len(trace['traceEvents'])} events")
 EOF
 
 if [ "${SMOKE_FAULTS:-0}" = "1" ]; then

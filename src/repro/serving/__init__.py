@@ -56,6 +56,20 @@ subsystem owns that layer:
   fast-fails into the retry lane (failover to the healthiest surviving
   candidate, ``cpu_ref`` as the stock floor) instead of aborting the
   batch.  ``stats()["health"]`` renders it all.
+* ``trace`` — per-request observability: ``Span``/``Trace`` span trees
+  stamped with trace IDs, the ``FlightRecorder`` (head-sampled main ring +
+  an always-retained error ring for degraded/failed-over requests — tail
+  retention never loses an incident to sampling), and the ``EventLog``
+  (bounded structured events: breaker transitions, failovers, quarantines,
+  warm starts, drains — exportable as JSONL).  ``engine.traces()`` /
+  ``engine.events`` / ``stats()["tracing"]``.
+* ``export`` — machine-readable views: ``prometheus_text`` (full text
+  exposition incl. histogram buckets + the calibration drift gauge, with
+  ``parse_prometheus_text`` as the validating minimal parser),
+  ``chrome_trace`` (Perfetto-loadable span timelines where generation
+  windows make the async run-ahead visible), and ``stats_delta``
+  (windowed req/s + hit-rate between two ``stats()`` snapshots;
+  ``engine.stats_delta()`` keeps the previous snapshot for you).
 * ``faults`` — a deterministic, seedable fault-injection harness
   (``FaultPlan``: raise-on-nth-call windows, NaN outputs, latency spikes,
   plus torn-write/bit-rot helpers for persistence files) that wraps any
@@ -91,6 +105,8 @@ from repro.serving.backends import (DEFAULT_PLATFORM, BackendLoad,
                                     pallas_backend)
 from repro.serving.engine import (KernelRequest, KernelResponse,
                                   OutputGuardError, SparseKernelEngine)
+from repro.serving.export import (chrome_trace, parse_prometheus_text,
+                                  prom_get, prometheus_text, stats_delta)
 from repro.serving.faults import (FaultPlan, FaultWindow, FaultyExecutor,
                                   InjectedFault, flip_byte, inject_faults,
                                   truncate_file)
@@ -105,6 +121,7 @@ from repro.serving.router import (CostModelRouter, LoadAwareRouter,
                                   StaticRouter)
 from repro.serving.telemetry import (EngineTelemetry, LatencyHistogram,
                                      RouteCalibration)
+from repro.serving.trace import EventLog, FlightRecorder, Span, Trace
 
 __all__ = ["SparseKernelEngine", "KernelRequest", "KernelResponse",
            "BackendRegistry", "KernelBackend", "BackendLoad",
@@ -119,5 +136,8 @@ __all__ = ["SparseKernelEngine", "KernelRequest", "KernelResponse",
            "RouteCalibration",
            "BackendHealth", "HealthConfig", "HealthRegistry",
            "OutputGuardError",
+           "Span", "Trace", "FlightRecorder", "EventLog",
+           "prometheus_text", "parse_prometheus_text", "prom_get",
+           "chrome_trace", "stats_delta",
            "FaultPlan", "FaultWindow", "FaultyExecutor", "InjectedFault",
            "inject_faults", "truncate_file", "flip_byte"]

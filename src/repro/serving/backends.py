@@ -92,6 +92,14 @@ class BackendLoad:
         with self._lock:
             self._inflight = max(self._inflight - n, 0)
 
+    def snapshot(self) -> dict:
+        """Consistent point-in-time read of all three gauges — one lock
+        acquisition instead of three racing property reads (what the
+        exporters consume)."""
+        with self._lock:
+            return {"inflight": self._inflight, "peak": self.peak,
+                    "total": self.total}
+
 #: Platform tag requests without an explicit tag are routed to, and the
 #: namespace legacy (version-1) persistence files are loaded under.
 DEFAULT_PLATFORM = "tpu_interpret"

@@ -73,6 +73,20 @@ accounts for every failure, fast-fail, failover, and probe, and
 ``repro.serving.faults`` injects deterministic failures for tests and
 the ``benchmarks/serving_faults.py`` degraded-mode scenario.
 
+**Observability.**  Every step's stage timings double as a per-request
+**span tree** (``repro.serving.trace``): with ``trace_sample_rate > 0``
+a deterministic head sampler retains whole steps into a bounded flight
+recorder ring, and degraded / failed-over / retried requests are
+*always* retained into a separate error ring regardless of sampling —
+``engine.traces()`` / ``traces(errors=True)`` reads them back, and
+retained responses carry the ``trace_id``.  ``engine.events`` is a
+bounded structured-event ring (breaker transitions, failovers,
+quarantines, warm starts, router spills, drains) and
+``engine.stats_delta()`` gives windowed rates; ``repro.serving.export``
+renders all of it as Prometheus text, JSONL, and Chrome-trace JSON (the
+per-generation dispatch->retire windows in ``generation_log()`` make the
+async run-ahead visible on a timeline).
+
 Batch N's leases are released only after batch N+1 is dispatched
 (generation hand-off), so the engine is safe with asynchronous kernel
 launches; ``drain()`` forces completion of the calling thread's in-flight
@@ -101,7 +115,8 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from collections import OrderedDict
+import uuid
+from collections import OrderedDict, deque
 from pathlib import Path
 
 import jax
@@ -120,6 +135,7 @@ from repro.serving.persist import (LEGACY_NAMESPACE, load_grouped,
 from repro.serving.router import (RouteDecision, Router, RoutingContext,
                                   StaticRouter)
 from repro.serving.telemetry import EngineTelemetry
+from repro.serving.trace import EventLog, FlightRecorder, Span, Trace
 
 __all__ = ["KernelRequest", "KernelResponse", "OutputGuardError",
            "SparseKernelEngine"]
@@ -148,6 +164,8 @@ class KernelRequest:
     op: str = "spmm"
     operand: object = None
     platform: str | None = None
+    trace_id: str | None = None  # caller-supplied id; None -> engine stamps
+                                 # one when the request's trace is retained
 
 
 @dataclasses.dataclass
@@ -176,6 +194,9 @@ class KernelResponse:
     attempts: int = 1           # executions tried (2 -> retry lane served it)
     failed_over_from: str | None = None  # platform the request was moved off
     degraded: bool = False      # True -> served by a fallback, not the route
+    trace_id: str | None = None  # set iff this request's trace was retained
+                                 # (head-sampled step, or degraded) — the key
+                                 # into engine.traces()
 
 
 @dataclasses.dataclass
@@ -202,6 +223,14 @@ class _StepState:
     retried: set = dataclasses.field(default_factory=set)   # retry-lane idxs
     probes: set = dataclasses.field(default_factory=set)    # tags probing
     replaced_refs: list = dataclasses.field(default_factory=list)
+    # --- tracing (repro.serving.trace): the step's clock anchors, the
+    # head-sampling decision, and the raw stage timing tuples
+    # (name, t0_rel_s, dur_s) span trees materialize from at account time
+    t0: float = 0.0             # perf_counter at step start (span zero)
+    wall0: float = 0.0          # time.time() at step start (trace anchor)
+    sampled: bool = False       # head-sampling decision for this step
+    stage_spans: list = dataclasses.field(default_factory=list)
+    retry_spans: list = dataclasses.field(default_factory=list)
 
 
 class SparseKernelEngine:
@@ -249,6 +278,17 @@ class SparseKernelEngine:
             and the request fails over like an executor raise.  Off by
             default — the check forces the async dispatch to completion,
             serializing the pipeline.
+        trace_sample_rate: fraction of steps whose requests get full span
+            traces into the flight recorder's main ring (deterministic
+            head sampling — see ``repro.serving.trace``).  ``0.0``
+            (default) disables head sampling; degraded / failed-over /
+            retried requests are *always* traced into the error ring
+            regardless, so postmortems never depend on sampling luck.
+        trace_capacity: main trace ring size (last N sampled traces).
+        trace_error_capacity: error trace ring size (always retained).
+        event_capacity: structured event ring size (breaker transitions,
+            failovers, quarantines, warm starts, spills, drains —
+            ``engine.events``, exported as JSONL).
 
     Thread-safety: all public methods are safe under concurrent callers;
     see the module docstring for the per-thread lease protocol.
@@ -263,7 +303,10 @@ class SparseKernelEngine:
                  device_build: str | bool = "auto",
                  health: HealthRegistry | None = None,
                  health_config: HealthConfig | None = None,
-                 max_retries: int = 1, validate_outputs: bool = False):
+                 max_retries: int = 1, validate_outputs: bool = False,
+                 trace_sample_rate: float = 0.0, trace_capacity: int = 256,
+                 trace_error_capacity: int = 64,
+                 event_capacity: int = 1024):
         if backends is None:
             backends = default_registry(
                 tuner, cache_size=cache_size,
@@ -318,6 +361,19 @@ class SparseKernelEngine:
         self._outstanding = 0
         self._generation = 0            # monotonically stamps dispatches
         self._lock = threading.Lock()   # guards _arenas/_outstanding/_generation
+        # --- observability (repro.serving.trace / .export) -------------
+        self.recorder = FlightRecorder(trace_sample_rate,
+                                       capacity=trace_capacity,
+                                       error_capacity=trace_error_capacity)
+        self.events = EventLog(capacity=event_capacity)
+        self._trace_prefix = uuid.uuid4().hex[:8]   # unique per engine
+        # per-generation dispatch->retire windows (wall clock) — what the
+        # Chrome-trace exporter renders to make run-ahead overlap visible
+        self._gen_log: deque = deque(maxlen=512)
+        self.health.listeners.append(
+            lambda ev: self.events.emit("breaker_transition", **ev))
+        self._delta_prev: dict | None = None    # stats_delta() baseline
+        self._ctor_ts = time.monotonic()        # zeroth delta window start
         if self.persist_path is not None:
             self._warm_start()
 
@@ -327,7 +383,8 @@ class SparseKernelEngine:
         renamed/copied to ``<path>.corrupt`` by ``load_grouped`` — and
         counted, never silently dropped."""
         existed = self.persist_path.exists()
-        loaded = load_grouped(self.persist_path, quarantine=True)
+        loaded = load_grouped(self.persist_path, quarantine=True,
+                              on_event=self.events.emit)
         if loaded is None:
             if existed:
                 self.telemetry.count(
@@ -352,6 +409,9 @@ class SparseKernelEngine:
                     skipped += 1
         self.telemetry.count(warm_start_entries=restored,
                              warm_start_skipped=skipped)
+        self.events.emit("warm_start", entries=restored, skipped=skipped,
+                         quarantined=loaded.quarantined,
+                         path=str(self.persist_path))
 
     # ------------------------------------------------------------- serving
 
@@ -369,6 +429,9 @@ class SparseKernelEngine:
         arena lease and load counter this step took is released."""
         t_step = time.perf_counter()
         st = _StepState(requests)
+        st.t0 = t_step
+        st.wall0 = time.time()
+        st.sampled = self.recorder.sample()
         try:
             for name, stage in (("route", self._route_stage),
                                 ("partition", self._partition_stage),
@@ -378,7 +441,11 @@ class SparseKernelEngine:
                                 ("retry", self._retry_stage)):
                 t0 = time.perf_counter()
                 stage(st)
-                self.telemetry.record_stage(name, time.perf_counter() - t0)
+                dt = time.perf_counter() - t0
+                self.telemetry.record_stage(name, dt)
+                # raw span tuples — materialized into Trace objects only
+                # for retained requests, at account time
+                st.stage_spans.append((name, t0 - t_step, dt))
             return self._account_stage(st, t_step)
         except BaseException:
             # a stage failed mid-step: roll back this step's arena leases
@@ -408,7 +475,8 @@ class SparseKernelEngine:
         default platform, backend health) — also handy for driving a
         ``Router`` directly in tests."""
         return RoutingContext(self.backends, self.telemetry.calibration,
-                              self.default_platform, self.health)
+                              self.default_platform, self.health,
+                              self.events)
 
     def _route_stage(self, st: _StepState) -> None:
         """Digest every pattern once, let the router decide each request's
@@ -450,6 +518,7 @@ class SparseKernelEngine:
             fast_fails += 1
         if fast_fails:
             self.telemetry.count(circuit_fast_fails=fast_fails)
+            self.events.emit("circuit_fast_fail", n=fast_fails)
 
     def _failover_target(self, op: str, exclude=frozenset()) -> str | None:
         """The healthiest surviving backend for ``op``: lowest rolling
@@ -657,10 +726,16 @@ class SparseKernelEngine:
                                    st.requests[i].op)], "failover")
             for i in failed]
         try:
-            self._partition_stage(sub)
-            self._score_stage(sub)
-            self._build_stage(sub)
-            self._execute_stage(sub)
+            for name, stage in (("partition", self._partition_stage),
+                                ("score", self._score_stage),
+                                ("build", self._build_stage),
+                                ("execute", self._execute_stage)):
+                t0 = time.perf_counter()
+                stage(sub)
+                # sub-stage spans, relative to the PARENT step's t0 — they
+                # nest under the retry span in retained requests' traces
+                st.retry_spans.append((f"retry.{name}", t0 - st.t0,
+                                       time.perf_counter() - t0))
         finally:
             # parent step owns the sub-batch's resources on every path
             st.leases.extend(sub.leases)
@@ -670,6 +745,11 @@ class SparseKernelEngine:
                 self.telemetry.count(retry_failures=1)
                 raise sub.errors[k]     # double failure: surface it
         self.telemetry.count(failovers=len(failed))
+        self.events.emit(
+            "failover", n=len(failed),
+            moves=sorted({f"{st.decisions[i].platform}->"
+                          f"{sub.decisions[k].platform}"
+                          for k, i in enumerate(failed)}))
         for k, i in enumerate(failed):
             old_tag = (st.decisions[i].platform, st.requests[i].op)
             new_tag = (sub.decisions[k].platform, st.requests[i].op)
@@ -701,7 +781,11 @@ class SparseKernelEngine:
         """Assemble responses, fold this step into telemetry (per-backend
         serve time, routing decisions, observed-vs-predicted calibration),
         and hand off the double buffer: the *previous* batch's leases and
-        load accounting release now that this batch is in flight."""
+        load accounting release now that this batch is in flight.  Last of
+        all, retained requests' span trees materialize into the flight
+        recorder — strictly after the batch is dispatched, so tracing
+        never sits between a request and its kernel launch."""
+        t_acct = time.perf_counter()
         total_hits = total_misses = 0
         for tag, idxs in st.groups.items():
             if not idxs:        # retry lane moved this tag's last request
@@ -765,8 +849,8 @@ class SparseKernelEngine:
         # thread-local swap is what keys release to the dispatch
         # generation: a stream holds exactly one outstanding generation,
         # and only the one being swapped out is ever released.
-        prev_leases, prev_loads, prev_refs = self._swap_stream(
-            st.leases, st.loads, refs)
+        prev_leases, prev_loads, prev_refs, prev_gen = self._swap_stream(
+            st.leases, st.loads, refs, gen_info=(generation, st.wall0))
         st.handed_off = True
         # two-deep pipeline backpressure: wait for generation N-1 (its
         # entire step overlapped batch N's host work) before rotating its
@@ -776,18 +860,92 @@ class SparseKernelEngine:
         # A ref that errors at completion time (poisoned async dispatch)
         # must not leak the generation's leases/loads: release everything
         # first, then surface the first error.
+        t_wait = time.perf_counter()
         err = self._release_generation(prev_refs, prev_leases, prev_loads)
+        self._retire_generation(prev_gen, time.perf_counter() - t_wait)
         if err is not None:
             raise err
 
         self.telemetry.count(requests=len(st.requests), batches=1)
         self.telemetry.record_stage("step", time.perf_counter() - t_step)
+        self._finish_traces(st, responses, t_acct)
         if (self.autosave_every and self.persist_path is not None
                 and self.telemetry.batches % self.autosave_every == 0):
             self.save()
         return responses
 
+    def _finish_traces(self, st: _StepState, responses, t_acct) -> None:
+        """Materialize span trees for this step's *retained* requests and
+        file them in the flight recorder.
+
+        Retention = head sampling OR tail: a head-sampled step retains
+        every request (main ring); a degraded / retried / failed-over
+        request is retained unconditionally (error ring) — the flight
+        recorder's whole point is that the traces behind an incident
+        survive even at ``trace_sample_rate=0``.  The un-retained fast
+        path is one set construction over the (almost always empty)
+        degraded indices."""
+        degraded = {i for i, r in enumerate(responses)
+                    if r.degraded or r.attempts > 1}
+        if not st.sampled and not degraded:
+            return
+        now = time.perf_counter()
+        acct = ("account", t_acct - st.t0, now - t_acct)
+        idxs = range(len(responses)) if st.sampled else sorted(degraded)
+        for i in idxs:
+            r = responses[i]
+            tid = st.requests[i].trace_id \
+                or f"{self._trace_prefix}-{r.generation:06x}-{i:03x}"
+            r.trace_id = tid
+            children = []
+            for name, rel, dur in st.stage_spans:
+                if name == "retry":
+                    if i not in st.retried:
+                        continue        # clean requests skip the lane
+                    children.append(Span(
+                        name, rel, dur,
+                        attrs={"failed_over_from": r.failed_over_from,
+                               "attempts": r.attempts},
+                        children=[Span(n2, rel2, d2) for n2, rel2, d2
+                                  in st.retry_spans]))
+                else:
+                    children.append(Span(name, rel, dur))
+            children.append(Span(*acct))
+            root = Span("request", 0.0, now - st.t0,
+                        attrs={"digest": r.digest,
+                               "op": st.requests[i].op,
+                               "platform": r.platform,
+                               "route_reason": r.route_reason,
+                               "cache_hit": r.cache_hit,
+                               "device_built": r.device_built,
+                               "attempts": r.attempts,
+                               "failed_over_from": r.failed_over_from,
+                               "degraded": r.degraded},
+                        children=children)
+            self.recorder.record(
+                Trace(tid, st.wall0,
+                      "degraded" if i in degraded else "ok",
+                      st.requests[i].op, r.platform, r.digest,
+                      r.generation, root),
+                sampled=st.sampled, error=i in degraded)
+
     # ----------------------------------------------------- stream plumbing
+
+    def _retire_generation(self, gen_info, wait_s: float,
+                           drained: bool = False) -> None:
+        """Record one generation's dispatch->retire wall-clock window (and
+        how long the releasing step blocked on it).  Overlapping windows
+        in this log ARE the PR-5 run-ahead — the Chrome-trace exporter
+        renders them as per-generation rows."""
+        if gen_info is None:
+            return
+        generation, dispatched = gen_info
+        with self._lock:
+            self._gen_log.append({"generation": generation,
+                                  "dispatched": dispatched,
+                                  "retired": time.time(),
+                                  "wait_ms": wait_s * 1e3,
+                                  "drained": drained})
 
     def _arena_for(self, key, entry: TunedKernel) -> PlanArena:
         with self._lock:
@@ -825,21 +983,24 @@ class SparseKernelEngine:
 
     def _swap_stream(self, leases: list[ArenaLease],
                      loads: list[tuple[KernelBackend, int]],
-                     refs: list = ()):
+                     refs: list = (), gen_info=None):
         """Install this thread's new outstanding batch (leases, backend-load
-        shares, async dispatch refs); return the old one (leases, loads,
-        refs — to be released, and optionally waited on, together).  A
+        shares, async dispatch refs, and its ``(generation, dispatch wall
+        time)`` identity); return the old one (leases, loads, refs,
+        gen_info — to be released, and optionally waited on, together).  A
         stream holds exactly one outstanding generation, so this swap IS
         the generation hand-off."""
         prev_leases = getattr(self._stream, "leases", [])
         prev_loads = getattr(self._stream, "loads", [])
         prev_refs = getattr(self._stream, "refs", [])
+        prev_gen = getattr(self._stream, "gen_info", None)
         self._stream.leases = leases
         self._stream.loads = loads
         self._stream.refs = list(refs)
+        self._stream.gen_info = gen_info
         with self._lock:
             self._outstanding += len(leases) - len(prev_leases)
-        return prev_leases, prev_loads, prev_refs
+        return prev_leases, prev_loads, prev_refs, prev_gen
 
     def release_stream(self) -> None:
         """Release the calling thread's outstanding arena leases and drop
@@ -848,11 +1009,12 @@ class SparseKernelEngine:
         with nothing outstanding is a no-op, and it never touches another
         thread's leases.  Does NOT wait for in-flight dispatches — use
         ``drain()`` to force completion first."""
-        prev_leases, prev_loads, _ = self._swap_stream([], [])
+        prev_leases, prev_loads, _, prev_gen = self._swap_stream([], [])
         for lease in prev_leases:
             lease.release()
         for be, n in prev_loads:
             be.load.end(n)
+        self._retire_generation(prev_gen, 0.0)
 
     def drain(self) -> None:
         """Force completion of the calling thread's in-flight work, then
@@ -865,11 +1027,17 @@ class SparseKernelEngine:
         leases of any generation — the synchronous point the async pipeline
         is measured against, and the right call before tearing a stream
         down or handing its results across threads.  Idempotent."""
-        prev_leases, prev_loads, prev_refs = self._swap_stream([], [])
+        prev_leases, prev_loads, prev_refs, prev_gen = \
+            self._swap_stream([], [])
         pending = bool(prev_leases or prev_loads or prev_refs)
+        t_wait = time.perf_counter()
         err = self._release_generation(prev_refs, prev_leases, prev_loads)
+        self._retire_generation(prev_gen, time.perf_counter() - t_wait,
+                                drained=True)
         if pending:
             self.telemetry.count(drain_waits=1)
+            self.events.emit("drain", refs=len(prev_refs),
+                             leases=len(prev_leases))
         if err is not None:
             raise err
 
@@ -898,10 +1066,15 @@ class SparseKernelEngine:
         one), a ``"health"`` section (per-tag circuit-breaker snapshots
         under ``"breakers"`` plus execute-failure / output-guard /
         fast-fail / failover counters — see ``docs/serving.md``), cache
-        and arena occupancy, and persistence events.  ``"cache"`` is the
-        *default* backend's cache (pre-registry compat); ``"caches"``
+        and arena occupancy, persistence events, a ``"tracing"`` section
+        (flight-recorder sampler/ring counters), an ``"events"`` section
+        (event-log volume by kind), and a monotonic ``"ts"`` (what
+        ``stats_delta()`` computes interval rates over).  ``"cache"`` is
+        the *default* backend's cache (pre-registry compat); ``"caches"``
         reports every platform's occupancy and eviction counters.  Safe to
-        call concurrently with ``step``."""
+        call concurrently with ``step`` — histogram rendering happens
+        outside the telemetry lock, so a stats poll never stalls
+        accounting."""
         out = self.telemetry.snapshot(cache=self.tuner.cache)
         out["routing"]["spill_hysteresis"] = getattr(self.router,
                                                      "spill_hysteresis", 0)
@@ -913,8 +1086,7 @@ class SparseKernelEngine:
                 out["caches"][key] = {
                     "size": len(c), "maxsize": c.maxsize, "hits": c.hits,
                     "misses": c.misses, "evictions": c.evictions}
-        out["load"] = {tag: {"inflight": load.inflight, "peak": load.peak,
-                             "total": load.total}
+        out["load"] = {tag: load.snapshot()
                        for tag, load in self.backends.loads_by_tag().items()}
         smoothed = getattr(self.router, "smoothed_depth", None)
         if smoothed:
@@ -933,7 +1105,46 @@ class SparseKernelEngine:
             out["arenas"] = {"resident": len(self._arenas),
                              "outstanding_leases": self._outstanding,
                              "generation": self._generation}
+        out["tracing"] = self.recorder.snapshot()
+        out["events"] = self.events.snapshot()
+        # monotonic timestamp: what stats_delta() computes rates over
+        out["ts"] = time.monotonic()
         return out
+
+    def traces(self, *, errors: bool = False, n: int | None = None):
+        """Recent traces from the flight recorder, oldest-first: the
+        head-sampled main ring by default, the always-retained
+        degraded/failed-over ring with ``errors=True``.  ``n`` limits to
+        the most recent n.  Returns ``repro.serving.trace.Trace`` objects
+        (``.to_dict()`` for JSON)."""
+        return self.recorder.traces(errors=errors, n=n)
+
+    def generation_log(self) -> list[dict]:
+        """Per-generation dispatch->retire wall-clock windows (last 512):
+        ``{"generation", "dispatched", "retired", "wait_ms", "drained"}``.
+        Consecutive generations' overlapping windows are the async
+        run-ahead; ``repro.serving.export.chrome_trace`` renders them."""
+        with self._lock:
+            return [dict(g) for g in self._gen_log]
+
+    def stats_delta(self) -> dict:
+        """Windowed-rate view: counter deltas and rates (req/s, windowed
+        hit rate, failovers/s, per-backend shares) since the *previous*
+        ``stats_delta()`` call (engine construction counts as the zeroth).
+        Lifetime counters answer "how much ever"; this answers "what is
+        happening *now*" — what a dashboard poll plots.  See
+        ``repro.serving.export.stats_delta`` for the field contract."""
+        from repro.serving.export import stats_delta as _delta
+        cur = self.stats()
+        with self._lock:
+            prev, self._delta_prev = self._delta_prev, cur
+        if prev is None:
+            # zeroth window: every counter was 0 at engine construction
+            prev = {"ts": self._ctor_ts, "requests": 0, "batches": 0,
+                    "hits": 0, "misses": 0,
+                    "health": {"failovers": 0, "execute_failures": 0},
+                    "backends": {}}
+        return _delta(prev, cur)
 
     # --------------------------------------------------------- persistence
 
@@ -945,4 +1156,5 @@ class SparseKernelEngine:
             raise ValueError("no persist_path configured and none given")
         out = save_backends(self.backends, target)
         self.telemetry.count(persist_saves=1)
+        self.events.emit("persist_save", path=str(out))
         return out

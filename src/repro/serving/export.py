@@ -1,0 +1,378 @@
+"""Exporters — machine-readable views of the engine's observability state.
+
+Four renderings, one source of truth (``SparseKernelEngine``'s telemetry,
+flight recorder, event log, and generation log):
+
+``prometheus_text(engine)``
+    Prometheus/OpenMetrics-style text exposition of every counter and
+    histogram — *bucket counts*, not just p50/p99: stage and per-backend
+    latency histograms render as cumulative ``_bucket{le=...}`` series
+    (plus ``_sum``/``_count``), counters as ``_total``, and the live
+    signals (in-flight depth, breaker state, hit rate, calibration offset
+    and **drift**) as gauges.  ``parse_prometheus_text`` is the matching
+    minimal parser — what the tests and smoke gates validate the output
+    with, and a reference for the exact grammar subset emitted (labels
+    never contain quotes, commas, or backslashes).
+
+``chrome_trace(traces, generations=...)``
+    Chrome-trace (``chrome://tracing`` / Perfetto) JSON of span trees.
+    Every span becomes a complete ("ph": "X") event with microsecond
+    ``ts``/``dur`` on a per-generation ``tid`` row; passing
+    ``engine.generation_log()`` adds each generation's dispatch->retire
+    in-flight window to its row — consecutive generations' overlapping
+    windows are the PR-5 async run-ahead, finally visible on a timeline
+    instead of compressed into one ``overlap_ratio`` scalar.
+
+``stats_delta(prev, cur)``
+    Windowed rates from two ``stats()`` snapshots: req/s, batches/s,
+    failovers/s, and *windowed* hit rate over the interval — what a
+    dashboard plots, instead of lifetime counters that flatten every
+    transient.  ``engine.stats_delta()`` wraps it with an internally-kept
+    previous snapshot.
+
+JSONL event export is ``EventLog.to_jsonl()``/``write()`` on
+``engine.events`` (``repro.serving.trace``) — one JSON object per line:
+breaker transitions, failovers, circuit fast-fails, persistence
+quarantines, warm starts, router spills, sticky invalidations, drains.
+"""
+from __future__ import annotations
+
+import re
+
+__all__ = ["prometheus_text", "parse_prometheus_text", "prom_get",
+           "chrome_trace", "stats_delta"]
+
+
+# --------------------------------------------------------------- prometheus
+
+def _fmt(v: float) -> str:
+    v = float(v)
+    if v != v:                          # NaN
+        return "NaN"
+    if v == float("inf"):
+        return "+Inf"
+    if v == float("-inf"):
+        return "-Inf"
+    return format(v, ".10g")
+
+
+def _labels(d: dict) -> str:
+    if not d:
+        return ""
+    return "{" + ",".join(f'{k}="{v}"' for k, v in sorted(d.items())) + "}"
+
+
+class _Writer:
+    def __init__(self, namespace: str):
+        self.ns = namespace
+        self.lines: list[str] = []
+        self._typed: set[str] = set()
+
+    def head(self, name: str, kind: str, help_: str) -> str:
+        full = f"{self.ns}_{name}"
+        if full not in self._typed:
+            self._typed.add(full)
+            self.lines.append(f"# HELP {full} {help_}")
+            self.lines.append(f"# TYPE {full} {kind}")
+        return full
+
+    def sample(self, full: str, value, labels: dict | None = None) -> None:
+        self.lines.append(f"{full}{_labels(labels or {})} {_fmt(value)}")
+
+    def scalar(self, name: str, kind: str, help_: str, value,
+               labels: dict | None = None) -> None:
+        self.sample(self.head(name, kind, help_), value, labels)
+
+    def histogram(self, name: str, help_: str, hist,
+                  labels: dict | None = None) -> None:
+        """One ``LatencyHistogram`` as cumulative buckets + sum + count."""
+        full = self.head(name, "histogram", help_)
+        labels = dict(labels or {})
+        for edge, cum in hist.buckets():
+            self.sample(f"{full}_bucket", cum, {**labels, "le": _fmt(edge)})
+        self.sample(f"{full}_sum", hist.total, labels)
+        self.sample(f"{full}_count", hist.n, labels)
+
+    def text(self) -> str:
+        return "\n".join(self.lines) + "\n"
+
+
+def prometheus_text(engine, namespace: str = "repro_serving") -> str:
+    """Render one engine's full telemetry as Prometheus text exposition.
+
+    Histogram bucket counts are copied from under the telemetry lock
+    (``EngineTelemetry.stage_histograms`` /
+    ``backend_serve_histograms``) and rendered outside it; everything
+    else reads from one ``stats()`` snapshot.  The output round-trips
+    through ``parse_prometheus_text``.
+    """
+    s = engine.stats()
+    w = _Writer(namespace)
+
+    for name, help_ in (("requests", "requests served"),
+                        ("batches", "micro-batches served"),
+                        ("hits", "autotune cache hits"),
+                        ("misses", "autotune cache misses"),
+                        ("score_dispatches", "batched scoring dispatches"),
+                        ("arena_fallbacks", "arena-overrun fallback builds"),
+                        ("warm_start_entries", "cache entries warm-started"),
+                        ("warm_start_skipped", "persisted entries skipped"),
+                        ("persist_saves", "cache files saved"),
+                        ("persist_load_failures", "unreadable cache files"),
+                        ("persist_quarantined", "cache files quarantined")):
+        w.scalar(f"{name}_total", "counter", help_, s[name])
+    w.scalar("hit_rate", "gauge", "lifetime cache hit rate", s["hit_rate"])
+
+    bp = s["build_paths"]
+    full = w.head("builds_total", "counter", "value-scatter builds by path")
+    w.sample(full, bp["device"], {"path": "device"})
+    w.sample(full, bp["host"], {"path": "host"})
+    w.scalar("overlapped_builds_total", "counter",
+             "builds issued over an in-flight generation", bp["overlapped"])
+    w.scalar("overlap_ratio", "gauge", "overlapped / total builds",
+             bp["overlap_ratio"])
+    w.scalar("drain_waits_total", "counter", "drains that had to wait",
+             bp["drain_waits"])
+
+    h = s["health"]
+    for name in ("execute_failures", "output_guard_failures",
+                 "circuit_fast_fails", "failovers", "retry_failures"):
+        w.scalar(f"{name}_total", "counter",
+                 name.replace("_", " "), h[name])
+    st_full = w.head("breaker_state", "gauge",
+                     "circuit-breaker state one-hot per tag")
+    for tag, br in h["breakers"].items():
+        for state in ("closed", "open", "half_open"):
+            w.sample(st_full, int(br["state"] == state),
+                     {"tag": tag, "state": state})
+    for key, kind, help_ in (
+            ("failure_rate", "gauge", "rolling failure rate"),
+            ("backoff_s", "gauge", "current open->probe backoff seconds"),
+            ("opens", "counter", "breaker open trips"),
+            ("transitions", "counter", "breaker state changes")):
+        suffix = "_total" if kind == "counter" else ""
+        full = w.head(f"breaker_{key}{suffix}", kind, f"breaker {help_}")
+        for tag, br in h["breakers"].items():
+            w.sample(full, br[key], {"tag": tag})
+
+    r = s["routing"]
+    full = w.head("route_decisions_total", "counter",
+                  "routing decisions by reason")
+    for reason, n in sorted(r["decisions"].items()):
+        w.sample(full, n, {"reason": reason})
+    full = w.head("routed_requests_total", "counter",
+                  "requests routed per platform")
+    for platform, n in sorted(r["by_platform"].items()):
+        w.sample(full, n, {"platform": platform})
+    w.scalar("route_config_installs_total", "counter",
+             "router config hints installed", r["config_installs"])
+
+    cal_obs = w.head("calibration_observed_ms", "gauge",
+                     "EMA observed serve latency (ms)")
+    cal_off = w.head("calibration_offset", "gauge",
+                     "observed-vs-predicted additive offset")
+    cal_drift = w.head("calibration_drift_ms", "gauge",
+                       "EMA |observed - calibrated expectation| (ms)")
+    for platform, c in sorted(r["calibration"].items()):
+        rows = [({"platform": platform, "op": ""}, c)]
+        rows += [({"platform": platform, "op": op}, co)
+                 for op, co in sorted(c.get("by_op", {}).items())]
+        for labels, cc in rows:
+            w.sample(cal_obs, cc["observed_ms"], labels)
+            w.sample(cal_off, cc["offset"], labels)
+            w.sample(cal_drift, cc["drift_ms"], labels)
+
+    for key, kind in (("inflight", "gauge"), ("peak", "gauge"),
+                      ("total", "counter")):
+        suffix = "_total" if kind == "counter" else ""
+        full = w.head(f"backend_{key}{suffix}", kind,
+                      f"per-backend load {key}")
+        for tag, load in sorted(s["load"].items()):
+            if key in load:
+                w.sample(full, load[key], {"tag": tag})
+
+    for key in ("size", "hits", "misses", "evictions"):
+        kind = "gauge" if key == "size" else "counter"
+        suffix = "" if kind == "gauge" else "_total"
+        full = w.head(f"autotune_cache_{key}{suffix}", kind,
+                      f"autotune cache {key} per platform")
+        for platform, c in sorted(s["caches"].items()):
+            w.sample(full, c[key], {"platform": platform})
+
+    tr = s["tracing"]
+    w.scalar("trace_sample_rate", "gauge", "head-sampling rate",
+             tr["sample_rate"])
+    for key in ("steps", "sampled_steps", "recorded", "error_recorded",
+                "dropped", "error_dropped"):
+        w.scalar(f"trace_{key}_total", "counter",
+                 f"flight recorder {key}", tr[key])
+    for key in ("buffered", "error_buffered"):
+        w.scalar(f"trace_{key}", "gauge", f"flight recorder {key}", tr[key])
+
+    full = w.head("events_total", "counter", "structured events by kind")
+    for kind_, n in sorted(s["events"]["by_kind"].items()):
+        w.sample(full, n, {"kind": kind_})
+
+    for name, hist in engine.telemetry.stage_histograms().items():
+        w.histogram("stage_duration_seconds", "pipeline stage latency",
+                    hist, {"stage": name})
+    for tag, hist in engine.telemetry.backend_serve_histograms().items():
+        w.histogram("backend_serve_seconds", "per-backend serve latency",
+                    hist, {"tag": tag})
+
+    return w.text()
+
+
+_SAMPLE_RE = re.compile(
+    r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{[^}]*\})?\s+(\S+)$")
+_LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="([^"]*)"')
+
+
+def parse_prometheus_text(text: str) -> list[tuple[str, dict, float]]:
+    """Minimal Prometheus text parser: ``[(name, labels, value), ...]``.
+
+    Handles exactly the grammar ``prometheus_text`` emits (and standard
+    scrape output without escapes/exemplars/timestamps): ``# HELP`` /
+    ``# TYPE`` / blank lines are skipped, every other line must be
+    ``name[{labels}] value`` with ``k="v"`` label pairs whose values
+    contain no quotes, commas, or backslashes.  Raises ``ValueError`` on
+    the first malformed line — the validation hook the smoke gate uses.
+    """
+    out: list[tuple[str, dict, float]] = []
+    for ln, raw in enumerate(text.splitlines(), 1):
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        m = _SAMPLE_RE.match(line)
+        if m is None:
+            raise ValueError(f"line {ln}: unparseable sample {raw!r}")
+        name, labelstr, valstr = m.groups()
+        labels = {}
+        if labelstr:
+            body = labelstr[1:-1].strip()
+            if body:
+                pairs = _LABEL_RE.findall(body)
+                # every k="v" accounted for, or the line is malformed
+                rebuilt = ",".join(f'{k}="{v}"' for k, v in pairs)
+                if rebuilt.replace(" ", "") != body.replace(" ", ""):
+                    raise ValueError(f"line {ln}: bad labels {labelstr!r}")
+                labels = dict(pairs)
+        try:
+            value = float(valstr)
+        except ValueError:
+            raise ValueError(f"line {ln}: bad value {valstr!r}") from None
+        out.append((name, labels, value))
+    return out
+
+
+def prom_get(samples: list[tuple[str, dict, float]], name: str,
+             **labels) -> float | None:
+    """First sample matching ``name`` whose labels include ``labels``."""
+    for n, lab, v in samples:
+        if n == name and all(lab.get(k) == v2 for k, v2 in labels.items()):
+            return v
+    return None
+
+
+# ------------------------------------------------------------- chrome trace
+
+def chrome_trace(traces, generations=None, *,
+                 process_name: str = "repro.serving") -> dict:
+    """Span trees (+ optional generation windows) as Chrome-trace JSON.
+
+    Event schema (the documented subset): ``{"traceEvents": [...],
+    "displayTimeUnit": "ms"}`` where every event is either a complete
+    event — ``{"name", "cat": "serving", "ph": "X", "ts": µs, "dur": µs,
+    "pid": 1, "tid": generation, "args": {...}}`` — or a ``"ph": "M"``
+    process/thread-name metadata record.  ``ts`` is relative to the
+    earliest trace in the export (Chrome renders absolute µs poorly);
+    ``tid`` is the engine dispatch generation, so each generation gets
+    its own row and the in-flight windows from
+    ``engine.generation_log()`` visibly overlap when the async pipeline
+    ran ahead.  Root spans carry ``trace_id``/``status`` in ``args``.
+    """
+    traces = list(traces)
+    generations = list(generations or ())
+    anchors = [t.wall_ts for t in traces] \
+        + [g["dispatched"] for g in generations]
+    base = min(anchors) if anchors else 0.0
+    events: list[dict] = []
+    tids: set[int] = set()
+
+    def add_span(span, wall0: float, tid: int, extra: dict | None = None):
+        events.append({"name": span.name, "cat": "serving", "ph": "X",
+                       "ts": (wall0 - base + span.t0) * 1e6,
+                       "dur": span.dur * 1e6, "pid": 1, "tid": tid,
+                       "args": {**span.attrs, **(extra or {})}})
+        for child in span.children:
+            add_span(child, wall0, tid)
+
+    for t in traces:
+        tids.add(t.generation)
+        add_span(t.root, t.wall_ts, t.generation,
+                 {"trace_id": t.trace_id, "status": t.status, "op": t.op,
+                  "platform": t.platform})
+    for g in generations:
+        tid = g["generation"]
+        tids.add(tid)
+        events.append({"name": f"generation {tid} in-flight",
+                       "cat": "serving", "ph": "X",
+                       "ts": (g["dispatched"] - base) * 1e6,
+                       "dur": max(g["retired"] - g["dispatched"], 0.0) * 1e6,
+                       "pid": 1, "tid": tid,
+                       "args": {"wait_ms": g["wait_ms"],
+                                "drained": g["drained"]}})
+    events.sort(key=lambda e: e["ts"])
+    meta = [{"name": "process_name", "ph": "M", "pid": 1,
+             "args": {"name": process_name}}]
+    meta += [{"name": "thread_name", "ph": "M", "pid": 1, "tid": tid,
+              "args": {"name": f"generation {tid}"}}
+             for tid in sorted(tids)]
+    return {"traceEvents": meta + events, "displayTimeUnit": "ms"}
+
+
+# -------------------------------------------------------------- stats delta
+
+def stats_delta(prev: dict, cur: dict) -> dict:
+    """Windowed rates between two ``stats()`` snapshots (prev first).
+
+    Returns ``{"interval_s", "requests", "requests_per_s", "batches",
+    "batches_per_s", "hits", "misses", "hit_rate" (WINDOWED — hits /
+    served within the interval, not lifetime), "failovers",
+    "failovers_per_s", "execute_failures", "backends": {tag:
+    {"requests", "requests_per_s", "hit_rate"}}}``.  Counters that went
+    backwards (engine restart) clamp to 0 rather than reporting negative
+    rates."""
+    dt = max(float(cur["ts"]) - float(prev.get("ts", cur["ts"])), 1e-9)
+
+    def delta(*path) -> float:
+        a, b = prev, cur
+        for k in path:
+            a = a.get(k, 0) if isinstance(a, dict) else 0
+            b = b.get(k, 0) if isinstance(b, dict) else 0
+        return max(float(b) - float(a), 0.0)
+
+    requests = delta("requests")
+    batches = delta("batches")
+    hits, misses = delta("hits"), delta("misses")
+    served = hits + misses
+    failovers = delta("health", "failovers")
+    out = {
+        "interval_s": dt,
+        "requests": requests, "requests_per_s": requests / dt,
+        "batches": batches, "batches_per_s": batches / dt,
+        "hits": hits, "misses": misses,
+        "hit_rate": hits / served if served else 0.0,
+        "failovers": failovers, "failovers_per_s": failovers / dt,
+        "execute_failures": delta("health", "execute_failures"),
+        "backends": {},
+    }
+    for tag in cur.get("backends", {}):
+        b_req = delta("backends", tag, "requests")
+        b_hits = delta("backends", tag, "hits")
+        b_miss = delta("backends", tag, "misses")
+        b_served = b_hits + b_miss
+        out["backends"][tag] = {
+            "requests": b_req, "requests_per_s": b_req / dt,
+            "hit_rate": b_hits / b_served if b_served else 0.0}
+    return out

@@ -161,6 +161,14 @@ class HealthRegistry:
         self.clock = clock
         self._lock = threading.Lock()
         self._by_tag: dict[tuple[str, str], BackendHealth] = {}
+        #: Transition listeners: callables receiving one dict per breaker
+        #: state change (``tag``/``from``/``to``/``failure_rate``/
+        #: ``backoff_s``).  Append, don't replace — a registry may be
+        #: shared across engines, each observing it.  Listeners fire
+        #: *after* the registry lock is released (a listener may call
+        #: back into the registry without deadlocking); exceptions are
+        #: swallowed — observability must never fail serving.
+        self.listeners: list = []
 
     def _of(self, tag) -> BackendHealth:
         tag = tuple(tag)
@@ -169,26 +177,46 @@ class HealthRegistry:
             h = self._by_tag[tag] = BackendHealth(self.config)
         return h
 
+    def _transition_event(self, tag, old: str, h: BackendHealth) -> dict:
+        """Snapshot a just-made transition (caller holds the lock)."""
+        return {"tag": f"{tag[0]}/{tag[1]}", "from": old, "to": h.state,
+                "failure_rate": h.failure_rate(), "backoff_s": h._backoff,
+                "transitions": h.transitions}
+
+    def _notify(self, events: list[dict]) -> None:
+        """Fire transition listeners (caller has released the lock)."""
+        for ev in events:
+            for fn in list(self.listeners):
+                try:
+                    fn(ev)
+                except Exception:
+                    pass
+
     # ------------------------------------------------------------ admission
 
     def allow(self, tag) -> bool:
         """Admit one dispatch to ``tag``?  Closed: always.  Open: ``False``
         until the backoff elapses, then the breaker moves to half-open and
         this call *is* the probe grant.  Half-open: one probe at a time."""
-        with self._lock:
-            h = self._of(tag)
-            if h.state == CLOSED:
-                return True
-            if h.state == OPEN:
-                if self.clock() - h._opened_at < h._backoff:
+        notes: list[dict] = []
+        try:
+            with self._lock:
+                h = self._of(tag)
+                if h.state == CLOSED:
+                    return True
+                if h.state == OPEN:
+                    if self.clock() - h._opened_at < h._backoff:
+                        return False
+                    h._set_state(HALF_OPEN)
+                    notes.append(self._transition_event(tuple(tag), OPEN, h))
+                # half-open: grant a single outstanding probe
+                if h._probe_inflight:
                     return False
-                h._set_state(HALF_OPEN)
-            # half-open: grant a single outstanding probe
-            if h._probe_inflight:
-                return False
-            h._probe_inflight = True
-            h.probes += 1
-            return True
+                h._probe_inflight = True
+                h.probes += 1
+                return True
+        finally:
+            self._notify(notes)
 
     def cancel_probe(self, tag) -> None:
         """Return an unused probe grant (the admitted partition had nothing
@@ -214,6 +242,7 @@ class HealthRegistry:
     # ------------------------------------------------------------- outcomes
 
     def record_success(self, tag, latency_s: float = 0.0) -> None:
+        notes: list[dict] = []
         with self._lock:
             h = self._of(tag)
             h.successes += 1
@@ -231,10 +260,14 @@ class HealthRegistry:
                 h._backoff = self.config.backoff_s
                 h.outcomes.clear()
                 h._set_state(CLOSED)
+                notes.append(self._transition_event(tuple(tag),
+                                                    HALF_OPEN, h))
             # a straggler completing after the breaker opened is counted
             # but is NOT a probe — only half-open successes close
+        self._notify(notes)
 
     def record_failure(self, tag) -> None:
+        notes: list[dict] = []
         with self._lock:
             h = self._of(tag)
             h.failures += 1
@@ -249,11 +282,15 @@ class HealthRegistry:
                 h._opened_at = self.clock()
                 h.opens += 1
                 h._set_state(OPEN)
+                notes.append(self._transition_event(tuple(tag),
+                                                    HALF_OPEN, h))
             elif h.state == CLOSED and h._tripped():
                 h._backoff = self.config.backoff_s
                 h._opened_at = self.clock()
                 h.opens += 1
                 h._set_state(OPEN)
+                notes.append(self._transition_event(tuple(tag), CLOSED, h))
+        self._notify(notes)
 
     # ---------------------------------------------------------- observation
 

@@ -292,8 +292,8 @@ def _quarantine_file(path: Path, *, rename: bool) -> bool:
         return False
 
 
-def load_grouped(path: str | os.PathLike, *,
-                 quarantine: bool = False) -> GroupedCacheLoad | None:
+def load_grouped(path: str | os.PathLike, *, quarantine: bool = False,
+                 on_event=None) -> GroupedCacheLoad | None:
     """Read a persisted cache file into per-backend namespaces.
 
     Version-2/3/4 entries land under their recorded platform tag (version
@@ -310,8 +310,23 @@ def load_grouped(path: str | os.PathLike, *,
     wholesale-unreadable file is renamed to ``<path>.corrupt`` and a file
     with skipped entries is copied there (``.quarantined`` set on the
     result) — corruption is preserved as evidence, never silently
-    dropped."""
+    dropped.
+
+    ``on_event`` is an optional structured-event callback ``(kind,
+    **fields) -> None`` (e.g. ``EventLog.emit``): it receives one
+    ``persist_entry_skipped`` event per dropped entry and one
+    ``persist_quarantined`` event per quarantined file — how the
+    engine's event log sees persistence trouble.  Callback errors are
+    swallowed; observability must never break a load."""
     path = Path(path)
+
+    def _emit(kind: str, **fields) -> None:
+        if on_event is not None:
+            try:
+                on_event(kind, path=str(path), **fields)
+            except Exception:
+                pass
+
     try:
         with np.load(path) as data:
             manifest = json.loads(bytes(data["manifest"]).decode())
@@ -328,19 +343,25 @@ def load_grouped(path: str | os.PathLike, *,
                         raise
                     warnings.warn(f"autotune cache at {path}: skipping "
                                   f"entry {i} ({e})")
+                    _emit("persist_entry_skipped", entry=i, error=str(e))
                     out.skipped += 1
                     continue
                 out.entries.setdefault(tag, []).append((key, entry))
         if out.skipped and quarantine:
             out.quarantined = _quarantine_file(path, rename=False)
+            if out.quarantined:
+                _emit("persist_quarantined", wholesale=False,
+                      skipped=out.skipped)
         return out
     except FileNotFoundError:
         return None
     except Exception as e:             # torn file, bad json, bad zip, ...
         warnings.warn(f"autotune cache at {path} unreadable "
                       f"({type(e).__name__}: {e}); starting cold")
+        _emit("persist_load_failure", error=f"{type(e).__name__}: {e}")
         if quarantine:
-            _quarantine_file(path, rename=True)
+            if _quarantine_file(path, rename=True):
+                _emit("persist_quarantined", wholesale=True)
         return None
 
 

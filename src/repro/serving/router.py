@@ -105,11 +105,23 @@ class RoutingContext:
 
     ``health`` is the engine's ``HealthRegistry`` (``None`` in hand-built
     test contexts): routers use it to keep open-circuit backends out of
-    candidate sets and memos."""
+    candidate sets and memos.  ``events`` is the engine's ``EventLog``
+    (``None`` in hand-built contexts): policies emit structured routing
+    events through it (``router_spill``, ``sticky_invalidation``)."""
     registry: BackendRegistry
     calibration: RouteCalibration
     default_platform: str
     health: object | None = None        # repro.serving.health.HealthRegistry
+    events: object | None = None        # repro.serving.trace.EventLog
+
+    def emit(self, kind: str, **fields) -> None:
+        """Emit a structured routing event if the engine wired a log
+        (no-op in hand-built contexts; never raises into routing)."""
+        if self.events is not None:
+            try:
+                self.events.emit(kind, **fields)
+            except Exception:
+                pass
 
     def candidates(self, op: str) -> list[KernelBackend]:
         """Backends that can serve ``op``, default platform first (ties in
@@ -262,6 +274,8 @@ class CostModelRouter:
                         # memo and re-decide against current health
                         del self._memo[digests[i]]
                         self.sticky_invalidations += 1
+                        ctx.emit("sticky_invalidation", platform=plat,
+                                 digest=digests[i])
                     else:
                         self._memo.move_to_end(digests[i])
                         decisions[i] = RouteDecision(plat, "sticky")
@@ -443,6 +457,10 @@ class LoadAwareRouter:
                             d = decisions[i] = RouteDecision(self.spill_to,
                                                              "spill")
                             self.spills += 1
+                            ctx.emit("router_spill",
+                                     platform=tag[0], op=tag[1],
+                                     to=self.spill_to, depth=float(depth),
+                                     circuit_open=circuit_open)
                             tag = (self.spill_to, r.op)
                         else:       # transient burst: hold the assignment
                             self.spill_hysteresis += 1

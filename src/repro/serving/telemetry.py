@@ -72,6 +72,43 @@ class LatencyHistogram:
             return self.max
         return float(self.edges[i])
 
+    def copy(self) -> "LatencyHistogram":
+        """Independent point-in-time copy (bucket edges shared — they are
+        immutable).  This is how ``EngineTelemetry.snapshot`` gets the
+        counts out from under its lock before rendering quantiles."""
+        out = LatencyHistogram.__new__(LatencyHistogram)
+        out.edges = self.edges
+        out.counts = self.counts.copy()
+        out.total = self.total
+        out.n = self.n
+        out.max = self.max
+        return out
+
+    def merge(self, other: "LatencyHistogram") -> "LatencyHistogram":
+        """Fold ``other``'s samples into this histogram in place (bucket
+        layouts must match).  Merging is exact — bucket counts add — so
+        it is associative and commutative: aggregating per-shard
+        histograms in any order yields identical buckets and quantiles."""
+        if self.edges.shape != other.edges.shape \
+                or not np.array_equal(self.edges, other.edges):
+            raise ValueError("cannot merge histograms with different "
+                             "bucket edges")
+        self.counts += other.counts
+        self.total += other.total
+        self.n += other.n
+        if other.max > self.max:
+            self.max = other.max
+        return self
+
+    def buckets(self) -> list[tuple[float, int]]:
+        """Cumulative bucket counts, Prometheus-style: ``[(upper_edge_s,
+        count_le), ...]`` ending with ``(inf, n)`` — each count is the
+        number of samples <= that edge, monotone non-decreasing."""
+        cum = np.cumsum(self.counts)
+        out = [(float(e), int(c)) for e, c in zip(self.edges, cum[:-1])]
+        out.append((float("inf"), int(cum[-1])))
+        return out
+
     def snapshot(self) -> dict:
         return {"n": int(self.n), "mean_ms": self.mean * 1e3,
                 "p50_ms": self.quantile(0.50) * 1e3,
@@ -118,6 +155,24 @@ class RouteCalibration:
               predicted: float | None) -> None:
         a = self.alpha
         ms = observed_s * 1e3
+        # Drift: EMA of |observed - calibrated expectation| *before* this
+        # sample folds in.  For samples carrying a model prediction the
+        # expectation is predicted + current offset (the calibrated cost
+        # the router actually compared); for prediction-less samples it
+        # degenerates to the observed EMA itself.  A stable workload keeps
+        # drift near its noise floor; a backend whose latency regime moved
+        # (thermal throttle, contention, model gone stale) pushes it up —
+        # the re-routing trigger ROADMAP item 4 consumes.
+        if c["n"]:
+            if predicted is not None and c["n_pred"]:
+                expected = float(predicted) \
+                    + (c["observed_ms"] - c["predicted"])
+            else:
+                expected = c["observed_ms"]
+            resid = abs(ms - expected)
+            c["drift_ms"] = resid if c["n_drift"] == 0 \
+                else (1 - a) * c["drift_ms"] + a * resid
+            c["n_drift"] += 1
         c["observed_ms"] = ms if c["n"] == 0 \
             else (1 - a) * c["observed_ms"] + a * ms
         c["n"] += 1
@@ -129,7 +184,8 @@ class RouteCalibration:
 
     @staticmethod
     def _fresh() -> dict:
-        return {"n": 0, "observed_ms": 0.0, "n_pred": 0, "predicted": 0.0}
+        return {"n": 0, "observed_ms": 0.0, "n_pred": 0, "predicted": 0.0,
+                "n_drift": 0, "drift_ms": 0.0}
 
     def observe(self, platform: str, observed_s: float,
                 predicted: float | None = None, op: str | None = None) -> None:
@@ -168,11 +224,29 @@ class RouteCalibration:
                 return None
             return c["observed_ms"] - c["predicted"]
 
+    def drift(self, platform: str, op: str | None = None) -> float | None:
+        """Calibration-drift gauge: EMA of the absolute residual between
+        each observed latency and the calibrated expectation current when
+        it arrived (milliseconds).  With ``op``, the per-``(platform,
+        op)`` gauge, falling back to the platform aggregate; ``None``
+        until at least two samples (one to set the expectation, one to
+        measure against it)."""
+        with self._lock:
+            if op is not None:
+                co = self._by_op.get((platform, op))
+                if co is not None and co["n_drift"]:
+                    return co["drift_ms"]
+            c = self._by_platform.get(platform)
+            if c is None or c["n_drift"] == 0:
+                return None
+            return c["drift_ms"]
+
     @staticmethod
     def _render(c: dict) -> dict:
         return {"n": c["n"], "observed_ms": c["observed_ms"],
                 "predicted": c["predicted"],
-                "offset": c["observed_ms"] - c["predicted"]}
+                "offset": c["observed_ms"] - c["predicted"],
+                "drift_ms": c["drift_ms"]}
 
     def snapshot(self) -> dict:
         """Per-platform aggregate view (the pre-per-op shape, unchanged),
@@ -254,11 +328,37 @@ class EngineTelemetry:
             for name, d in deltas.items():
                 setattr(self, name, getattr(self, name) + d)
 
+    def stage_histograms(self) -> dict:
+        """Point-in-time copies of every stage histogram (name -> copy) —
+        bucket counts duplicated under the lock, safe to render (cumsum,
+        quantiles, Prometheus buckets) without holding it."""
+        with self._lock:
+            return {name: h.copy() for name, h in self.stages.items()}
+
+    def backend_serve_histograms(self) -> dict:
+        """Point-in-time copies of every backend serve histogram
+        (``"platform/op"`` tag -> copy), same contract as
+        ``stage_histograms``."""
+        with self._lock:
+            return {tag: b["serve"].copy()
+                    for tag, b in self.backends.items()}
+
     def snapshot(self, cache=None, evictions: int | None = None) -> dict:
         """Everything ``SparseKernelEngine.stats()`` renders.  Pass the
-        engine's ``AutotuneCache`` to fold in its counters."""
+        engine's ``AutotuneCache`` to fold in its counters.
+
+        Lock discipline: scalar counters and histogram *bucket counts*
+        are copied under the telemetry lock, but all histogram rendering
+        (one cumsum per quantile per histogram) happens after it is
+        released — a concurrent ``stats()`` poll costs ``step()``
+        accounting a dict copy, never a render."""
         with self._lock:
             served = self.hits + self.misses
+            stage_copies = {k: h.copy() for k, h in self.stages.items()}
+            backend_copies = {
+                tag: (b["requests"], b["hits"], b["misses"],
+                      b["serve"].copy())
+                for tag, b in self.backends.items()}
             out = {
                 "requests": self.requests,
                 "batches": self.batches,
@@ -282,14 +382,6 @@ class EngineTelemetry:
                 "persist_saves": self.persist_saves,
                 "persist_load_failures": self.persist_load_failures,
                 "persist_quarantined": self.persist_quarantined,
-                "stages": {k: h.snapshot() for k, h in self.stages.items()},
-                "backends": {
-                    tag: {"requests": b["requests"], "hits": b["hits"],
-                          "misses": b["misses"],
-                          "hit_rate": (b["hits"] / (b["hits"] + b["misses"])
-                                       if b["hits"] + b["misses"] else 0.0),
-                          "serve": b["serve"].snapshot()}
-                    for tag, b in self.backends.items()},
                 "routing": {
                     "decisions": dict(self.route_reasons),
                     "by_platform": dict(self.route_platforms),
@@ -297,6 +389,14 @@ class EngineTelemetry:
                     "config_installs": self.route_config_installs,
                 },
             }
+        # rendering (one cumsum per quantile) runs outside the lock
+        out["stages"] = {k: h.snapshot() for k, h in stage_copies.items()}
+        out["backends"] = {
+            tag: {"requests": reqs, "hits": hits, "misses": misses,
+                  "hit_rate": (hits / (hits + misses)
+                               if hits + misses else 0.0),
+                  "serve": serve.snapshot()}
+            for tag, (reqs, hits, misses, serve) in backend_copies.items()}
         out["routing"]["calibration"] = self.calibration.snapshot()
         if cache is not None:
             out["cache"] = {"size": len(cache), "hits": cache.hits,

@@ -1,0 +1,253 @@
+"""Per-request tracing — span trees, a flight recorder, and an event log.
+
+``stats()`` tells you *how much*; this module tells you *where*.  Every
+``SparseKernelEngine.step`` already times its six pipeline stages (route ->
+partition -> score -> build -> execute -> retry) for the stage histograms —
+tracing reuses exactly those measurements to build a **span tree** per
+request, so the hot path pays for clock reads it was paying anyway.  What
+is new per step is one deterministic sampling decision and, *only for
+retained requests*, the materialization of ``Span``/``Trace`` objects at
+account time (after the batch's kernels are dispatched — never between a
+request and its launch).
+
+**Head sampling + tail retention.**  ``FlightRecorder.sample()`` decides
+per *step* (a request inherits its batch's decision) using a counter-based
+sampler: step ``n`` is sampled iff ``floor((n+1)*rate) > floor(n*rate)``,
+so ``rate=0.1`` keeps exactly every 10th step — deterministic, testable,
+and free of RNG state.  Independent of that head decision, every request
+that finished **degraded** (failed over, retried, or fast-failed off an
+open circuit) is *always* materialized and retained in a separate error
+ring — the traces you need most are precisely the ones head sampling would
+usually throw away.  With ``trace_sample_rate=0`` (the engine default) the
+per-step cost is one predicate; error traces are still captured.
+
+**Flight recorder.**  Two bounded, lock-guarded rings: the last N sampled
+traces (``capacity``) and the last M error traces (``error_capacity``),
+queryable via ``engine.traces()`` / ``engine.traces(errors=True)``.  Rings
+overwrite oldest-first (``dropped`` counts evictions); nothing here grows
+without bound, so a long-running engine can fly with the recorder on
+forever — the black-box model, hence the name.
+
+**Event log.**  ``EventLog`` is a bounded ring of structured events —
+breaker transitions, failovers, circuit fast-fails, persistence
+quarantines, warm starts, saves, router spills, sticky invalidations,
+drains — each a flat dict with a wall-clock ``ts``, a monotonic ``seq``,
+and a ``kind``.  ``to_jsonl()`` renders the ring one-JSON-object-per-line
+for log shippers; ``repro.serving.export`` consumes the same ring.
+
+See ``docs/serving.md`` ("Observability") for the span model and the
+exporters that render these structures (Prometheus text, Chrome trace).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import threading
+import time
+from collections import deque
+
+__all__ = ["Span", "Trace", "FlightRecorder", "EventLog"]
+
+
+@dataclasses.dataclass
+class Span:
+    """One timed operation inside a trace.
+
+    ``t0`` is seconds relative to the owning trace's ``wall_ts`` (the
+    step's start), ``dur`` seconds of duration — both host wall-clock
+    windows from ``time.perf_counter`` pairs.  ``attrs`` carries
+    span-scoped detail (e.g. the retry span's ``failed_over_from``);
+    ``children`` nest (the retry span holds its sub-pipeline's
+    partition/score/build/execute spans)."""
+    name: str
+    t0: float
+    dur: float
+    attrs: dict = dataclasses.field(default_factory=dict)
+    children: list = dataclasses.field(default_factory=list)
+
+    def to_dict(self) -> dict:
+        d = {"name": self.name, "t0_ms": self.t0 * 1e3,
+             "dur_ms": self.dur * 1e3}
+        if self.attrs:
+            d["attrs"] = dict(self.attrs)
+        if self.children:
+            d["children"] = [c.to_dict() for c in self.children]
+        return d
+
+    def find(self, name: str) -> "Span | None":
+        """First span named ``name`` in this subtree (depth-first)."""
+        if self.name == name:
+            return self
+        for c in self.children:
+            hit = c.find(name)
+            if hit is not None:
+                return hit
+        return None
+
+
+@dataclasses.dataclass
+class Trace:
+    """One request's span tree plus identifying/routing provenance.
+
+    ``trace_id`` matches the id stamped on the request's
+    ``KernelResponse``; ``wall_ts`` is the absolute ``time.time()`` of the
+    step's start (span ``t0``s are relative to it — what lets traces from
+    different generations line up on one Chrome-trace timeline);
+    ``status`` is ``"ok"`` or ``"degraded"``."""
+    trace_id: str
+    wall_ts: float
+    status: str
+    op: str
+    platform: str
+    digest: str
+    generation: int
+    root: Span
+
+    @property
+    def degraded(self) -> bool:
+        return self.status == "degraded"
+
+    def span_names(self) -> list[str]:
+        """Top-level stage names in order (retry children not included)."""
+        return [s.name for s in self.root.children]
+
+    def to_dict(self) -> dict:
+        return {"trace_id": self.trace_id, "wall_ts": self.wall_ts,
+                "status": self.status, "op": self.op,
+                "platform": self.platform, "digest": self.digest,
+                "generation": self.generation, "root": self.root.to_dict()}
+
+
+class FlightRecorder:
+    """Bounded rings of recent traces + the deterministic head sampler.
+
+    Args:
+        sample_rate: fraction of *steps* head-sampled into the main ring
+            (0 disables head sampling; degraded traces are retained
+            regardless).  Clamped to [0, 1].
+        capacity: main ring size (last N sampled traces).
+        error_capacity: error ring size (last M degraded/failed-over
+            traces — always retained, never subject to sampling).
+
+    Thread-safe: the sampler counter and both rings sit behind one lock;
+    ``sample()`` at rate 0 short-circuits before taking it, so the
+    default-configured hot path costs a float compare per step.
+    """
+
+    def __init__(self, sample_rate: float = 0.0, capacity: int = 256,
+                 error_capacity: int = 64):
+        self.sample_rate = min(max(float(sample_rate), 0.0), 1.0)
+        self._lock = threading.Lock()
+        self._ring: deque = deque(maxlen=max(int(capacity), 1))
+        self._errors: deque = deque(maxlen=max(int(error_capacity), 1))
+        self._steps = 0             # sampling decisions taken
+        self.sampled_steps = 0      # decisions that came up True
+        self.recorded = 0           # traces entered into the main ring
+        self.error_recorded = 0     # traces entered into the error ring
+        self.dropped = 0            # main-ring evictions (oldest lost)
+        self.error_dropped = 0      # error-ring evictions
+
+    def sample(self) -> bool:
+        """One head-sampling decision (call once per step).  Deterministic:
+        with rate r, decision n is True iff ``floor((n+1)r) > floor(nr)``
+        — exactly ``ceil(N*r)`` of any N consecutive steps sample, evenly
+        spaced, no RNG."""
+        r = self.sample_rate
+        if r <= 0.0:
+            return False
+        with self._lock:
+            n = self._steps
+            self._steps += 1
+            take = r >= 1.0 or math.floor((n + 1) * r) > math.floor(n * r)
+            if take:
+                self.sampled_steps += 1
+            return take
+
+    def record(self, trace: Trace, *, sampled: bool = False,
+               error: bool = False) -> None:
+        """File one materialized trace: head-sampled traces enter the main
+        ring, degraded traces the error ring (a sampled degraded trace
+        enters both — it is part of the sampled timeline *and* must
+        survive the main ring's churn)."""
+        with self._lock:
+            if sampled:
+                if len(self._ring) == self._ring.maxlen:
+                    self.dropped += 1
+                self._ring.append(trace)
+                self.recorded += 1
+            if error:
+                if len(self._errors) == self._errors.maxlen:
+                    self.error_dropped += 1
+                self._errors.append(trace)
+                self.error_recorded += 1
+
+    def traces(self, *, errors: bool = False, n: int | None = None
+               ) -> list[Trace]:
+        """Most-recent-last snapshot of a ring (the last ``n`` if given)."""
+        with self._lock:
+            ring = self._errors if errors else self._ring
+            out = list(ring)
+        return out[-n:] if n is not None else out
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {"sample_rate": self.sample_rate,
+                    "steps": self._steps,
+                    "sampled_steps": self.sampled_steps,
+                    "recorded": self.recorded,
+                    "error_recorded": self.error_recorded,
+                    "dropped": self.dropped,
+                    "error_dropped": self.error_dropped,
+                    "buffered": len(self._ring),
+                    "error_buffered": len(self._errors)}
+
+
+class EventLog:
+    """Bounded ring of structured engine events, JSONL-renderable.
+
+    Every event is a flat dict ``{"ts": wall seconds, "seq": monotonic
+    int, "kind": str, **fields}``.  The ring keeps the last ``capacity``
+    events (``emitted`` counts all of them, so consumers can detect loss);
+    ``clock`` is injectable for deterministic tests.
+    """
+
+    def __init__(self, capacity: int = 1024, clock=time.time):
+        self.clock = clock
+        self._lock = threading.Lock()
+        self._ring: deque = deque(maxlen=max(int(capacity), 1))
+        self.emitted = 0
+        self._by_kind: dict[str, int] = {}
+
+    def emit(self, kind: str, **fields) -> None:
+        with self._lock:
+            ev = {"ts": self.clock(), "seq": self.emitted, "kind": kind}
+            ev.update(fields)
+            self._ring.append(ev)
+            self.emitted += 1
+            self._by_kind[kind] = self._by_kind.get(kind, 0) + 1
+
+    def events(self, *, kind: str | None = None, n: int | None = None
+               ) -> list[dict]:
+        """Buffered events oldest-first (filtered by ``kind``, last ``n``)."""
+        with self._lock:
+            out = [dict(e) for e in self._ring]
+        if kind is not None:
+            out = [e for e in out if e["kind"] == kind]
+        return out[-n:] if n is not None else out
+
+    def to_jsonl(self, *, kind: str | None = None) -> str:
+        """The buffered ring as one JSON object per line (trailing
+        newline when non-empty) — the structured log shippers ingest."""
+        evs = self.events(kind=kind)
+        return "".join(json.dumps(e, default=str) + "\n" for e in evs)
+
+    def write(self, path) -> None:
+        """Write the buffered ring to ``path`` as JSONL."""
+        from pathlib import Path
+        Path(path).write_text(self.to_jsonl())
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {"emitted": self.emitted, "buffered": len(self._ring),
+                    "by_kind": dict(self._by_kind)}

@@ -46,6 +46,13 @@ except ModuleNotFoundError:
             return _Strategy(
                 lambda rng: elements[int(rng.integers(len(elements)))])
 
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def sample(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.sample(rng) for _ in range(n)]
+            return _Strategy(sample)
+
     st = _St()
 
     def settings(*_args, **_kwargs):

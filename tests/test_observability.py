@@ -1,0 +1,557 @@
+"""Observability tests: span-tree tracing (``repro.serving.trace``), the
+flight recorder's head sampling + tail retention, the structured event
+log, the exporters (``repro.serving.export`` — Prometheus text, Chrome
+trace, windowed stats deltas), the calibration drift gauge, and the
+histogram bucket-export/merge/threading contracts in
+``repro.serving.telemetry``.
+
+Engine-level tests reuse the deterministic fault idioms from
+``test_faults.py`` (call-indexed ``FaultPlan``, fake clocks, zero/huge
+breaker backoffs) so every trace and event assertion replays identically
+on any machine.
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from _compat import given, settings, st
+from repro.data import generate_matrix
+from repro.serving import (DEFAULT_PLATFORM, CostModelRouter, EventLog,
+                           FaultPlan, FlightRecorder, HealthConfig,
+                           HealthRegistry, KernelRequest, LatencyHistogram,
+                           LoadAwareRouter, RouteCalibration,
+                           SparseKernelEngine, StaticRouter, chrome_trace,
+                           default_registry, inject_faults, load_grouped,
+                           parse_prometheus_text, prom_get, prometheus_text,
+                           save_backends, stats_delta, truncate_file)
+from repro.serving.telemetry import EngineTelemetry
+from repro.serving.trace import Span, Trace
+
+TAG = ("tpu_interpret", "spmm")
+#: upper-edge quantile error bound: the histogram's bucket edge ratio
+BUCKET_RATIO = 10 ** (8 / 71)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _mats(n, seed0=0, n_rows=256, nnz=1200):
+    fams = ("uniform", "banded", "powerlaw", "blockdiag")
+    return [generate_matrix(fams[i % 4], seed=seed0 + i, n_rows=n_rows,
+                            n_cols=n_rows, target_nnz=nnz) for i in range(n)]
+
+
+def _requests(mats, rhs=None, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    return [KernelRequest(m, rng.normal(size=m.nnz).astype(np.float32),
+                          "spmm", rhs, **kw) for m in mats]
+
+
+# ------------------------------------------------------- flight recorder
+
+def _trace(i, status="ok"):
+    return Trace(f"t-{i}", 1000.0 + i, status, "spmm", "cpu_ref", "d", i,
+                 Span("request", 0.0, 0.001))
+
+
+def test_recorder_deterministic_head_sampling():
+    for rate, n, expect in ((0.0, 50, 0), (1.0, 50, 50), (0.25, 100, 25),
+                            (0.1, 95, 9)):
+        rec = FlightRecorder(rate)
+        took = sum(rec.sample() for _ in range(n))
+        # counter-based: exactly floor(n * rate), no RNG, no drift
+        assert took == expect == int(n * rate)
+        assert rec.snapshot()["sampled_steps"] == expect
+
+
+def test_recorder_rings_bounded_and_ordered():
+    rec = FlightRecorder(1.0, capacity=4, error_capacity=2)
+    for i in range(10):
+        rec.record(_trace(i), sampled=True, error=i % 3 == 0)
+    assert [t.trace_id for t in rec.traces()] == [f"t-{i}" for i in (6, 7, 8, 9)]
+    # 0,3,6,9 hit the error ring; capacity 2 keeps the most recent two
+    assert [t.trace_id for t in rec.traces(errors=True)] == ["t-6", "t-9"]
+    assert [t.trace_id for t in rec.traces(errors=True, n=1)] == ["t-9"]
+    s = rec.snapshot()
+    assert s["recorded"] == 10 and s["dropped"] == 6 and s["buffered"] == 4
+    assert s["error_recorded"] == 4 and s["error_dropped"] == 2
+
+
+def test_recorder_error_retention_independent_of_sampling():
+    rec = FlightRecorder(0.0)           # head sampling fully off
+    assert not rec.sample()
+    rec.record(_trace(0, "degraded"), error=True)
+    assert not rec.traces() and len(rec.traces(errors=True)) == 1
+
+
+def test_event_log_ring_kinds_and_jsonl(tmp_path):
+    clk = FakeClock()
+    log = EventLog(capacity=3, clock=clk)
+    for i in range(5):
+        clk.advance(1.0)
+        log.emit("failover" if i % 2 else "drain", n=i)
+    assert [e["kind"] for e in log.events()] == ["drain", "failover", "drain"]
+    assert [e["n"] for e in log.events(kind="drain")] == [2, 4]
+    assert log.snapshot() == {"emitted": 5, "buffered": 3,
+                              "by_kind": {"drain": 3, "failover": 2}}
+    lines = log.to_jsonl().splitlines()
+    assert len(lines) == 3
+    for line, ev in zip(lines, log.events()):
+        assert json.loads(line) == ev
+    path = tmp_path / "events.jsonl"
+    log.write(path)
+    assert path.read_text() == log.to_jsonl()
+
+
+# ------------------------------------------------ engine tracing end-to-end
+
+def test_engine_stamps_trace_ids_and_records_span_tree():
+    engine = SparseKernelEngine(trace_sample_rate=1.0)
+    mats = _mats(3, seed0=20_000)
+    resps = engine.step(_requests(mats))
+    engine.release_stream()
+    assert all(r.trace_id for r in resps)
+    assert len(set(r.trace_id for r in resps)) == 3
+    traces = {t.trace_id: t for t in engine.traces()}
+    for r in resps:
+        t = traces[r.trace_id]
+        assert t.status == "ok" and t.platform == r.platform
+        assert t.digest == r.digest and t.generation == r.generation
+        # six pipeline stages + accounting, in execution order, no retry
+        assert t.span_names() == ["route", "partition", "score", "build",
+                                  "execute", "account"]
+        assert t.root.attrs["op"] == "spmm"
+        assert t.root.dur >= sum(c.dur for c in t.root.children) * 0.5
+        for c in t.root.children:
+            assert c.dur >= 0.0 and c.t0 >= 0.0
+        d = t.to_dict()
+        assert d["trace_id"] == r.trace_id
+        assert [c["name"] for c in d["root"]["children"]] == t.span_names()
+
+
+def test_engine_honors_caller_trace_id():
+    engine = SparseKernelEngine(trace_sample_rate=1.0)
+    reqs = _requests(_mats(2, seed0=20_100))
+    reqs[0].trace_id = "caller-chose-this"
+    resps = engine.step(reqs)
+    engine.release_stream()
+    assert resps[0].trace_id == "caller-chose-this"
+    assert resps[1].trace_id != "caller-chose-this"
+    assert "caller-chose-this" in {t.trace_id for t in engine.traces()}
+
+
+def test_engine_rate_zero_records_nothing_healthy():
+    engine = SparseKernelEngine()       # trace_sample_rate defaults to 0.0
+    resps = engine.step(_requests(_mats(2, seed0=20_200)))
+    engine.release_stream()
+    assert all(r.trace_id is None for r in resps)
+    assert not engine.traces() and not engine.traces(errors=True)
+    assert engine.stats()["tracing"]["sampled_steps"] == 0
+
+
+def test_error_ring_retains_degraded_with_full_span_tree():
+    # head sampling OFF + a hard-failing default backend: tail retention
+    # must still capture every failed-over request end to end
+    reg = default_registry()
+    inject_faults(reg, DEFAULT_PLATFORM, "spmm", FaultPlan.fail_calls(0))
+    engine = SparseKernelEngine(
+        backends=reg,
+        health=HealthRegistry(HealthConfig(backoff_s=60.0),
+                              clock=FakeClock()))
+    mats = _mats(3, seed0=20_300)
+    rng = np.random.default_rng(1)
+    rhs = rng.normal(size=(256, 32)).astype(np.float32)
+    resps = engine.step(_requests(mats, rhs))
+    engine.drain()
+    assert all(r.degraded and r.trace_id for r in resps)
+    ring = {t.trace_id: t for t in engine.traces(errors=True)}
+    assert not engine.traces()          # main ring untouched at rate 0
+    for r in resps:
+        t = ring[r.trace_id]
+        assert t.status == "degraded" and t.degraded
+        assert t.span_names() == ["route", "partition", "score", "build",
+                                  "execute", "retry", "account"]
+        retry = t.root.find("retry")
+        assert [c.name for c in retry.children] == [
+            "retry.partition", "retry.score", "retry.build",
+            "retry.execute"]
+        assert retry.attrs == {"failed_over_from": DEFAULT_PLATFORM,
+                               "attempts": 2}
+        assert t.root.attrs["degraded"] is True
+        assert t.root.attrs["platform"] == "cpu_ref"
+
+
+def test_breaker_transitions_land_in_event_log():
+    reg = default_registry()
+    inject_faults(reg, DEFAULT_PLATFORM, "spmm",
+                  FaultPlan.fail_calls(0, 3 + 3))   # kill step + 1 failed probe
+    engine = SparseKernelEngine(
+        backends=reg,
+        health=HealthRegistry(HealthConfig(consecutive_errors=3,
+                                           backoff_s=0.0)))
+    mats = _mats(3, seed0=20_400)
+    rhs = np.ones((256, 16), np.float32)    # dense operand: really execute
+    engine.step(_requests(mats, rhs))   # trips: closed -> open
+    engine.step(_requests(mats, rhs))   # failed probe: open->half_open->open
+    engine.step(_requests(mats, rhs))   # probe succeeds: -> closed
+    engine.drain()
+    trans = engine.events.events(kind="breaker_transition")
+    tag = f"{DEFAULT_PLATFORM}/spmm"
+    assert [(e["from"], e["to"]) for e in trans if e["tag"] == tag] == [
+        ("closed", "open"), ("open", "half_open"), ("half_open", "open"),
+        ("open", "half_open"), ("half_open", "closed")]
+    assert all(e["ts"] > 0 and "failure_rate" in e for e in trans)
+    fo = engine.events.events(kind="failover")
+    assert fo and fo[0]["moves"] == [f"{DEFAULT_PLATFORM}->cpu_ref"]
+
+
+def test_persist_quarantine_events(tmp_path):
+    from repro.core.autotune import KernelAutotuner
+    kt = KernelAutotuner()
+    kt.get_batch(_mats(1, seed0=20_500))
+    path = tmp_path / "cache.npz"
+    save_backends({DEFAULT_PLATFORM: kt.cache}, path)
+    truncate_file(path, 0.5)
+    events = []
+    with pytest.warns(UserWarning):
+        assert load_grouped(path, quarantine=True,
+                            on_event=lambda k, **f: events.append((k, f))) \
+            is None
+    kinds = [k for k, _ in events]
+    assert kinds == ["persist_load_failure", "persist_quarantined"]
+    assert all(f["path"] == str(path) for _, f in events)
+    assert events[1][1]["wholesale"] is True
+
+    # and through the engine: warm-start failure lands in engine.events
+    save_backends({DEFAULT_PLATFORM: kt.cache}, path)
+    truncate_file(path, 0.5)
+    with pytest.warns(UserWarning):
+        engine = SparseKernelEngine(persist_path=path)
+    by_kind = engine.events.snapshot()["by_kind"]
+    assert by_kind.get("persist_load_failure") == 1
+    assert by_kind.get("persist_quarantined") == 1
+
+
+def test_warm_start_and_save_events(tmp_path):
+    from repro.core.autotune import KernelAutotuner
+    kt = KernelAutotuner()
+    kt.get_batch(_mats(2, seed0=20_600))
+    path = tmp_path / "cache.npz"
+    save_backends({DEFAULT_PLATFORM: kt.cache}, path)
+    engine = SparseKernelEngine(persist_path=path)
+    ws, = engine.events.events(kind="warm_start")
+    assert ws["entries"] == 2 and ws["skipped"] == 0
+    engine.save()
+    sv, = engine.events.events(kind="persist_save")
+    assert sv["path"] == str(path)
+
+
+def test_router_spill_and_sticky_invalidation_events():
+    # open circuit -> LoadAwareRouter spills immediately -> router_spill
+    engine = SparseKernelEngine(
+        router=LoadAwareRouter(StaticRouter(), max_inflight=100),
+        health=HealthRegistry(HealthConfig(backoff_s=60.0),
+                              clock=FakeClock()))
+    for _ in range(3):
+        engine.health.record_failure(TAG)
+    engine.step(_requests(_mats(2, seed0=20_700)))
+    engine.release_stream()
+    spills = engine.events.events(kind="router_spill")
+    assert len(spills) == 2
+    assert all(e["to"] == "cpu_ref" and e["circuit_open"] for e in spills)
+
+    # health transition invalidates a sticky memo -> sticky_invalidation
+    engine2 = SparseKernelEngine(
+        router=CostModelRouter(),
+        health=HealthRegistry(HealthConfig(backoff_s=60.0),
+                              clock=FakeClock()))
+    mats = _mats(2, seed0=20_800)
+    engine2.step(_requests(mats))
+    engine2.step(_requests(mats))       # memoized: sticky
+    for _ in range(3):
+        engine2.health.record_failure(TAG)
+    engine2.step(_requests(mats))       # memo invalidated, re-decided
+    engine2.release_stream()
+    inv = engine2.events.events(kind="sticky_invalidation")
+    assert len(inv) == 2
+    assert all(e["platform"] == DEFAULT_PLATFORM and e["digest"]
+               for e in inv)
+
+
+# ------------------------------------------------------------- exporters
+
+def test_prometheus_text_round_trips_and_matches_stats():
+    engine = SparseKernelEngine(trace_sample_rate=1.0)
+    for s0 in (21_000, 21_000, 21_100):     # repeats -> hits; new -> misses
+        engine.step(_requests(_mats(2, seed0=s0)))
+    engine.drain()
+    txt = prometheus_text(engine)
+    samples = parse_prometheus_text(txt)
+    s = engine.stats()
+    assert prom_get(samples, "repro_serving_requests_total") == s["requests"]
+    assert prom_get(samples, "repro_serving_hits_total") == s["hits"]
+    assert prom_get(samples, "repro_serving_hit_rate") \
+        == pytest.approx(s["hit_rate"])
+    assert prom_get(samples, "repro_serving_routed_requests_total",
+                    platform=DEFAULT_PLATFORM) == s["requests"]
+    assert prom_get(samples, "repro_serving_breaker_state",
+                    tag=f"{DEFAULT_PLATFORM}/spmm", state="closed") == 1
+    assert prom_get(samples, "repro_serving_trace_sampled_steps_total") == 3
+
+
+def test_prometheus_histogram_buckets_match_export_path():
+    engine = SparseKernelEngine()
+    engine.step(_requests(_mats(2, seed0=21_200)))
+    engine.release_stream()
+    samples = parse_prometheus_text(prometheus_text(engine))
+    for stage in ("route", "execute", "step"):
+        hist = engine.telemetry.stage_histograms()[stage]
+        buckets = hist.buckets()
+        # cumulative, monotone, ending at the sample count...
+        assert buckets[-1] == (float("inf"), hist.n)
+        assert all(b1[1] >= b0[1] for b0, b1 in zip(buckets, buckets[1:]))
+        # ...and every bucket line in the exposition matches exactly
+        prom = [(lab["le"], v) for name, lab, v in samples
+                if name == "repro_serving_stage_duration_seconds_bucket"
+                and lab["stage"] == stage]
+        assert len(prom) == len(buckets)
+        for (le, v), (edge, cum) in zip(prom, buckets):
+            assert v == cum
+            if le != "+Inf":
+                assert float(le) == pytest.approx(edge)
+        assert prom_get(samples, "repro_serving_stage_duration_seconds_count",
+                        stage=stage) == hist.n
+        assert prom_get(samples, "repro_serving_stage_duration_seconds_sum",
+                        stage=stage) == pytest.approx(hist.total)
+
+
+def test_prometheus_parser_rejects_malformed():
+    for bad in ("no_value_here\n", "name{unclosed 1.0\n",
+                'name{k="v" 1.0\n', "name not-a-number\n"):
+        with pytest.raises(ValueError):
+            parse_prometheus_text(bad)
+    assert parse_prometheus_text("# HELP x y\n\nx_total 3\n") \
+        == [("x_total", {}, 3.0)]
+
+
+def test_chrome_trace_schema():
+    engine = SparseKernelEngine(trace_sample_rate=1.0)
+    engine.step(_requests(_mats(2, seed0=21_300)))
+    engine.step(_requests(_mats(2, seed0=21_300)))
+    engine.drain()
+    doc = json.loads(json.dumps(chrome_trace(engine.traces(),
+                                             engine.generation_log())))
+    events = doc["traceEvents"]
+    assert events and doc["displayTimeUnit"] == "ms"
+    complete = [e for e in events if e["ph"] == "X"]
+    meta = [e for e in events if e["ph"] == "M"]
+    assert complete and meta
+    for e in complete:
+        assert e["ts"] >= 0 and e["dur"] >= 0
+        assert e["pid"] == 1 and isinstance(e["tid"], int)
+        assert e["cat"] == "serving"
+    roots = [e for e in complete if e["name"] == "request"]
+    assert len(roots) == 4 and all("trace_id" in e["args"] for e in roots)
+    gens = [e for e in complete if "in-flight" in e["name"]]
+    assert {e["tid"] for e in gens} == {1, 2}   # one row per generation
+    assert chrome_trace([]) == {
+        "traceEvents": [{"name": "process_name", "ph": "M", "pid": 1,
+                         "args": {"name": "repro.serving"}}],
+        "displayTimeUnit": "ms"}
+
+
+def test_stats_delta_hand_computed():
+    prev = {"ts": 100.0, "requests": 50, "batches": 5, "hits": 20,
+            "misses": 10, "health": {"failovers": 1, "execute_failures": 1},
+            "backends": {"a/spmm": {"requests": 30, "hits": 15, "misses": 5}}}
+    cur = {"ts": 110.0, "requests": 150, "batches": 15, "hits": 60,
+           "misses": 30, "health": {"failovers": 5, "execute_failures": 2},
+           "backends": {"a/spmm": {"requests": 90, "hits": 45, "misses": 15}}}
+    d = stats_delta(prev, cur)
+    assert d["interval_s"] == pytest.approx(10.0)
+    assert d["requests"] == 100 and d["requests_per_s"] == pytest.approx(10.0)
+    assert d["batches_per_s"] == pytest.approx(1.0)
+    # windowed: (60-20) hits over (60-20)+(30-10) served
+    assert d["hit_rate"] == pytest.approx(40 / 60)
+    assert d["failovers"] == 4 and d["failovers_per_s"] == pytest.approx(0.4)
+    assert d["execute_failures"] == 1
+    b = d["backends"]["a/spmm"]
+    assert b["requests_per_s"] == pytest.approx(6.0)
+    assert b["hit_rate"] == pytest.approx(30 / 40)
+    # restart (counters went backwards) clamps to zero, never negative
+    d2 = stats_delta(cur, {**prev, "ts": 120.0})
+    assert d2["requests"] == 0 and d2["requests_per_s"] == 0.0
+
+
+def test_engine_stats_delta_windows():
+    engine = SparseKernelEngine()
+    engine.step(_requests(_mats(2, seed0=21_400)))
+    d1 = engine.stats_delta()           # window: construction -> now
+    assert d1["requests"] == 2 and d1["requests_per_s"] > 0
+    d2 = engine.stats_delta()           # empty window since d1
+    assert d2["requests"] == 0
+    engine.step(_requests(_mats(2, seed0=21_400)))   # cache hits now
+    d3 = engine.stats_delta()
+    assert d3["requests"] == 2 and d3["hit_rate"] == 1.0
+    engine.release_stream()
+
+
+# --------------------------------------------------- calibration drift gauge
+
+def test_calibration_drift_gauge_tracks_regime_shift():
+    cal = RouteCalibration(alpha=0.2)
+    for _ in range(20):                 # stable regime: 5ms observed
+        cal.observe("tpu", 0.005, predicted=1.0, op="spmm")
+    stable = cal.drift("tpu")
+    assert stable is not None and stable < 0.5
+    for _ in range(3):                  # regime shift: latency 4x
+        cal.observe("tpu", 0.020, predicted=1.0, op="spmm")
+    spiked = cal.drift("tpu")
+    assert spiked > stable + 5.0        # gauge spikes with the shift
+    assert cal.drift("tpu", op="spmm") > stable + 5.0
+    for _ in range(60):                 # calibration re-converges at 20ms
+        cal.observe("tpu", 0.020, predicted=1.0, op="spmm")
+    settled = cal.drift("tpu")
+    assert settled < spiked             # ...and the gauge settles back
+    assert cal.drift("tpu", op="never-seen") == cal.drift("tpu")  # fallback
+    assert cal.drift("never-seen") is None
+    snap = cal.snapshot()["tpu"]
+    assert snap["drift_ms"] == pytest.approx(settled)
+    assert snap["by_op"]["spmm"]["drift_ms"] \
+        == pytest.approx(cal.drift("tpu", op="spmm"))
+
+
+def test_calibration_drift_surfaces_in_prometheus():
+    engine = SparseKernelEngine(router=CostModelRouter())
+    mats = _mats(2, seed0=21_500)
+    engine.step(_requests(mats))
+    engine.step(_requests(mats))
+    engine.release_stream()
+    samples = parse_prometheus_text(prometheus_text(engine))
+    drift = prom_get(samples, "repro_serving_calibration_drift_ms",
+                     platform=DEFAULT_PLATFORM, op="")
+    assert drift is not None and drift >= 0.0
+
+
+# ----------------------------------------- histogram properties + threading
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.lists(st.floats(min_value=1e-6, max_value=50.0),
+                     min_size=1, max_size=60),
+       q=st.floats(min_value=0.0, max_value=1.0))
+def test_histogram_quantile_tracks_percentile(data, q):
+    h = LatencyHistogram()
+    for x in data:
+        h.record(x)
+    true = float(np.percentile(data, q * 100, method="higher"))
+    got = h.quantile(q)
+    # reported quantile is the containing bucket's upper edge:
+    # conservative (>= true) and within one bucket ratio (~29.6%)
+    assert got >= true * (1 - 1e-9)
+    assert got <= true * BUCKET_RATIO * (1 + 1e-9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(a=st.lists(st.floats(min_value=1e-6, max_value=50.0),
+                  min_size=0, max_size=30),
+       b=st.lists(st.floats(min_value=1e-6, max_value=50.0),
+                  min_size=0, max_size=30),
+       c=st.lists(st.floats(min_value=1e-6, max_value=50.0),
+                  min_size=1, max_size=30))
+def test_histogram_merge_associative_commutative(a, b, c):
+    def hist(xs):
+        h = LatencyHistogram()
+        for x in xs:
+            h.record(x)
+        return h
+
+    left = hist(a).merge(hist(b)).merge(hist(c))        # (a+b)+c
+    right = hist(c).merge(hist(b).merge(hist(a)))       # c+(b+a)
+    whole = hist(a + b + c)                             # no sharding at all
+    for other in (right, whole):
+        assert np.array_equal(left.counts, other.counts)
+        assert left.n == other.n
+        assert left.total == pytest.approx(other.total)
+        assert left.max == other.max
+        assert left.buckets() == other.buckets()
+        for q in (0.0, 0.5, 0.99, 1.0):
+            assert left.quantile(q) == other.quantile(q)
+
+
+def test_histogram_merge_rejects_mismatched_edges():
+    with pytest.raises(ValueError):
+        LatencyHistogram().merge(LatencyHistogram(n_buckets=16))
+
+
+def test_histogram_buckets_cumulative_le_semantics():
+    h = LatencyHistogram()
+    data = [1e-6, 2e-6, 1e-3, 1e-3, 0.5, 200.0]     # incl. edge + overflow
+    for x in data:
+        h.record(x)
+    for edge, cum in h.buckets():
+        assert cum == sum(1 for x in data if x <= edge)
+    assert h.buckets()[-1] == (float("inf"), len(data))
+
+
+def test_histogram_copy_is_independent():
+    h = LatencyHistogram()
+    h.record(0.01)
+    c = h.copy()
+    c.record(0.02)
+    assert h.n == 1 and c.n == 2
+    assert h.edges is c.edges           # immutable edges shared
+
+
+def test_telemetry_snapshot_under_threaded_mutation():
+    tel = EngineTelemetry()
+    stop = threading.Event()
+    errors = []
+
+    def hammer(seed):
+        rng = np.random.default_rng(seed)
+        while not stop.is_set():
+            tel.record_stage("execute", float(rng.uniform(1e-5, 1e-2)))
+            tel.record_backend("tpu/spmm", requests=1, hits=1,
+                               seconds=float(rng.uniform(1e-5, 1e-2)))
+            tel.count(requests=1, hits=1)
+
+    threads = [threading.Thread(target=hammer, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    try:
+        for _ in range(50):             # concurrent polls must never tear
+            s = tel.snapshot()
+            assert s["requests"] == s["hits"]   # counted atomically together
+            assert s["stages"]["execute"]["n"] >= 0
+            b = s["backends"].get("tpu/spmm")
+            if b:
+                assert b["requests"] == b["hits"] >= b["serve"]["n"]
+    except Exception as e:              # pragma: no cover - diagnostic
+        errors.append(e)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+    assert not errors
+    final = tel.snapshot()
+    assert final["requests"] == tel.requests
+    assert final["stages"]["execute"]["n"] == tel.stages["execute"].n
+
+
+def test_snapshot_renders_from_copies_outside_lock():
+    tel = EngineTelemetry()
+    tel.record_stage("step", 0.01)
+    copies = tel.stage_histograms()
+    tel.record_stage("step", 0.02)      # mutate after the copy
+    assert copies["step"].n == 1        # the copy is a frozen point in time
+    assert tel.stages["step"].n == 2
