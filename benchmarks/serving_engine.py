@@ -376,6 +376,76 @@ def _bench_device_build(rows, tuner, n_segments: int, seg_steps: int,
               f"synchronous {best_sync:.0f} req/s")
 
 
+def _bench_warm_lane(rows, tuner, n_segments: int, seg_steps: int,
+                     batch: int):
+    """The fused warm fast path vs the PR-1 loop on hot traffic.
+
+    Build-only repeated traffic (host values, no operand) over one hot
+    working set — the steady state the warm lane collapses to pattern
+    digest -> warm-table replay -> fused aligned-buffer scatter -> async
+    dispatch.  The baseline is the PR-1 shape on identical traffic: one
+    ``get`` + ``build(reuse=True)`` per request.  Timed in short
+    **interleaved A/B segments** (engine segment, then loop segment,
+    repeated) with best-of per mode, so machine-load drift hits both
+    modes instead of biasing whichever ran last; the engine drains only
+    at segment ends, so within a segment batch N+1's scatter overlaps
+    batch N's in-flight dispatches.  ``scripts/smoke.sh`` gates
+    ``engine_speedup >= 1.2x`` and ``overlap_ratio >= 0.6`` from the
+    emitted metrics."""
+    mats = _matrices(batch, seed0=50_000)
+    values = _values_for(mats)
+    engine = SparseKernelEngine(KernelAutotuner(tuner, cache_size=256))
+    kt = KernelAutotuner(tuner, cache_size=256)
+
+    def reqs():
+        return [KernelRequest(mats[i], values[i]) for i in range(batch)]
+
+    engine.step(reqs())                 # untimed: tune + record warm table
+    engine.drain()
+    for i in range(batch):              # untimed: tune the baseline cache
+        kt.get(mats[i]).build(values[i], reuse=True)
+
+    best_e = best_b = 0.0
+    for _seg in range(n_segments):
+        t0 = time.perf_counter()
+        for _ in range(seg_steps):
+            engine.step(reqs())
+        engine.drain()                  # only at segment end: async inside
+        best_e = max(best_e,
+                     seg_steps * batch / (time.perf_counter() - t0))
+        t0 = time.perf_counter()
+        for _ in range(seg_steps):
+            for i in range(batch):
+                kt.get(mats[i]).build(values[i], reuse=True)
+        best_b = max(best_b,
+                     seg_steps * batch / (time.perf_counter() - t0))
+
+    s = engine.stats()
+    wl, bp = s["warm_lane"], s["build_paths"]
+    speedup = best_e / best_b
+    assert wl["steps"] == n_segments * seg_steps, \
+        f"hot traffic fell off the warm lane: {wl['steps']} warm steps " \
+        f"of {n_segments * seg_steps}"
+    assert wl["fused_builds"] == n_segments * seg_steps * batch, \
+        "warm steps did not all take the fused build path"
+    rows.append((
+        "serving/warm_lane/engine_requests_per_s", f"{best_e:.0f}", "",
+        f"fused warm lane; warm_steps={wl['steps']} "
+        f"fused_builds={wl['fused_builds']} "
+        f"overlap_ratio={bp['overlap_ratio']:.2f} "
+        f"sampled_steps={wl['sampled_steps']}",
+        {"req_per_s": best_e, "overlap_ratio": bp["overlap_ratio"],
+         "warm_steps": float(wl["steps"]),
+         "fused_builds": float(wl["fused_builds"])}))
+    rows.append((
+        "serving/warm_lane/pr1_loop_requests_per_s", f"{best_b:.0f}", "",
+        f"sequential get + reuse build on the same hot mix; "
+        f"engine_speedup={speedup:.2f}x (gate: >=1.2x)",
+        {"req_per_s": best_b, "engine_speedup": speedup}))
+    if speedup < 1.2:
+        print(f"# WARNING: warm-lane speedup {speedup:.2f}x below 1.2x bar")
+
+
 def run(quick: bool | None = None):
     if quick is None:       # benchmarks.run path: REPRO_BENCH_QUICK=1
         quick = os.environ.get("REPRO_BENCH_QUICK", "") == "1"
@@ -396,6 +466,8 @@ def run(quick: bool | None = None):
                           batch=12, pool=pool)
     _bench_device_build(rows, tuner, n_segments=8 if quick else 12,
                         seg_steps=3, batch=16, reps=2 if quick else 3)
+    _bench_warm_lane(rows, tuner, n_segments=4 if quick else 8,
+                     seg_steps=5 if quick else 8, batch=batch)
     common.emit(rows)
     if speedup < 3.0:
         print(f"# WARNING: batched-miss speedup {speedup:.1f}x below 3x bar")

@@ -73,9 +73,15 @@ def _pool(n=BATCH, seed0=0, n_rows=256, nnz=1200):
 
 def _engine(registry):
     # zero backoff: every step an open breaker is due its half-open probe,
-    # so breaker transitions are a pure function of executor call indices
+    # so breaker transitions are a pure function of executor call indices.
+    # warm_lane off: this benchmark asserts the *staged* pipeline's
+    # deterministic degradation script (all-`default` routing decisions,
+    # scripted call-index fault windows); the warm lane x faults
+    # interaction is covered by tests/test_warm_lane.py (differential +
+    # threaded stress) and the error-ring scenario in
+    # benchmarks/serving_observability.py.
     return SparseKernelEngine(
-        backends=registry,
+        backends=registry, warm_lane=False,
         health=HealthRegistry(HealthConfig(consecutive_errors=3,
                                            backoff_s=0.0)))
 

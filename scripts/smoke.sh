@@ -106,9 +106,9 @@ if [ "$QUICK" != "1" ]; then
   python -m benchmarks.run bsr_preproc
 fi
 
-echo "== serving + routing + faults + observability benchmarks (quick) -> BENCH_7.json =="
+echo "== serving + routing + faults + observability benchmarks (quick) -> BENCH_8.json =="
 REPRO_BENCH_QUICK=1 python -m benchmarks.run serving routing faults \
-  observability --json BENCH_7.json
+  observability --json BENCH_8.json
 
 echo "== device_build overlap gate =="
 python - <<'EOF'
@@ -121,7 +121,7 @@ noise tolerance applies — the gate catches the async path becoming
 mode this guards against."""
 import json
 
-doc = json.load(open("BENCH_7.json"))
+doc = json.load(open("BENCH_8.json"))
 by = {r["name"]: r for r in doc["rows"]}
 ov = by["serving/device_build/overlapped_requests_per_s"]["metrics"]["req_per_s"]
 sy = by["serving/device_build/synchronous_requests_per_s"]["metrics"]["req_per_s"]
@@ -132,6 +132,34 @@ assert host == 0, "warm device-resident mix did host-numpy scatters"
 assert ov >= 0.95 * sy, (
     f"overlapped execute ({ov:.1f} req/s) regressed below the "
     f"synchronous path ({sy:.1f} req/s)")
+EOF
+
+echo "== warm fast-path gate =="
+python - <<'EOF'
+"""The fused warm lane must actually beat the naive PR-1 loop on hot
+traffic: engine req/s >= 1.2x the sequential get+reuse-build baseline
+(measured interleaved A/B, best-of per mode — the margin is headroom,
+not noise allowance; the lane prototypes at ~3x on this container), and
+the async pipeline must be live inside segments: overlap_ratio >= 0.6
+(drain only at segment ends -> all but each segment's first step build
+over an in-flight generation).  The benchmark itself asserts every
+timed step took the lane and the fused build path."""
+import json
+
+doc = json.load(open("BENCH_8.json"))
+by = {r["name"]: r for r in doc["rows"]}
+e = by["serving/warm_lane/engine_requests_per_s"]["metrics"]
+b = by["serving/warm_lane/pr1_loop_requests_per_s"]["metrics"]
+print(f"warm lane={e['req_per_s']:.0f} req/s pr1_loop={b['req_per_s']:.0f} "
+      f"req/s ({b['engine_speedup']:.2f}x), "
+      f"overlap_ratio={e['overlap_ratio']:.2f}, "
+      f"warm_steps={e['warm_steps']:.0f} fused={e['fused_builds']:.0f}")
+assert b["engine_speedup"] >= 1.2, (
+    f"warm lane {b['engine_speedup']:.2f}x over the PR-1 loop "
+    f"(gate: >=1.2x)")
+assert e["overlap_ratio"] >= 0.6, (
+    f"warm-lane overlap_ratio {e['overlap_ratio']:.2f} (gate: >=0.6) — "
+    f"the lane is serializing instead of dispatching async")
 EOF
 
 echo "== degraded-mode fault gate =="
@@ -146,7 +174,7 @@ kill step's work; 3x leaves noise headroom without letting a
 pathological retry path through)."""
 import json
 
-doc = json.load(open("BENCH_7.json"))
+doc = json.load(open("BENCH_8.json"))
 by = {r["name"]: r for r in doc["rows"]}
 m = by["faults/degraded/requests_per_s"]["metrics"]
 print(f"degraded p99={m['p99_ms']:.2f}ms "
@@ -177,7 +205,7 @@ import json
 
 from repro.serving import parse_prometheus_text
 
-doc = json.load(open("BENCH_7.json"))
+doc = json.load(open("BENCH_8.json"))
 by = {r["name"]: r for r in doc["rows"]}
 m = by["observability/tracing_sampled/requests_per_s"]["metrics"]
 print(f"tracing overhead={m['overhead_pct']:.2f}% at "

@@ -140,11 +140,32 @@ class BsrPlan:
     def nnzb(self) -> int:
         return int(self.rowids.shape[0])
 
-    def alloc_buffer(self, buf_dtype=np.float32) -> np.ndarray:
+    def alloc_buffer(self, buf_dtype=np.float32,
+                     align: int | None = None) -> np.ndarray:
         """A zeroed (nnzb, bm, BK) block-data buffer this plan scatters into.
         External holders (e.g. ``repro.serving.arena.PlanArena`` slots) own
-        their buffers; ``reuse=True`` builds use a single plan-owned one."""
-        return np.zeros((self.nnzb, self.block_m, BK), buf_dtype)
+        their buffers; ``reuse=True`` builds use a single plan-owned one.
+
+        ``align`` (bytes, power of two, multiple of the itemsize) returns a
+        buffer whose data pointer is aligned to that boundary.  JAX's CPU
+        backend zero-copies ``jnp.asarray`` only for 64-byte-aligned host
+        buffers — an aligned buffer is what lets ``wrap`` alias host storage
+        instead of copying the full block data on every build (the fused
+        warm-lane path).  Default ``None`` keeps the plain ``np.zeros``
+        allocation and therefore the copying (non-aliasing) ``wrap``
+        semantics every existing caller relies on."""
+        shape = (self.nnzb, self.block_m, BK)
+        if align is None:
+            return np.zeros(shape, buf_dtype)
+        dt = np.dtype(buf_dtype)
+        if align % dt.itemsize:
+            raise ValueError(f"align={align} is not a multiple of the "
+                             f"itemsize ({dt.itemsize})")
+        n = int(np.prod(shape))
+        raw = np.zeros(n + align // dt.itemsize, dt)
+        off_bytes = (-raw.ctypes.data) % align
+        off = off_bytes // dt.itemsize
+        return raw[off:off + n].reshape(shape)
 
     def scatter_into(self, values, data: np.ndarray) -> np.ndarray:
         """O(nnz) fancy-indexed write of ``values`` into ``data`` (a buffer

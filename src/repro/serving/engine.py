@@ -116,6 +116,7 @@ import dataclasses
 import threading
 import time
 import uuid
+import weakref
 from collections import OrderedDict, deque
 from pathlib import Path
 
@@ -135,10 +136,16 @@ from repro.serving.persist import (LEGACY_NAMESPACE, load_grouped,
 from repro.serving.router import (RouteDecision, Router, RoutingContext,
                                   StaticRouter)
 from repro.serving.telemetry import EngineTelemetry
-from repro.serving.trace import EventLog, FlightRecorder, Span, Trace
+from repro.serving.trace import (CounterSampler, EventLog, FlightRecorder,
+                                 Span, Trace)
 
 __all__ = ["KernelRequest", "KernelResponse", "OutputGuardError",
            "SparseKernelEngine"]
+
+# routing reasons whose outcome the warm lane may replay: a deliberate,
+# per-pattern decision.  Spill/failover/explore outcomes are transient by
+# construction and must keep flowing through the router.
+_WARM_REASONS = frozenset({"explicit", "default", "sticky", "cost_model"})
 
 
 class OutputGuardError(RuntimeError):
@@ -289,6 +296,27 @@ class SparseKernelEngine:
         event_capacity: structured event ring size (breaker transitions,
             failovers, quarantines, warm starts, spills, drains —
             ``engine.events``, exported as JSONL).
+        warm_lane: enable the fused warm fast path (default ``True``).
+            When every replayable condition holds for a request — a
+            recorded prior routing decision for its (digest, op,
+            requested platform), the decided backend healthy (breaker
+            CLOSED, health generation unmoved since the decision was
+            recorded), its cache entry resident — the staged pipeline
+            collapses to one pass: replayed decision -> cached plan ->
+            fused arena scatter (aligned buffer + cached zero-copy wrap)
+            -> async dispatch, rejoining the shared execute/retry/account
+            stages.  Mixed batches split once up front; cold/unhealthy
+            requests take the staged sub-pipeline.  ``False`` restores
+            the always-staged engine bit for bit.
+        warm_sample_rate: fraction of warm steps whose per-request
+            calibration observes run (deterministic counter sampling,
+            default 1/16).  Health accounting, hit counters, and stage
+            histograms are never sampled — only the per-request
+            calibration ledger writes are.
+        warm_drift_ms: optional calibration-drift gate — a warm
+            candidate whose backend's drift gauge exceeds this many
+            milliseconds falls through to the router (``None`` disables
+            the check).
 
     Thread-safety: all public methods are safe under concurrent callers;
     see the module docstring for the per-thread lease protocol.
@@ -306,7 +334,10 @@ class SparseKernelEngine:
                  max_retries: int = 1, validate_outputs: bool = False,
                  trace_sample_rate: float = 0.0, trace_capacity: int = 256,
                  trace_error_capacity: int = 64,
-                 event_capacity: int = 1024):
+                 event_capacity: int = 1024,
+                 warm_lane: bool = True,
+                 warm_sample_rate: float = 0.0625,
+                 warm_drift_ms: float | None = None):
         if backends is None:
             backends = default_registry(
                 tuner, cache_size=cache_size,
@@ -374,6 +405,20 @@ class SparseKernelEngine:
             lambda ev: self.events.emit("breaker_transition", **ev))
         self._delta_prev: dict | None = None    # stats_delta() baseline
         self._ctor_ts = time.monotonic()        # zeroth delta window start
+        # --- warm fast path ---------------------------------------------
+        self.warm_lane = bool(warm_lane)
+        self.warm_drift_ms = warm_drift_ms
+        # per-request warm telemetry (calibration observes) is *sampled*:
+        # one deterministic counter decision per warm step
+        self._warm_sampler = CounterSampler(warm_sample_rate)
+        # (digest, op, requested_platform) -> (decided platform, the
+        # health generation the decision was recorded under) — guarded by
+        # self._lock, LRU-bounded at the arena capacity
+        self._warm_table: OrderedDict = OrderedDict()
+        # id(mat) -> (digest, weakref) — SparseMatrix holds ndarrays and
+        # is unhashable, so the memo keys on identity and a weakref
+        # callback evicts entries when the matrix is collected
+        self._digest_memo: dict = {}
         if self.persist_path is not None:
             self._warm_start()
 
@@ -433,6 +478,10 @@ class SparseKernelEngine:
         st.wall0 = time.time()
         st.sampled = self.recorder.sample()
         try:
+            if self.warm_lane and requests:
+                warm = self._warm_probe(st)
+                if warm:
+                    return self._warm_step(st, warm, t_step)
             for name, stage in (("route", self._route_stage),
                                 ("partition", self._partition_stage),
                                 ("score", self._score_stage),
@@ -486,7 +535,8 @@ class SparseKernelEngine:
         to the failover target *before* any work is partitioned its way (a
         dead backend costs a dict lookup, not an executor timeout), unless
         the breaker grants a half-open probe."""
-        st.digests = [matrix_digest(r.mat) for r in st.requests]
+        if not st.digests:      # the warm probe (or retry lane) pre-digests
+            st.digests = [self._digest(r.mat) for r in st.requests]
         st.decisions = self.router.route(st.requests, st.digests,
                                          self.routing_context())
         for r, d in zip(st.requests, st.decisions):
@@ -776,8 +826,298 @@ class SparseKernelEngine:
                 st.tag_serve_seconds.get(tag, 0.0) + s
         st.installs += sub.installs
 
-    def _account_stage(self, st: _StepState,
-                       t_step: float) -> list[KernelResponse]:
+    # ------------------------------------------------------ warm fast path
+
+    def _digest(self, mat: SparseMatrix) -> str:
+        """``matrix_digest`` memoized on object identity: repeated traffic
+        re-serving the same ``SparseMatrix`` objects (the warm steady
+        state) pays the digest hash once, not once per step.  A weakref
+        callback evicts the memo entry when the matrix is collected, so
+        the memo tracks the live working set, not history."""
+        memo = self._digest_memo
+        key = id(mat)
+        hit = memo.get(key)
+        if hit is not None and hit[1]() is mat:
+            return hit[0]
+        dg = matrix_digest(mat)
+        try:
+            ref = weakref.ref(mat, lambda _r, _k=key: memo.pop(_k, None))
+        except TypeError:           # un-weakref-able pattern type: no memo
+            return dg
+        memo[key] = (dg, ref)
+        return dg
+
+    def _warm_probe(self, st: _StepState) -> dict[int, str] | None:
+        """Decide, in one cheap pass, which of this batch's requests can
+        take the warm lane: a recorded prior decision (digest + op +
+        requested platform) whose backend is still registered, whose
+        breaker is CLOSED, whose health generation hasn't moved since the
+        decision was recorded (the sticky-invalidation analogue — a moved
+        generation drops the entry), whose calibration drift is under
+        ``warm_drift_ms`` (if configured), and whose cache entry is still
+        resident.  A ``max_inflight`` router keeps its saturation
+        semantics: warm traffic that would cross the limit falls through
+        so the router can count/spill it.
+
+        Returns ``{index: platform}`` for the warm subset (empty/None ->
+        fully staged step).  The digests computed here are kept on the
+        step state, so a fallthrough costs the staged path nothing."""
+        reqs = st.requests
+        st.digests = [self._digest(r.mat) for r in reqs]
+        with self._lock:
+            table = self._warm_table
+            recs = [table.get((st.digests[i], r.op, r.platform))
+                    for i, r in enumerate(reqs)]
+        if not any(rec is not None for rec in recs):
+            return None
+        gen_of: dict[str, int] = {}
+        closed: dict[tuple, bool] = {}
+        calm: dict[tuple, bool] = {}
+        warm: dict[int, str] = {}
+        stale: list[tuple] = []
+        fallthrough = 0
+        for i, (r, rec) in enumerate(zip(reqs, recs)):
+            if rec is None:
+                continue
+            plat, gen0 = rec
+            tag = (plat, r.op)
+            if tag not in self.backends:
+                stale.append((st.digests[i], r.op, r.platform))
+                fallthrough += 1
+                continue
+            g = gen_of.get(plat)
+            if g is None:
+                g = gen_of[plat] = self.health.generation(plat)
+            if g != gen0:           # breaker transitioned since recording
+                stale.append((st.digests[i], r.op, r.platform))
+                fallthrough += 1
+                continue
+            ok = closed.get(tag)
+            if ok is None:
+                ok = closed[tag] = self.health.state(tag) == CLOSED
+            if not ok:              # open/half-open: staged gate decides
+                fallthrough += 1
+                continue
+            if self.warm_drift_ms is not None:
+                c = calm.get(tag)
+                if c is None:
+                    d = self.telemetry.calibration.drift(plat, op=r.op)
+                    c = calm[tag] = d is None or d <= self.warm_drift_ms
+                if not c:           # drifting: let routing re-decide
+                    fallthrough += 1
+                    continue
+            be = self.backends.get(plat, r.op)
+            if (r.op, st.digests[i]) not in be.tuner.cache:
+                stale.append((st.digests[i], r.op, r.platform))
+                fallthrough += 1
+                continue
+            warm[i] = plat
+        mi = getattr(self.router, "max_inflight", None)
+        if mi is not None and warm:
+            by_tag: dict[tuple, list[int]] = {}
+            for i, plat in warm.items():
+                by_tag.setdefault((plat, reqs[i].op), []).append(i)
+            for tag, idxs in by_tag.items():
+                if self.backends.get(*tag).load.inflight + len(idxs) > mi:
+                    for i in idxs:
+                        del warm[i]
+                    fallthrough += len(idxs)
+        if stale:
+            with self._lock:
+                for key in stale:
+                    self._warm_table.pop(key, None)
+            self.telemetry.count(warm_invalidations=len(stale))
+            self.events.emit("warm_invalidation", n=len(stale))
+        if fallthrough:
+            self.telemetry.count(warm_fallthroughs=fallthrough)
+        return warm or None
+
+    def _warm_step(self, st: _StepState, warm: dict[int, str],
+                   t_step: float) -> list[KernelResponse]:
+        """The fused warm lane: for the warm subset, route->partition->
+        score->build collapse into one pass (recorded decision -> cache
+        entry -> fused arena scatter), the cold remainder runs the staged
+        sub-pipeline once, and both rejoin the *shared* execute / retry /
+        account stages — so fault isolation, breaker feeding, error-ring
+        retention, generation hand-off, and backpressure are the same code
+        on both paths.  Per-request telemetry (calibration observes) is
+        sampled by the deterministic counter sampler; the rest of the
+        bookkeeping is amortized per step."""
+        t0 = time.perf_counter()
+        self._warm_prepare(st, warm)
+        self._warm_build(st, warm)
+        dt = time.perf_counter() - t0
+        self.telemetry.record_stage("warm", dt)
+        st.stage_spans.append(("warm", t0 - t_step, dt))
+        cold = [i for i in range(len(st.requests)) if i not in warm]
+        if cold:
+            self._cold_subset(st, cold)
+        for name, stage in (("execute", self._execute_stage),
+                            ("retry", self._retry_stage)):
+            t0 = time.perf_counter()
+            stage(st)
+            dt = time.perf_counter() - t0
+            self.telemetry.record_stage(name, dt)
+            st.stage_spans.append((name, t0 - t_step, dt))
+        warm_sampled = self._warm_sampler.sample()
+        self.telemetry.count(warm_steps=1, warm_requests=len(warm),
+                             warm_sampled_steps=int(warm_sampled))
+        return self._account_stage(st, t_step, warm_set=warm,
+                                   warm_sampled=warm_sampled)
+
+    def _warm_prepare(self, st: _StepState, warm: dict[int, str]) -> None:
+        """Stand in for route/partition/score on the warm subset: replay
+        the recorded decision, group per tag, fetch cache entries (one
+        ``cache.get`` per request — the same hit accounting the staged
+        score stage produces), and raise backend load.  A request that
+        lost its entry to a concurrent eviction between probe and here is
+        re-scored individually and reported as a miss."""
+        n = len(st.requests)
+        st.decisions = [None] * n
+        st.entries = [None] * n
+        st.built = [None] * n
+        st.device_flags = [False] * n
+        for i, plat in warm.items():
+            st.decisions[i] = RouteDecision(plat, "warm")
+            st.groups.setdefault((plat, st.requests[i].op), []).append(i)
+        st.resolved = {tag: self.backends.get(*tag) for tag in st.groups}
+        for tag, idxs in st.groups.items():
+            be = st.resolved[tag]
+            cache = be.tuner.cache
+            for i in idxs:
+                entry = cache.get((st.requests[i].op, st.digests[i]))
+                if entry is None:
+                    entry = be.tuner.get_batch(
+                        [st.requests[i].mat], st.requests[i].op,
+                        digests=[st.digests[i]])[0]
+                    st.hit_of[i] = False
+                else:
+                    st.hit_of[i] = True
+                st.entries[i] = entry
+            be.load.begin(len(idxs))
+            st.loads.append((be, len(idxs)))
+
+    def _warm_build(self, st: _StepState, warm: dict[int, str]) -> None:
+        """The warm subset's builds: host values scatter into the arena's
+        *fused* slot (64-byte-aligned buffer + one cached zero-copy wrap
+        — steady state touches only the nnz positions and never copies
+        the block data), device values take the donated device path
+        unchanged.  Slot exhaustion falls back to the counted un-aliased
+        build, exactly like the staged build stage."""
+        overlapped = bool(getattr(self._stream, "leases", ()))
+        n_device = n_host = n_fused = 0
+        for tag, idxs in st.groups.items():
+            t0 = time.perf_counter()
+            for i in idxs:
+                r, entry = st.requests[i], st.entries[i]
+                values = r.values if r.values is not None \
+                    else np.ones(r.mat.nnz, np.float32)
+                on_device = self._device_path(values)
+                st.device_flags[i] = on_device
+                arena = self._arena_for(tag + (st.digests[i],), entry)
+                try:
+                    if on_device:
+                        lease = arena.build_device(values)
+                    else:
+                        lease = arena.build_fused(values)
+                        n_fused += 1
+                    st.leases.append(lease)
+                    st.built[i] = (lease.matrix, True)
+                except ArenaOverrun:
+                    self.telemetry.count(arena_fallbacks=1)
+                    built = entry.plan.build_device(values) if on_device \
+                        else entry.plan.build(values)
+                    st.built[i] = (built, False)
+                if on_device:
+                    n_device += 1
+                else:
+                    n_host += 1
+            dt = time.perf_counter() - t0
+            st.tag_seconds[tag] = st.tag_seconds.get(tag, 0.0) + dt
+            st.tag_serve_seconds[tag] = \
+                st.tag_serve_seconds.get(tag, 0.0) + dt
+        self.telemetry.count(
+            device_builds=n_device, host_builds=n_host,
+            fused_builds=n_fused,
+            overlapped_builds=(n_device + n_host) if overlapped else 0)
+
+    def _cold_subset(self, st: _StepState, cold: list[int]) -> None:
+        """A mixed batch's cold/unhealthy remainder runs the staged
+        route->partition->score->build sub-pipeline once (split up
+        front, not per stage) and merges into the parent step before the
+        shared execute — the retry-lane merge pattern, with the parent
+        owning the sub-batch's leases and loads on every path."""
+        sub = _StepState([st.requests[i] for i in cold])
+        sub.digests = [st.digests[i] for i in cold]
+        sub.t0 = st.t0
+        sub.wall0 = st.wall0
+        try:
+            for name, stage in (("route", self._route_stage),
+                                ("partition", self._partition_stage),
+                                ("score", self._score_stage),
+                                ("build", self._build_stage)):
+                t0 = time.perf_counter()
+                stage(sub)
+                dt = time.perf_counter() - t0
+                self.telemetry.record_stage(name, dt)
+                st.stage_spans.append((name, t0 - st.t0, dt))
+        finally:
+            st.leases.extend(sub.leases)
+            st.loads.extend(sub.loads)
+        for k, i in enumerate(cold):
+            st.decisions[i] = sub.decisions[k]
+            st.entries[i] = sub.entries[k]
+            st.built[i] = sub.built[k]
+            st.device_flags[i] = sub.device_flags[k]
+            st.hit_of[i] = sub.hit_of[k]
+            if k in sub.failover_from:
+                st.failover_from[i] = sub.failover_from[k]
+        st.probes |= sub.probes
+        st.resolved.update(sub.resolved)
+        for tag, idxs in sub.groups.items():
+            st.groups.setdefault(tag, []).extend(cold[k] for k in idxs)
+        for tag, s in sub.tag_seconds.items():
+            st.tag_seconds[tag] = st.tag_seconds.get(tag, 0.0) + s
+        for tag, s in sub.tag_serve_seconds.items():
+            st.tag_serve_seconds[tag] = \
+                st.tag_serve_seconds.get(tag, 0.0) + s
+        st.installs += sub.installs
+        st.replaced_refs.extend(sub.replaced_refs)
+
+    def _warm_record(self, st: _StepState, responses,
+                     warm_set=frozenset()) -> None:
+        """Record this step's replayable routing outcomes into the warm
+        table: deliberate per-pattern decisions (explicit / default /
+        sticky / cost_model) that finished clean, stamped with the
+        platform's current health generation so any breaker transition
+        invalidates them at probe time.  LRU-bounded at the arena
+        capacity."""
+        gen_of: dict[str, int] = {}
+        cand = []
+        for i, resp in enumerate(responses):
+            if i in warm_set or resp.degraded or resp.attempts > 1:
+                continue
+            if st.decisions[i].reason not in _WARM_REASONS:
+                continue
+            g = gen_of.get(resp.platform)
+            if g is None:
+                g = gen_of[resp.platform] = \
+                    self.health.generation(resp.platform)
+            cand.append(((st.digests[i], st.requests[i].op,
+                          st.requests[i].platform), (resp.platform, g)))
+        if not cand:
+            return
+        with self._lock:
+            table = self._warm_table
+            for key, val in cand:
+                table[key] = val
+                table.move_to_end(key)
+            while len(table) > max(self._arena_cap, 1):
+                table.popitem(last=False)
+
+    def _account_stage(self, st: _StepState, t_step: float,
+                       warm_set=frozenset(),
+                       warm_sampled: bool = True) -> list[KernelResponse]:
         """Assemble responses, fold this step into telemetry (per-backend
         serve time, routing decisions, observed-vs-predicted calibration),
         and hand off the double buffer: the *previous* batch's leases and
@@ -805,13 +1145,26 @@ class SparseKernelEngine:
             # samples it poisons are exactly the ones that steer routing
             per_req = st.tag_serve_seconds.get(tag, 0.0) / len(idxs) \
                 if idxs else 0.0
+            warm_exec = 0
             for i in idxs:
-                self.telemetry.calibration.observe(
-                    tag[0], per_req, st.decisions[i].predicted, op=tag[1])
+                # warm-lane per-request calibration is *sampled* (the
+                # deterministic counter sampler): the observed latencies
+                # of replayed decisions are near-identical step to step,
+                # so one observe in 1/rate steps keeps the ledger honest
+                # at a fraction of the bookkeeping
+                if i not in warm_set or warm_sampled:
+                    self.telemetry.calibration.observe(
+                        tag[0], per_req, st.decisions[i].predicted,
+                        op=tag[1])
                 # only executed requests feed the breaker — a prepare-only
                 # request proves nothing about the executor
                 if st.requests[i].operand is not None:
-                    self.health.record_success(tag, per_req)
+                    if i in warm_set:
+                        warm_exec += 1      # batched below: one lock/tag
+                    else:
+                        self.health.record_success(tag, per_req)
+            if warm_exec:
+                self.health.record_successes(tag, warm_exec, per_req)
         reasons: dict[tuple[str, str], int] = {}
         for d in st.decisions:
             key = (d.platform, d.reason)
@@ -833,6 +1186,8 @@ class SparseKernelEngine:
                            st.failover_from.get(i), i in st.failover_from)
             for i, (dg, entry, (matrix, in_arena), output) in enumerate(
                 zip(st.digests, st.entries, st.built, st.outputs))]
+        if self.warm_lane:
+            self._warm_record(st, responses, warm_set)
 
         # everything this generation dispatched asynchronously — every
         # built matrix (arena-leased AND overrun-fallback builds, which
@@ -1105,6 +1460,7 @@ class SparseKernelEngine:
             out["arenas"] = {"resident": len(self._arenas),
                              "outstanding_leases": self._outstanding,
                              "generation": self._generation}
+            out["warm_lane"]["table"] = len(self._warm_table)
         out["tracing"] = self.recorder.snapshot()
         out["events"] = self.events.snapshot()
         # monotonic timestamp: what stats_delta() computes rates over

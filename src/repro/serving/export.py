@@ -134,6 +134,19 @@ def prometheus_text(engine, namespace: str = "repro_serving") -> str:
     w.scalar("drain_waits_total", "counter", "drains that had to wait",
              bp["drain_waits"])
 
+    wl = s["warm_lane"]
+    for key, help_ in (("steps", "steps served via the warm fast path"),
+                       ("requests", "requests served via the warm lane"),
+                       ("sampled_steps",
+                        "warm steps with per-request telemetry sampled"),
+                       ("fallthroughs",
+                        "warm candidates that fell through to routing"),
+                       ("invalidations", "warm table entries invalidated"),
+                       ("fused_builds", "fused aligned-buffer builds")):
+        w.scalar(f"warm_{key}_total", "counter", help_, wl[key])
+    w.scalar("warm_table_size", "gauge", "recorded warm decisions",
+             wl["table"])
+
     h = s["health"]
     for name in ("execute_failures", "output_guard_failures",
                  "circuit_fast_fails", "failovers", "retry_failures"):
@@ -340,10 +353,23 @@ def stats_delta(prev: dict, cur: dict) -> dict:
     "batches_per_s", "hits", "misses", "hit_rate" (WINDOWED — hits /
     served within the interval, not lifetime), "failovers",
     "failovers_per_s", "execute_failures", "backends": {tag:
-    {"requests", "requests_per_s", "hit_rate"}}}``.  Counters that went
-    backwards (engine restart) clamp to 0 rather than reporting negative
-    rates."""
+    {"requests", "requests_per_s", "hit_rate"}}}``.
+
+    A ``cur`` whose lifetime request/batch counters sit *below* ``prev``'s
+    means the engine restarted inside the window — the new process's
+    counters began again at zero.  The window then **rebaselines to
+    zero** (measuring the new engine's lifetime-so-far) instead of
+    clamping every counter delta independently: per-counter clamping is
+    wrong for *ratios* — after a warm-start restore, hits restart small
+    (clamped to 0) while misses may still clear the old baseline, so the
+    windowed hit rate collapses to garbage even though the restored
+    cache is serving nearly all hits.  Ratios are additionally clamped
+    into [0, 1] (top-level and per-backend), so no snapshot pair can
+    report a negative or >1 rate."""
     dt = max(float(cur["ts"]) - float(prev.get("ts", cur["ts"])), 1e-9)
+    if (float(cur.get("requests", 0)) < float(prev.get("requests", 0))
+            or float(cur.get("batches", 0)) < float(prev.get("batches", 0))):
+        prev = {"ts": prev.get("ts", cur["ts"])}   # restart: zero baseline
 
     def delta(*path) -> float:
         a, b = prev, cur
@@ -352,17 +378,19 @@ def stats_delta(prev: dict, cur: dict) -> dict:
             b = b.get(k, 0) if isinstance(b, dict) else 0
         return max(float(b) - float(a), 0.0)
 
+    def ratio(num: float, den: float) -> float:
+        return min(max(num / den, 0.0), 1.0) if den else 0.0
+
     requests = delta("requests")
     batches = delta("batches")
     hits, misses = delta("hits"), delta("misses")
-    served = hits + misses
     failovers = delta("health", "failovers")
     out = {
         "interval_s": dt,
         "requests": requests, "requests_per_s": requests / dt,
         "batches": batches, "batches_per_s": batches / dt,
         "hits": hits, "misses": misses,
-        "hit_rate": hits / served if served else 0.0,
+        "hit_rate": ratio(hits, hits + misses),
         "failovers": failovers, "failovers_per_s": failovers / dt,
         "execute_failures": delta("health", "execute_failures"),
         "backends": {},
@@ -371,8 +399,7 @@ def stats_delta(prev: dict, cur: dict) -> dict:
         b_req = delta("backends", tag, "requests")
         b_hits = delta("backends", tag, "hits")
         b_miss = delta("backends", tag, "misses")
-        b_served = b_hits + b_miss
         out["backends"][tag] = {
             "requests": b_req, "requests_per_s": b_req / dt,
-            "hit_rate": b_hits / b_served if b_served else 0.0}
+            "hit_rate": ratio(b_hits, b_hits + b_miss)}
     return out

@@ -266,6 +266,45 @@ class HealthRegistry:
             # but is NOT a probe — only half-open successes close
         self._notify(notes)
 
+    def record_successes(self, tag, n: int, latency_s: float = 0.0) -> None:
+        """Fold ``n`` identical successes at ``latency_s`` each into
+        ``tag``'s health in one lock acquisition — semantically equivalent
+        to ``n`` ``record_success`` calls (closed-form EMA: ``n`` steps
+        toward the same sample collapse to ``(1-a)^n``), which is what the
+        engine's warm lane uses to keep breaker accounting exact without
+        paying a lock round-trip per request."""
+        if n <= 0:
+            return
+        notes: list[dict] = []
+        with self._lock:
+            h = self._of(tag)
+            first = h.successes == 0
+            h.successes += n
+            h.consecutive_failures = 0
+            a = self.config.latency_alpha
+            ms = latency_s * 1e3
+            h.latency_ms = ms if first \
+                else (1 - a) ** n * h.latency_ms \
+                + (1 - (1 - a) ** n) * ms
+            # the outcomes window is bounded — extending past its maxlen
+            # just churns; cap the append at the window size
+            cap = h.outcomes.maxlen or n
+            if h.state == HALF_OPEN:
+                # the first success is the probe: close and clear the
+                # window; the remaining n-1 land in the fresh window —
+                # same end state as n sequential record_success calls
+                h.probe_successes += 1
+                h._probe_inflight = False
+                h._backoff = self.config.backoff_s
+                h.outcomes.clear()
+                h._set_state(CLOSED)
+                notes.append(self._transition_event(tuple(tag),
+                                                    HALF_OPEN, h))
+                h.outcomes.extend([True] * min(n - 1, cap))
+            else:
+                h.outcomes.extend([True] * min(n, cap))
+        self._notify(notes)
+
     def record_failure(self, tag) -> None:
         notes: list[dict] = []
         with self._lock:

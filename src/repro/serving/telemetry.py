@@ -117,7 +117,7 @@ class LatencyHistogram:
 
 
 STAGES = ("route", "partition", "score", "build", "execute", "retry",
-          "step")
+          "warm", "step")
 
 
 class RouteCalibration:
@@ -274,6 +274,7 @@ class EngineTelemetry:
         self.arena_fallbacks = 0        # builds that couldn't get a slot
         self.device_builds = 0          # jitted device-scatter builds
         self.host_builds = 0            # numpy host-scatter builds
+        self.fused_builds = 0           # zero-copy aligned-slot warm builds
         self.overlapped_builds = 0      # builds issued over an in-flight batch
         self.drain_waits = 0            # drain() calls that really had to wait
         self.warm_start_entries = 0     # cache entries restored from disk
@@ -290,6 +291,14 @@ class EngineTelemetry:
         self.route_reasons: dict = {}   # reason -> requests routed that way
         self.route_platforms: dict = {} # platform -> requests routed to it
         self.route_config_installs = 0  # routing config hints installed
+        self.warm_steps = 0             # steps with a warm-lane subset
+        self.warm_requests = 0          # requests served through the lane
+        self.warm_sampled_steps = 0     # warm steps with full per-request
+                                        # telemetry (the counter sampler)
+        self.warm_fallthroughs = 0      # warm candidates sent to the staged
+                                        # pipeline (breaker/drift/saturation)
+        self.warm_invalidations = 0     # warm entries dropped on a health-
+                                        # generation change (sticky analogue)
         self.calibration = RouteCalibration()
 
     def record_stage(self, name: str, seconds: float) -> None:
@@ -370,12 +379,21 @@ class EngineTelemetry:
                 "build_paths": {
                     "device": self.device_builds,
                     "host": self.host_builds,
+                    "fused": self.fused_builds,
                     "overlapped": self.overlapped_builds,
                     "overlap_ratio": (
                         self.overlapped_builds
                         / (self.device_builds + self.host_builds)
                         if self.device_builds + self.host_builds else 0.0),
                     "drain_waits": self.drain_waits,
+                },
+                "warm_lane": {
+                    "steps": self.warm_steps,
+                    "requests": self.warm_requests,
+                    "sampled_steps": self.warm_sampled_steps,
+                    "fallthroughs": self.warm_fallthroughs,
+                    "invalidations": self.warm_invalidations,
+                    "fused_builds": self.fused_builds,
                 },
                 "warm_start_entries": self.warm_start_entries,
                 "warm_start_skipped": self.warm_start_skipped,

@@ -47,7 +47,43 @@ import threading
 import time
 from collections import deque
 
-__all__ = ["Span", "Trace", "FlightRecorder", "EventLog"]
+__all__ = ["CounterSampler", "Span", "Trace", "FlightRecorder", "EventLog"]
+
+
+class CounterSampler:
+    """Deterministic counter-based sampler: decision ``n`` is True iff
+    ``floor((n+1)*rate) > floor(n*rate)``, so with rate ``r`` exactly
+    ``ceil(N*r)`` of any N consecutive decisions sample, evenly spaced, no
+    RNG state.  This is the head-sampling rule the ``FlightRecorder`` has
+    always used, extracted so other amortized bookkeeping (the engine's
+    warm-lane telemetry) can share it.
+
+    Thread-safe; ``sample()`` at rate 0 short-circuits before taking the
+    lock, so a disabled sampler costs one float compare per decision."""
+
+    def __init__(self, rate: float):
+        self.rate = min(max(float(rate), 0.0), 1.0)
+        self._lock = threading.Lock()
+        self._n = 0             # decisions taken
+        self.sampled = 0        # decisions that came up True
+
+    @property
+    def decisions(self) -> int:
+        with self._lock:
+            return self._n
+
+    def sample(self) -> bool:
+        """One sampling decision (call once per unit of work)."""
+        r = self.rate
+        if r <= 0.0:
+            return False
+        with self._lock:
+            n = self._n
+            self._n += 1
+            take = r >= 1.0 or math.floor((n + 1) * r) > math.floor(n * r)
+            if take:
+                self.sampled += 1
+            return take
 
 
 @dataclasses.dataclass
@@ -137,32 +173,29 @@ class FlightRecorder:
 
     def __init__(self, sample_rate: float = 0.0, capacity: int = 256,
                  error_capacity: int = 64):
-        self.sample_rate = min(max(float(sample_rate), 0.0), 1.0)
+        self._sampler = CounterSampler(sample_rate)
         self._lock = threading.Lock()
         self._ring: deque = deque(maxlen=max(int(capacity), 1))
         self._errors: deque = deque(maxlen=max(int(error_capacity), 1))
-        self._steps = 0             # sampling decisions taken
-        self.sampled_steps = 0      # decisions that came up True
         self.recorded = 0           # traces entered into the main ring
         self.error_recorded = 0     # traces entered into the error ring
         self.dropped = 0            # main-ring evictions (oldest lost)
         self.error_dropped = 0      # error-ring evictions
 
+    @property
+    def sample_rate(self) -> float:
+        return self._sampler.rate
+
+    @property
+    def sampled_steps(self) -> int:
+        return self._sampler.sampled
+
     def sample(self) -> bool:
         """One head-sampling decision (call once per step).  Deterministic:
         with rate r, decision n is True iff ``floor((n+1)r) > floor(nr)``
         — exactly ``ceil(N*r)`` of any N consecutive steps sample, evenly
-        spaced, no RNG."""
-        r = self.sample_rate
-        if r <= 0.0:
-            return False
-        with self._lock:
-            n = self._steps
-            self._steps += 1
-            take = r >= 1.0 or math.floor((n + 1) * r) > math.floor(n * r)
-            if take:
-                self.sampled_steps += 1
-            return take
+        spaced, no RNG (``CounterSampler``)."""
+        return self._sampler.sample()
 
     def record(self, trace: Trace, *, sampled: bool = False,
                error: bool = False) -> None:
@@ -193,7 +226,7 @@ class FlightRecorder:
     def snapshot(self) -> dict:
         with self._lock:
             return {"sample_rate": self.sample_rate,
-                    "steps": self._steps,
+                    "steps": self._sampler.decisions,
                     "sampled_steps": self.sampled_steps,
                     "recorded": self.recorded,
                     "error_recorded": self.error_recorded,

@@ -415,8 +415,12 @@ def test_drain_under_failure_threaded_no_hang():
 
 def test_cost_model_sticky_invalidates_on_health_transition():
     router = CostModelRouter()
+    # warm_lane=False: this test asserts the *router's* sticky memo and its
+    # health-transition invalidation; the warm lane would replay repeats
+    # before routing runs (its own invalidation is covered in
+    # tests/test_warm_lane.py)
     engine = SparseKernelEngine(
-        router=router,
+        router=router, warm_lane=False,
         health=HealthRegistry(HealthConfig(backoff_s=60.0),
                               clock=FakeClock()))
     mats = _mats(2, seed0=10600)

@@ -388,9 +388,39 @@ def test_stats_delta_hand_computed():
     b = d["backends"]["a/spmm"]
     assert b["requests_per_s"] == pytest.approx(6.0)
     assert b["hit_rate"] == pytest.approx(30 / 40)
-    # restart (counters went backwards) clamps to zero, never negative
+    # restart (counters went backwards) rebaselines to zero — the window
+    # reports the new process's lifetime-so-far, never a negative rate
     d2 = stats_delta(cur, {**prev, "ts": 120.0})
-    assert d2["requests"] == 0 and d2["requests_per_s"] == 0.0
+    assert d2["requests"] == 50 and d2["requests_per_s"] == pytest.approx(5.0)
+    assert d2["hit_rate"] == pytest.approx(20 / 30)
+
+
+def test_stats_delta_restart_rebaselines_hit_rate():
+    """Regression: a warm-start-restored engine restarts with small
+    lifetime counters but a high hit share (the restored cache serves
+    repeats as hits).  Per-counter clamping used to zero the hits delta
+    while letting misses clear the old baseline, collapsing the windowed
+    hit rate; the restart rebaseline reports the restored engine's true
+    window, and ratios stay inside [0, 1] for any snapshot pair."""
+    prev = {"ts": 100.0, "requests": 500, "batches": 50, "hits": 400,
+            "misses": 100,
+            "health": {"failovers": 3, "execute_failures": 1},
+            "backends": {"a/spmm": {"requests": 500, "hits": 400,
+                                    "misses": 100}}}
+    cur = {"ts": 110.0, "requests": 45, "batches": 5, "hits": 40,
+           "misses": 5, "health": {"failovers": 0, "execute_failures": 0},
+           "backends": {"a/spmm": {"requests": 45, "hits": 40,
+                                   "misses": 5}}}
+    d = stats_delta(prev, cur)
+    assert d["requests"] == 45          # rebaselined, not clamped to zero
+    assert d["hit_rate"] == pytest.approx(40 / 45)
+    assert 0.0 <= d["hit_rate"] <= 1.0
+    # restart must not fabricate failover/failure deltas either
+    assert d["failovers"] == 0 and d["execute_failures"] == 0
+    b = d["backends"]["a/spmm"]
+    assert b["requests"] == 45
+    assert b["hit_rate"] == pytest.approx(40 / 45)
+    assert 0.0 <= b["hit_rate"] <= 1.0
 
 
 def test_engine_stats_delta_windows():

@@ -142,7 +142,9 @@ def test_cost_model_router_single_dispatch_and_install():
 
 def test_cost_model_router_sticky_repeat_no_redispatch():
     router = CostModelRouter()
-    engine = _engine(router)
+    # warm_lane=False: this test asserts the *router's* sticky memo serves
+    # the repeat step; the warm lane would replay it before routing runs
+    engine = _engine(router, warm_lane=False)
     mats = _mats(3, seed0=3700)
     first = engine.step([KernelRequest(m) for m in mats])
     second = engine.step([KernelRequest(m) for m in mats])

@@ -1,0 +1,416 @@
+"""Differential tests for the fused warm fast path.
+
+The warm lane's correctness story is *differential*: every test here runs
+the same request sequence through two engines — one with ``warm_lane=True``
+(the fused lane) and one with ``warm_lane=False`` (the staged pipeline,
+bit-for-bit the pre-warm-lane engine) — and asserts the responses are
+**bit-identical** (outputs, built block data, configs, cache-hit flags)
+and the accounting agrees (hit counters, dispatch generations, lease
+balance, health successes).  Mix coverage: all-warm repeats, all-cold
+fresh traffic, interleaved warm/cold batches, a breaker tripping mid-run
+(warm table invalidation), and drift-gated fallthrough.
+
+Property-based via ``hypothesis`` when installed; ``tests/_compat.py``
+degrades to a seeded deterministic sampler otherwise, so the suite runs
+on the bare container image.
+
+The threaded stress test (producers hammering ``step()`` while a
+``FaultPlan`` trips a breaker mid-run) carries the ``slow`` marker like
+the other stress tests; everything here also carries ``warm_lane`` so CI
+can run exactly this suite as its own step.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from _compat import given, settings, st
+from repro.data import generate_matrix
+from repro.serving import (FaultPlan, HealthConfig, HealthRegistry,
+                           KernelRequest, SparseKernelEngine, inject_faults)
+from repro.serving.health import CLOSED, OPEN
+
+pytestmark = pytest.mark.warm_lane
+
+TAG = ("tpu_interpret", "spmm")
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _mats(n, seed0=0, n_rows=256, nnz=1200):
+    fams = ("uniform", "banded", "powerlaw", "blockdiag")
+    return [generate_matrix(fams[i % 4], seed=seed0 + i, n_rows=n_rows,
+                            n_cols=n_rows, target_nnz=nnz) for i in range(n)]
+
+
+def _engines(**kw):
+    """One warm-lane engine and one staged reference engine."""
+    warm = SparseKernelEngine(warm_lane=True, **kw)
+    ref = SparseKernelEngine(warm_lane=False, **kw)
+    return warm, ref
+
+
+def _step_both(warm, ref, reqs_a, reqs_b):
+    """Serve the same batch on both engines, returning both responses."""
+    return warm.step(reqs_a), ref.step(reqs_b)
+
+
+def _requests(mats, values_seed=0, with_operand=True, n_cols=8):
+    rng = np.random.default_rng(values_seed)
+    out = []
+    for m in mats:
+        vals = rng.normal(size=m.nnz).astype(np.float32)
+        operand = rng.normal(size=(m.n_cols, n_cols)).astype(np.float32) \
+            if with_operand else None
+        out.append((m, vals, operand))
+    return out
+
+
+def _build(specs):
+    return [KernelRequest(m, v.copy(), "spmm", o) for m, v, o in specs]
+
+
+def _assert_bit_identical(got, want):
+    """Responses from the warm engine vs the staged reference: the entire
+    externally visible result must match bit for bit."""
+    assert len(got) == len(want)
+    for a, b in zip(got, want):
+        assert a.digest == b.digest
+        assert a.config == b.config
+        assert a.cache_hit == b.cache_hit
+        assert a.platform == b.platform
+        assert a.degraded == b.degraded
+        assert a.attempts == b.attempts
+        assert np.array_equal(np.asarray(a.matrix.data),
+                              np.asarray(b.matrix.data))
+        assert (a.output is None) == (b.output is None)
+        if a.output is not None:
+            assert np.array_equal(np.asarray(a.output),
+                                  np.asarray(b.output))
+
+
+def _assert_accounting_agrees(warm, ref, *, warm_steps_expected=None):
+    """stats() deltas agree between the lanes: hits/misses, requests,
+    dispatch generations, breaker successes, and lease balance."""
+    sw, sr = warm.stats(), ref.stats()
+    assert sw["requests"] == sr["requests"]
+    assert sw["batches"] == sr["batches"]
+    assert sw["hits"] == sr["hits"]
+    assert sw["misses"] == sr["misses"]
+    assert sw["arenas"]["generation"] == sr["arenas"]["generation"]
+    assert sw["arenas"]["outstanding_leases"] \
+        == sr["arenas"]["outstanding_leases"]
+    for tag, br in sr["health"]["breakers"].items():
+        bw = sw["health"]["breakers"][tag]
+        assert bw["successes"] == br["successes"]
+        assert bw["failures"] == br["failures"]
+        assert bw["state"] == br["state"]
+    if warm_steps_expected is not None:
+        assert sw["warm_lane"]["steps"] == warm_steps_expected
+    assert sr["warm_lane"]["steps"] == 0
+
+
+# ------------------------------------------------------------- differential
+
+def test_all_warm_repeat_bit_identical():
+    """Steady-state hot traffic: step 1 populates the warm table, steps
+    2..4 are all-warm and must reproduce the staged engine bit for bit."""
+    warm, ref = _engines()
+    specs = _requests(_mats(3, seed0=9_000), values_seed=1)
+    for k in range(4):
+        rw, rr = _step_both(warm, ref, _build(specs), _build(specs))
+        _assert_bit_identical(rw, rr)
+    assert warm.stats()["warm_lane"]["steps"] == 3   # steps 2..4
+    assert warm.stats()["warm_lane"]["requests"] == 9
+    _assert_accounting_agrees(warm, ref, warm_steps_expected=3)
+    warm.release_stream()
+    ref.release_stream()
+
+
+def test_all_cold_traffic_never_takes_lane():
+    warm, ref = _engines()
+    for k in range(3):
+        specs = _requests(_mats(2, seed0=9_100 + 10 * k), values_seed=k)
+        rw, rr = _step_both(warm, ref, _build(specs), _build(specs))
+        _assert_bit_identical(rw, rr)
+    assert warm.stats()["warm_lane"]["steps"] == 0
+    _assert_accounting_agrees(warm, ref)
+    warm.release_stream()
+    ref.release_stream()
+
+
+def test_interleaved_warm_cold_batches_split_once():
+    """Mixed batches: repeats take the lane while fresh patterns run the
+    staged sub-pipeline in the same step — outputs and accounting must
+    still match the staged engine exactly."""
+    warm, ref = _engines()
+    hot = _requests(_mats(2, seed0=9_200), values_seed=3)
+    warm.step(_build(hot))
+    ref.step(_build(hot))
+    for k in range(3):
+        cold = _requests(_mats(2, seed0=9_300 + 10 * k), values_seed=4 + k)
+        mixed = [hot[0], cold[0], hot[1], cold[1]]
+        rw, rr = _step_both(warm, ref, _build(mixed), _build(mixed))
+        _assert_bit_identical(rw, rr)
+    s = warm.stats()["warm_lane"]
+    assert s["steps"] == 3 and s["requests"] == 6    # 2 warm per mixed step
+    _assert_accounting_agrees(warm, ref, warm_steps_expected=3)
+    warm.release_stream()
+    ref.release_stream()
+
+
+def test_prepare_only_traffic_warm_bit_identical():
+    """Operand-less (prepare-only) repeats take the fused build path; the
+    built block data must match the staged engine's bit for bit."""
+    warm, ref = _engines()
+    specs = _requests(_mats(3, seed0=9_400), values_seed=5,
+                      with_operand=False)
+    for _ in range(3):
+        rw, rr = _step_both(warm, ref, _build(specs), _build(specs))
+        _assert_bit_identical(rw, rr)
+    assert warm.stats()["warm_lane"]["steps"] == 2
+    _assert_accounting_agrees(warm, ref, warm_steps_expected=2)
+    warm.release_stream()
+    ref.release_stream()
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(min_value=0, max_value=2**20),
+       n_patterns=st.integers(min_value=1, max_value=3),
+       mix=st.lists(st.integers(min_value=0, max_value=5),
+                    min_size=2, max_size=5),
+       with_operand=st.sampled_from([True, False]))
+def test_warm_lane_differential_property(seed, n_patterns, mix,
+                                         with_operand):
+    """Property: for ANY mix of repeated and fresh patterns across steps,
+    the warm engine is bit-identical to the staged engine and the
+    accounting deltas agree.  ``mix`` draws each step's batch from a
+    rotating window over a pattern pool, so consecutive steps overlap in
+    arbitrary warm/cold proportions."""
+    pool = _requests(_mats(n_patterns + 3, seed0=20_000 + seed % 997),
+                     values_seed=seed, with_operand=with_operand)
+    warm, ref = _engines()
+    for step_i, pick in enumerate(mix):
+        lo = pick % len(pool)
+        batch = [pool[(lo + j) % len(pool)] for j in range(n_patterns)]
+        rw, rr = _step_both(warm, ref, _build(batch), _build(batch))
+        _assert_bit_identical(rw, rr)
+    _assert_accounting_agrees(warm, ref)
+    warm.release_stream()
+    ref.release_stream()
+
+
+# ------------------------------------------------- invalidation / health
+
+def test_breaker_trip_invalidates_warm_entries():
+    """A breaker transition mid-stream: the warm table's entries for the
+    tripped platform are stamped with a stale health generation, so the
+    next probe drops them (warm_invalidation event) and traffic flows
+    back through the router's health gate — outputs still bit-identical
+    to the staged engine, responses degraded on both."""
+    kw = dict(health=HealthRegistry(HealthConfig(consecutive_errors=1,
+                                                 backoff_s=60.0),
+                                    clock=FakeClock()))
+    warm = SparseKernelEngine(warm_lane=True, **kw)
+    ref = SparseKernelEngine(
+        warm_lane=False,
+        health=HealthRegistry(HealthConfig(consecutive_errors=1,
+                                           backoff_s=60.0),
+                              clock=FakeClock()))
+    specs = _requests(_mats(2, seed0=9_500), values_seed=6)
+    for e in (warm, ref):
+        e.step(_build(specs))
+        e.step(_build(specs))               # warm engine: lane serves this
+    assert warm.stats()["warm_lane"]["steps"] == 1
+    # trip the default backend's breaker on both engines
+    fw = inject_faults(warm.backends, *TAG, FaultPlan.fail_calls(0, 2))
+    fr = inject_faults(ref.backends, *TAG, FaultPlan.fail_calls(0, 2))
+    rw = warm.step(_build(specs))
+    rr = ref.step(_build(specs))
+    fw.restore()
+    fr.restore()
+    assert all(r.degraded and r.attempts == 2 for r in rw)
+    _assert_bit_identical(rw, rr)
+    assert warm.health.state(TAG) == OPEN
+    # the tripped step DID take the lane (the probe ran against a still-
+    # closed breaker; the failure struck in execute) — the shared retry
+    # lane served it degraded, mid-lane, identically to the staged engine
+    assert warm.stats()["warm_lane"]["steps"] == 2
+    # ...but the NEXT step cannot: the health generation moved, so the
+    # probe drops the stale entries and falls through to the health gate
+    rw2 = warm.step(_build(specs))
+    rr2 = ref.step(_build(specs))
+    _assert_bit_identical(rw2, rr2)
+    assert warm.stats()["warm_lane"]["steps"] == 2
+    # the stale entries were dropped and the event emitted
+    assert warm.telemetry.warm_invalidations >= 1
+    assert warm.events.events(kind="warm_invalidation")
+    # degraded requests always land in the error ring, lane or no lane
+    assert len(warm.traces(errors=True)) == len(ref.traces(errors=True)) > 0
+    warm.release_stream()
+    ref.release_stream()
+
+
+def test_open_breaker_requests_fall_through_not_warm():
+    """While a circuit is open, previously-warm traffic must keep flowing
+    through the staged health gate (failover rewrite), never the lane."""
+    clk = FakeClock()
+    engine = SparseKernelEngine(
+        warm_lane=True,
+        health=HealthRegistry(HealthConfig(consecutive_errors=1,
+                                           backoff_s=60.0), clock=clk))
+    specs = _requests(_mats(1, seed0=9_600), values_seed=7)
+    engine.step(_build(specs))
+    engine.step(_build(specs))
+    assert engine.stats()["warm_lane"]["steps"] == 1
+    fx = inject_faults(engine.backends, *TAG, FaultPlan.fail_calls(0, 1))
+    engine.step(_build(specs))
+    fx.restore()
+    assert engine.health.state(TAG) == OPEN
+    before = engine.stats()["warm_lane"]["steps"]
+    r = engine.step(_build(specs))
+    assert engine.stats()["warm_lane"]["steps"] == before   # no lane
+    assert r[0].platform != TAG[0]          # health gate failed it over
+    engine.release_stream()
+
+
+def test_recovered_breaker_re_warms():
+    """After the circuit closes again, repeats re-record and the lane
+    resumes — the warm table tracks health generations, not history."""
+    clk = FakeClock()
+    engine = SparseKernelEngine(
+        warm_lane=True,
+        health=HealthRegistry(HealthConfig(consecutive_errors=1,
+                                           backoff_s=1.0), clock=clk))
+    specs = _requests(_mats(1, seed0=9_700), values_seed=8)
+    engine.step(_build(specs))
+    fx = inject_faults(engine.backends, *TAG, FaultPlan.fail_calls(0, 1))
+    engine.step(_build(specs))              # trips the breaker
+    fx.restore()
+    clk.advance(2.0)                        # past backoff: probe allowed
+    engine.step(_build(specs))              # half-open probe succeeds
+    assert engine.health.state(TAG) == CLOSED
+    engine.step(_build(specs))              # records under the new gen
+    before = engine.stats()["warm_lane"]["steps"]
+    r = engine.step(_build(specs))
+    assert engine.stats()["warm_lane"]["steps"] == before + 1
+    assert not r[0].degraded
+    engine.release_stream()
+
+
+def test_drift_gate_falls_through():
+    """``warm_drift_ms=0`` makes any measurable calibration drift fail
+    the gate: once the drift gauge is non-None the lane must decline."""
+    engine = SparseKernelEngine(warm_lane=True, warm_drift_ms=0.0,
+                                warm_sample_rate=1.0)
+    specs = _requests(_mats(1, seed0=9_800), values_seed=9)
+    engine.step(_build(specs))
+    for _ in range(4):
+        engine.step(_build(specs))
+    # sampled warm steps + staged steps feed the drift gauge; once it has
+    # two samples it exceeds the 0ms gate and the lane declines
+    assert engine.telemetry.calibration.drift(TAG[0], op=TAG[1]) is not None
+    before = engine.stats()["warm_lane"]
+    engine.step(_build(specs))
+    after = engine.stats()["warm_lane"]
+    assert after["steps"] == before["steps"]
+    assert after["fallthroughs"] > before["fallthroughs"]
+    engine.release_stream()
+
+
+def test_warm_lane_off_is_staged_engine():
+    engine = SparseKernelEngine(warm_lane=False)
+    specs = _requests(_mats(2, seed0=9_900), values_seed=10)
+    engine.step(_build(specs))
+    engine.step(_build(specs))
+    s = engine.stats()["warm_lane"]
+    assert s["steps"] == 0 and s["requests"] == 0 and s["table"] == 0
+    engine.release_stream()
+
+
+def test_warm_telemetry_sampling_is_deterministic():
+    """warm_sample_rate=0.25 -> exactly every 4th warm step runs the
+    per-request calibration observes (counter sampler, no RNG)."""
+    engine = SparseKernelEngine(warm_lane=True, warm_sample_rate=0.25)
+    specs = _requests(_mats(1, seed0=10_000), values_seed=11)
+    for _ in range(9):                      # 1 cold + 8 warm steps
+        engine.step(_build(specs))
+    s = engine.stats()["warm_lane"]
+    assert s["steps"] == 8
+    assert s["sampled_steps"] == 2          # ceil-spaced 2 of 8 at 1/4
+    engine.release_stream()
+
+
+# ------------------------------------------------------- threaded stress
+
+@pytest.mark.slow
+def test_threaded_warm_stress_with_breaker_trip():
+    """N producers hammer ``step()`` with hot traffic while a fault plan
+    hard-fails a window of executor calls, tripping the default backend's
+    breaker mid-run.  Invariants: zero lost requests (every step returns
+    a full response list), every degraded request retained in the error
+    ring, lease balance returns to zero, and the engine stays consistent
+    (no double-released slots, no stuck load accounting)."""
+    clk = FakeClock()
+    engine = SparseKernelEngine(
+        warm_lane=True,
+        health=HealthRegistry(HealthConfig(consecutive_errors=2,
+                                           backoff_s=1e9), clock=clk))
+    specs = _requests(_mats(4, seed0=10_100), values_seed=12)
+    engine.step(_build(specs))              # populate cache + warm table
+    fx = inject_faults(engine.backends, *TAG,
+                       FaultPlan.fail_calls(20, 24))
+    n_threads, n_steps = 4, 10
+    served = [0] * n_threads
+    degraded = [0] * n_threads
+    errors: list = []
+
+    def worker(t):
+        try:
+            for k in range(n_steps):
+                reqs = _build([specs[(t + k + j) % len(specs)]
+                               for j in range(2)])
+                resp = engine.step(reqs)
+                assert len(resp) == len(reqs)
+                served[t] += len(resp)
+                degraded[t] += sum(r.degraded for r in resp)
+            engine.release_stream()
+        except Exception as e:              # pragma: no cover - fail loud
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    fx.restore()
+    engine.release_stream()
+    assert not errors
+    assert sum(served) == n_threads * n_steps * 2    # zero lost requests
+    # the window fired at least to the trip threshold — once the breaker
+    # opens, the health gate steers traffic off the backend, so later
+    # calls in the fault window may legitimately never happen
+    assert fx.injected["error"] >= 2
+    s = engine.stats()
+    assert s["arenas"]["outstanding_leases"] == 0    # lease balance
+    for tag, load in s["load"].items():
+        assert load["inflight"] == 0                 # no stuck accounting
+    # every degraded request was retained in the error ring (ring is large
+    # enough here that nothing was evicted)
+    assert s["tracing"]["error_recorded"] == sum(degraded) > 0
+    # every degraded request is accounted for: moved by the retry lane
+    # (executor actually failed) or rewritten by the health gate once the
+    # circuit opened — nothing degraded without a recorded cause
+    assert s["health"]["failovers"] + s["health"]["circuit_fast_fails"] \
+        == sum(degraded)
+    assert s["health"]["failovers"] == fx.injected["error"]
