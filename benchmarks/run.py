@@ -56,6 +56,7 @@ def main(argv: list[str] | None = None) -> None:
         ("routing", "benchmarks.serving_routing"),
         ("faults", "benchmarks.serving_faults"),
         ("observability", "benchmarks.serving_observability"),
+        ("shard", "benchmarks.serving_shard"),
     ]
     only = set(argv)
     failures = []

@@ -8,8 +8,11 @@
 #   bash scripts/smoke.sh
 #
 # SMOKE_QUICK=1 runs the reduced CI path: docs check, example, and the quick
-# serving/routing/faults/observability benchmarks — skipping tier-1 (CI runs
-# it as its own step), the slow stress tests, and the bsr_preproc bench.
+# serving/routing/faults/observability/shard benchmarks — skipping tier-1 (CI
+# runs it as its own step), the slow stress tests, and the bsr_preproc bench.
+# The benchmark run exports XLA_FLAGS=--xla_force_host_platform_device_count=8
+# (scoped to that invocation: tier-1 exercises the single-device mesh paths)
+# so the sharded-serving scenarios place replicas over 8 real XLA devices.
 # SMOKE_FAULTS=1 additionally re-runs the degraded-mode fault benchmark
 # standalone (full length) after the gates.
 set -euo pipefail
@@ -59,6 +62,8 @@ for mod in ("repro.serving", "repro.serving.backends", "repro.serving.engine",
             "repro.serving.router", "repro.serving.telemetry",
             "repro.serving.health", "repro.serving.faults",
             "repro.serving.trace", "repro.serving.export",
+            "repro.serving.shard", "repro.launch.mesh",
+            "repro.parallel.sharding",
             "repro.core.autotune", "repro.kernels.ops", "repro.kernels.ref"):
     try:
         __import__(mod)
@@ -67,9 +72,9 @@ for mod in ("repro.serving", "repro.serving.backends", "repro.serving.engine",
 
 # 3. documented entry points resolve
 try:
-    from repro.serving import (BackendRegistry, CostModelRouter,
+    from repro.serving import (BackendRegistry, CostModelRouter, HashRing,
                                KernelBackend, KernelRequest, LoadAwareRouter,
-                               SparseKernelEngine, StaticRouter,
+                               ShardedEngine, SparseKernelEngine, StaticRouter,
                                default_registry, load_grouped, save_backends)
     reg = default_registry()
     for plat in ("tpu_interpret", "tpu_pallas", "cpu_ref"):
@@ -79,7 +84,7 @@ except Exception as e:
 
 # 4. benchmark names named in the docs are registered in benchmarks/run.py
 run_py = Path("benchmarks/run.py").read_text()
-for name in ("serving", "routing", "faults", "observability",
+for name in ("serving", "routing", "faults", "observability", "shard",
              "bsr_preproc", "fig4", "kernel"):
     if f'("{name}"' not in run_py:
         failures.append(f"documented benchmark {name!r} not in benchmarks/run.py")
@@ -106,9 +111,14 @@ if [ "$QUICK" != "1" ]; then
   python -m benchmarks.run bsr_preproc
 fi
 
-echo "== serving + routing + faults + observability benchmarks (quick) -> BENCH_8.json =="
+echo "== serving + routing + faults + observability + shard benchmarks (quick) -> BENCH_9.json =="
+# The 8-device flag is scoped to this invocation: the sharded scenarios
+# need a real multi-device host platform, while tier-1 above runs the
+# stock single-device mesh.  It must be in the environment before jax
+# initializes, which is why it rides the command, not a jax call.
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 REPRO_BENCH_QUICK=1 python -m benchmarks.run serving routing faults \
-  observability --json BENCH_8.json
+  observability shard --json BENCH_9.json
 
 echo "== device_build overlap gate =="
 python - <<'EOF'
@@ -121,7 +131,7 @@ noise tolerance applies — the gate catches the async path becoming
 mode this guards against."""
 import json
 
-doc = json.load(open("BENCH_8.json"))
+doc = json.load(open("BENCH_9.json"))
 by = {r["name"]: r for r in doc["rows"]}
 ov = by["serving/device_build/overlapped_requests_per_s"]["metrics"]["req_per_s"]
 sy = by["serving/device_build/synchronous_requests_per_s"]["metrics"]["req_per_s"]
@@ -146,7 +156,7 @@ over an in-flight generation).  The benchmark itself asserts every
 timed step took the lane and the fused build path."""
 import json
 
-doc = json.load(open("BENCH_8.json"))
+doc = json.load(open("BENCH_9.json"))
 by = {r["name"]: r for r in doc["rows"]}
 e = by["serving/warm_lane/engine_requests_per_s"]["metrics"]
 b = by["serving/warm_lane/pr1_loop_requests_per_s"]["metrics"]
@@ -174,7 +184,7 @@ kill step's work; 3x leaves noise headroom without letting a
 pathological retry path through)."""
 import json
 
-doc = json.load(open("BENCH_8.json"))
+doc = json.load(open("BENCH_9.json"))
 by = {r["name"]: r for r in doc["rows"]}
 m = by["faults/degraded/requests_per_s"]["metrics"]
 print(f"degraded p99={m['p99_ms']:.2f}ms "
@@ -205,7 +215,7 @@ import json
 
 from repro.serving import parse_prometheus_text
 
-doc = json.load(open("BENCH_8.json"))
+doc = json.load(open("BENCH_9.json"))
 by = {r["name"]: r for r in doc["rows"]}
 m = by["observability/tracing_sampled/requests_per_s"]["metrics"]
 print(f"tracing overhead={m['overhead_pct']:.2f}% at "
@@ -224,6 +234,52 @@ assert samples and trace["traceEvents"]
 print(f"error_ring_complete=1 ({e['error_traces']:.0f} traces); "
       f"prometheus scrape {len(samples)} samples; chrome trace "
       f"{len(trace['traceEvents'])} events")
+EOF
+
+echo "== sharded-serving gate =="
+python - <<'EOF'
+"""The sharded fleet must earn its replicas and never trade correctness
+for them: (1) the capacity scenario's 4-replica fleet serves the
+cache-overflowing working set >= 2.5x the single replica's req/s
+(aggregate cache capacity is the mechanism — the single replica
+LRU-thrashes, the fleet goes warm); (2) the live rebalance lost zero
+requests while the fleet grew and shrank under load; (3) the sharded
+outputs matched the unsharded reference bit for bit and the rebalance
+migrated cache rows warm (migrated > 0, featurize delta 0 when
+synchronized); (4) the run really placed replicas over the 8-device
+host mesh the XLA flag stands up."""
+import json
+
+doc = json.load(open("BENCH_9.json"))
+by = {r["name"]: r for r in doc["rows"]}
+cold = by["shard/cold/n1_requests_per_s"]["metrics"]
+print(f"shard capacity speedup={cold['speedup']:.2f}x "
+      f"(n4={by['shard/cold/n4_requests_per_s']['metrics']['req_per_s']:.0f} "
+      f"req/s, n1={cold['req_per_s']:.0f} req/s)")
+assert cold["speedup"] >= 2.5, (
+    f"4-replica fleet {cold['speedup']:.2f}x over one replica on the "
+    f"capacity mix (gate: >=2.5x)")
+ul = by["shard/rebalance/under_load_lost_requests"]["metrics"]
+print(f"rebalance under load: lost={ul['lost_requests']:.0f} "
+      f"served={ul['served']:.0f} rebalances={ul['rebalances']:.0f} "
+      f"migrated={ul['migrated_entries']:.0f}")
+assert ul["lost_requests"] == 0, "rebalance under load lost requests"
+assert ul["rebalances"] == 2, "grow+shrink did not both happen"
+sync = by["shard/rebalance/synchronized"]["metrics"]
+assert sync["outputs_match"] == 1, \
+    "sharded outputs diverged from the unsharded reference"
+assert sync["migrated_entries"] > 0, "rebalance migrated no cache rows"
+assert sync["featurize_delta"] == 0, (
+    f"synchronized rebalance re-featurized "
+    f"{sync['featurize_delta']:.0f} migrated digests")
+dev = by["shard/devices"]["metrics"]
+print(f"devices={dev['n_devices']:.0f} "
+      f"replica spread={dev['distinct_replica_devices']:.0f}")
+assert dev["n_devices"] == 8, (
+    f"bench saw {dev['n_devices']:.0f} XLA devices — the "
+    f"--xla_force_host_platform_device_count=8 flag did not take")
+assert dev["distinct_replica_devices"] == 4, \
+    "4-replica fleet did not spread over 4 distinct mesh devices"
 EOF
 
 if [ "${SMOKE_FAULTS:-0}" = "1" ]; then

@@ -461,6 +461,13 @@ class AutotuneCache:
                 self._entries.popitem(last=False)
                 self.evictions += 1
 
+    def pop(self, key) -> TunedKernel | None:
+        """Remove and return an entry without touching the hit/miss or
+        eviction counters — a migration (shard rebalance re-homing a
+        digest to its new owner) is neither a miss nor an eviction."""
+        with self._lock:
+            return self._entries.pop(key, None)
+
     def items(self) -> list[tuple]:
         """Snapshot of (key, entry) pairs in LRU order (oldest first) —
         what ``repro.serving.persist`` serializes."""

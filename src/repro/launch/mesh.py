@@ -19,5 +19,10 @@ def make_host_mesh(model_axis: int = 1):
     """Degenerate mesh over the actually-available local devices (used by the
     CPU examples/tests; on a real slice this is the per-host debug mesh)."""
     n = len(jax.devices())
+    if not 1 <= model_axis <= n:
+        raise ValueError(
+            f"model_axis={model_axis} is outside [1, {n}]: the host mesh "
+            f"has only len(jax.devices())={n} devices, so the data axis "
+            f"would have zero extent")
     data = n // model_axis
     return jax.make_mesh((data, model_axis), ("data", "model"))

@@ -161,6 +161,19 @@ def tree_shardings(mesh: Mesh, tree, n_experts=0, serving_1d=False):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def replica_devices(mesh: Mesh) -> list:
+    """One placement target per serving replica: the lead device of each
+    'data' slice of the mesh (replicas are data-parallel — each owns a shard
+    of the pattern-digest space, not of any one tensor). Falls back to the
+    flattened device list for meshes without a 'data' axis."""
+    arr = np.asarray(mesh.devices)
+    names = list(mesh.axis_names)
+    if "data" in names and arr.ndim == len(names):
+        arr = np.moveaxis(arr, names.index("data"), 0)
+        return list(arr.reshape(arr.shape[0], -1)[:, 0])
+    return list(arr.reshape(-1))
+
+
 HBM_SERVE_BUDGET = 10 * 2**30    # leave headroom for caches + activations
 
 

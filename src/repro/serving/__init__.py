@@ -70,6 +70,14 @@ subsystem owns that layer:
   windows make the async run-ahead visible), and ``stats_delta``
   (windowed req/s + hit-rate between two ``stats()`` snapshots;
   ``engine.stats_delta()`` keeps the previous snapshot for you).
+* ``shard`` — horizontal scale: ``ShardedEngine`` fronts N engine
+  replicas behind a consistent-hash ring (``HashRing``, virtual nodes +
+  bounded-load overflow to the ring successor) keyed on pattern digest,
+  each replica on its own serving thread and mesh device slot.  Cache
+  capacity, autotune throughput, and build bandwidth scale with replica
+  count; replica add/remove re-homes only the digests whose ring
+  ownership moved (cache rows migrate warm via the persistence
+  namespaces), and one merged cache file warm-starts any layout.
 * ``faults`` — a deterministic, seedable fault-injection harness
   (``FaultPlan``: raise-on-nth-call windows, NaN outputs, latency spikes,
   plus torn-write/bit-rot helpers for persistence files) that wraps any
@@ -116,6 +124,7 @@ from repro.serving.persist import (CACHE_FORMAT_VERSION, GroupedCacheLoad,
                                    LEGACY_NAMESPACE, load_cache,
                                    load_grouped, save_backends, save_cache,
                                    warm_start)
+from repro.serving.shard import HashRing, ShardedEngine
 from repro.serving.router import (CostModelRouter, LoadAwareRouter,
                                   RouteDecision, Router, RoutingContext,
                                   StaticRouter)
@@ -136,6 +145,7 @@ __all__ = ["SparseKernelEngine", "KernelRequest", "KernelResponse",
            "RouteCalibration",
            "BackendHealth", "HealthConfig", "HealthRegistry",
            "OutputGuardError",
+           "HashRing", "ShardedEngine",
            "Span", "Trace", "FlightRecorder", "EventLog",
            "prometheus_text", "parse_prometheus_text", "prom_get",
            "chrome_trace", "stats_delta",

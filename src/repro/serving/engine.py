@@ -1511,6 +1511,9 @@ class SparseKernelEngine:
         if target is None:
             raise ValueError("no persist_path configured and none given")
         out = save_backends(self.backends, target)
-        self.telemetry.count(persist_saves=1)
-        self.events.emit("persist_save", path=str(out))
+        entries = sum(len(c) for caches in
+                      self.backends.caches_by_platform().values()
+                      for c in caches)
+        self.telemetry.count(persist_saves=1, persist_saved_entries=entries)
+        self.events.emit("persist_save", path=str(out), entries=entries)
         return out

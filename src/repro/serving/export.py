@@ -63,8 +63,9 @@ def _labels(d: dict) -> str:
 
 
 class _Writer:
-    def __init__(self, namespace: str):
+    def __init__(self, namespace: str, base_labels: dict | None = None):
         self.ns = namespace
+        self.base = dict(base_labels or {})
         self.lines: list[str] = []
         self._typed: set[str] = set()
 
@@ -77,7 +78,8 @@ class _Writer:
         return full
 
     def sample(self, full: str, value, labels: dict | None = None) -> None:
-        self.lines.append(f"{full}{_labels(labels or {})} {_fmt(value)}")
+        merged = {**self.base, **(labels or {})}
+        self.lines.append(f"{full}{_labels(merged)} {_fmt(value)}")
 
     def scalar(self, name: str, kind: str, help_: str, value,
                labels: dict | None = None) -> None:
@@ -97,7 +99,8 @@ class _Writer:
         return "\n".join(self.lines) + "\n"
 
 
-def prometheus_text(engine, namespace: str = "repro_serving") -> str:
+def prometheus_text(engine, namespace: str = "repro_serving",
+                    labels: dict | None = None) -> str:
     """Render one engine's full telemetry as Prometheus text exposition.
 
     Histogram bucket counts are copied from under the telemetry lock
@@ -105,9 +108,14 @@ def prometheus_text(engine, namespace: str = "repro_serving") -> str:
     ``backend_serve_histograms``) and rendered outside it; everything
     else reads from one ``stats()`` snapshot.  The output round-trips
     through ``parse_prometheus_text``.
+
+    ``labels`` (optional) is merged into **every** emitted series —
+    how ``ShardedEngine`` stamps each replica's exposition with its
+    ``shard`` id so N replicas' scrapes concatenate into one multi-shard
+    view without series collisions.  Per-series labels win on key clash.
     """
     s = engine.stats()
-    w = _Writer(namespace)
+    w = _Writer(namespace, labels)
 
     for name, help_ in (("requests", "requests served"),
                         ("batches", "micro-batches served"),
@@ -118,6 +126,8 @@ def prometheus_text(engine, namespace: str = "repro_serving") -> str:
                         ("warm_start_entries", "cache entries warm-started"),
                         ("warm_start_skipped", "persisted entries skipped"),
                         ("persist_saves", "cache files saved"),
+                        ("persist_saved_entries",
+                         "cache entries written by saves"),
                         ("persist_load_failures", "unreadable cache files"),
                         ("persist_quarantined", "cache files quarantined")):
         w.scalar(f"{name}_total", "counter", help_, s[name])

@@ -286,6 +286,13 @@ def _quarantine_file(path: Path, *, rename: bool) -> bool:
             os.replace(path, target)
         else:
             shutil.copyfile(path, target)
+            # the copy is evidence — fsync it like every other persistence
+            # write path, so the quarantine itself survives power loss
+            fd = os.open(target, os.O_RDONLY)
+            try:
+                os.fsync(fd)
+            finally:
+                os.close(fd)
         warnings.warn(f"autotune cache quarantined to {target}")
         return True
     except OSError:

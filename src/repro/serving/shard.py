@@ -1,0 +1,689 @@
+"""Sharded multi-replica serving — horizontal scale for the digest space.
+
+A single ``SparseKernelEngine`` tops out at one host's cache capacity and
+one warm lane's throughput.  ``ShardedEngine`` fronts N engine replicas
+behind a **consistent-hash ring keyed on pattern digest**, so cache
+capacity, autotune throughput, and build bandwidth all scale with replica
+count while each digest keeps landing on the replica that already holds
+its tuned entry, warm-lane decision, and arena buffers:
+
+``HashRing``
+    Deterministic consistent hashing (blake2b) with virtual nodes for
+    balance.  Stability is the whole point: removing one of N nodes
+    re-homes *only* that node's keys (to their ring successors — ~1/N of
+    the space), and re-adding it restores the original assignment bit for
+    bit, because ring points depend only on ``(node, vnode)`` — never on
+    membership history.
+
+``ShardedEngine.step(requests)``
+    Slots in as a router *above* the engine's ``step()`` seam: the batch
+    is digested once (identity-memoized, same trick as the engine's),
+    partitioned by ring owner, and each sub-batch is served by its
+    replica — staged pipeline, warm lane, circuit breakers, retry lane,
+    and tracing all inherited unchanged.  Responses reassemble in request
+    order.  **Bounded-load overflow**: when a replica's shard-level
+    ``BackendLoad`` sits at ``max_inflight``, the request routes to its
+    ring *successor* instead (counted in ``stats()["routing"]
+    ["overflows"]``); if the successor is saturated too the owner serves
+    it anyway — the ring degrades to plain consistent hashing and never
+    drops a request.
+
+    Each replica is served by its **own dedicated worker thread**: the
+    engine's double-buffer lease protocol is per calling thread, so
+    pinning one serving stream per replica preserves the two-generation
+    run-ahead exactly as if each replica were driven by its own process.
+    (``parallel=False`` serves sub-batches inline in the caller's thread
+    — each engine still sees a single consistent stream.)
+
+**Device placement.**  Replicas place their work over an honest
+multi-device mesh: pass ``mesh=make_host_mesh()`` (``repro.launch.mesh``)
+— stood up under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+this is 8 real XLA devices on one CPU host — and each replica executes
+under ``jax.default_device(dev)`` for its ``parallel.sharding.
+replica_devices`` slot (replica i -> data-slice i, round-robin when
+replicas outnumber slices).
+
+**Warm-start merge.**  ``ShardedEngine(persist_path=...)`` restores one
+namespaced cache file (any engine's — or a previous shard layout's merged
+``save()``) and routes every entry to its ring owner, so N replicas
+warm-start from a single file regardless of who wrote it.  ``save()`` is
+the inverse: every replica's caches merge (per-platform, digest-deduped)
+into one atomically-committed file a future layout can re-split.
+
+**Rebalance.**  ``add_replica()`` / ``remove_replica(rid)`` re-home *only*
+the digests whose ring ownership actually moved (the consistent-hashing
+guarantee): the source replica's caches round-trip through
+``persist.save_backends``/``load_grouped`` — the same validated,
+CRC-checked namespace view the warm-start path uses — and each moved
+entry's autotune cache row is installed in its new owner's backend (the
+source row is popped) with the dest arena prebuilt, so surviving replicas
+never go cold and the moved digests' first post-rebalance request is a
+cache hit, not a featurization.  Removal quiesces the leaving replica
+first (ring exit -> queued work drains -> migrate -> teardown): requests
+already assigned to it still complete — zero lost requests — and
+everything it learned moves to the survivors.
+
+**Observability.**  ``stats()`` aggregates across replicas (plus a
+``"by_shard"`` section of full per-replica snapshots and shard-router
+counters); ``prometheus_text()`` concatenates every replica's exposition
+with a ``shard="<rid>"`` label stamped on *every* series (the
+``export.prometheus_text(labels=...)`` hook) plus shard-router series, so
+one scrape shows the whole fleet without series collisions.
+"""
+from __future__ import annotations
+
+import bisect
+import hashlib
+import shutil
+import tempfile
+import threading
+import time
+import weakref
+from collections import OrderedDict
+from concurrent.futures import ThreadPoolExecutor
+from pathlib import Path
+
+import jax
+
+from repro.serving.engine import SparseKernelEngine
+from repro.serving.export import _Writer, prometheus_text
+from repro.serving.persist import (LEGACY_NAMESPACE, load_grouped,
+                                   save_backends)
+
+__all__ = ["HashRing", "ShardedEngine"]
+
+
+class HashRing:
+    """Consistent-hash ring with virtual nodes.
+
+    ``vnodes`` points per node are placed at
+    ``blake2b(f"{node}#{i}")`` positions on a 64-bit ring; a key is owned
+    by the first point clockwise of ``blake2b(key)``.  Placement depends
+    only on the node name, so membership changes move the minimum key
+    range: ``remove(n)`` re-homes exactly the keys ``n`` owned (to their
+    successors), and a later ``add(n)`` puts every one of them back.
+    """
+
+    def __init__(self, nodes=(), vnodes: int = 64):
+        if vnodes < 1:
+            raise ValueError(f"vnodes must be >= 1, got {vnodes}")
+        self.vnodes = int(vnodes)
+        self._points: list[tuple[int, str]] = []    # sorted (hash, node)
+        self._nodes: set[str] = set()
+        for node in nodes:
+            self.add(node)
+
+    @staticmethod
+    def _hash(key: str) -> int:
+        return int.from_bytes(
+            hashlib.blake2b(key.encode(), digest_size=8).digest(), "big")
+
+    def __len__(self) -> int:
+        return len(self._nodes)
+
+    def __contains__(self, node: str) -> bool:
+        return node in self._nodes
+
+    def nodes(self) -> list[str]:
+        return sorted(self._nodes)
+
+    def add(self, node: str) -> None:
+        if node in self._nodes:
+            raise ValueError(f"node {node!r} already on the ring")
+        self._nodes.add(node)
+        for v in range(self.vnodes):
+            bisect.insort(self._points, (self._hash(f"{node}#{v}"), node))
+
+    def remove(self, node: str) -> None:
+        if node not in self._nodes:
+            raise KeyError(f"node {node!r} not on the ring")
+        self._nodes.discard(node)
+        self._points = [p for p in self._points if p[1] != node]
+
+    def _index(self, key: str) -> int:
+        # ("" sorts before any node name, so a key whose hash collides
+        # with a ring point maps to that point — deterministically)
+        i = bisect.bisect_left(self._points, (self._hash(key), ""))
+        return 0 if i == len(self._points) else i
+
+    def owner(self, key: str) -> str:
+        """The node owning ``key`` (first ring point clockwise)."""
+        if not self._points:
+            raise KeyError("ring is empty")
+        return self._points[self._index(key)][1]
+
+    def successor(self, key: str) -> str | None:
+        """The first *distinct* node clockwise of ``key``'s owner — the
+        bounded-load overflow target.  ``None`` on a single-node ring."""
+        if len(self._nodes) < 2:
+            return None
+        pts = self._points
+        i = self._index(key)
+        own = pts[i][1]
+        for j in range(1, len(pts)):
+            node = pts[(i + j) % len(pts)][1]
+            if node != own:
+                return node
+        return None
+
+    def assignment(self, keys) -> dict[str, str]:
+        """``{key: owner}`` for a batch of keys — what the stability
+        property tests compare across membership changes."""
+        return {k: self.owner(k) for k in keys}
+
+
+class _MergedEntries:
+    """Digest-deduped ``{key: entry}`` with the ``.items()`` face
+    ``persist.save_backends`` serializes (last writer wins, like a load)."""
+
+    def __init__(self):
+        self._d: dict = {}
+
+    def put(self, key, entry) -> None:
+        self._d[key] = entry
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def items(self) -> list[tuple]:
+        return list(self._d.items())
+
+
+class _Replica:
+    """One engine replica: its id, engine, placement device, shard-level
+    load counter, and (in parallel mode) its dedicated serving thread."""
+
+    def __init__(self, rid: str, engine: SparseKernelEngine, device,
+                 parallel: bool):
+        from repro.serving.backends import BackendLoad
+        self.rid = rid
+        self.engine = engine
+        self.device = device
+        self.load = BackendLoad()
+        self.pool = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix=f"shard-{rid}") \
+            if parallel else None
+
+    def run(self, fn, *args):
+        """Run ``fn`` on this replica's serving thread (inline when
+        ``parallel=False``) under its placement device."""
+        if self.pool is None:
+            return self._placed(fn, *args)
+        return self.pool.submit(self._placed, fn, *args).result()
+
+    def submit(self, fn, *args):
+        assert self.pool is not None
+        return self.pool.submit(self._placed, fn, *args)
+
+    def _placed(self, fn, *args):
+        if self.device is not None:
+            with jax.default_device(self.device):
+                return fn(*args)
+        return fn(*args)
+
+
+class ShardedEngine:
+    """N ``SparseKernelEngine`` replicas behind a consistent-hash ring.
+
+    Args:
+        n_replicas: replicas to stand up at construction.
+        engine_factory: ``(rid, device) -> SparseKernelEngine`` — build
+            one replica (share a trained ``Autotuner`` across replicas
+            here, give each its own ``KernelAutotuner`` cache).  Default
+            builds ``SparseKernelEngine(**engine_kwargs)``.
+        vnodes: virtual nodes per replica on the ring.
+        max_inflight: shard-level bounded-load threshold — with a
+            replica's in-flight depth (requests submitted to its serving
+            thread and not yet returned, including this batch's prior
+            assignments) at or past this, traffic overflows to the ring
+            successor.  ``None`` (default) disables overflow.
+        persist_path: warm-start merge source at construction and the
+            default ``save()`` target.  Owned by the shard layer — pass
+            replica persistence through ``engine_factory`` if you really
+            want per-replica files.
+        mesh: a ``jax`` Mesh (e.g. ``launch.mesh.make_host_mesh()``);
+            replicas place round-robin over its
+            ``parallel.sharding.replica_devices`` data slices.
+        devices: explicit placement device list (overrides ``mesh``).
+            Default: ``jax.devices()``.
+        parallel: serve replicas on dedicated worker threads (default).
+            ``False`` serves sub-batches inline, sequentially.
+        engine_kwargs: forwarded to ``SparseKernelEngine`` by the default
+            factory (``cache_size=...``, ``router=...``, ...).
+    """
+
+    def __init__(self, n_replicas: int = 2, *, engine_factory=None,
+                 vnodes: int = 64, max_inflight: int | None = None,
+                 persist_path: str | Path | None = None,
+                 mesh=None, devices=None, parallel: bool = True,
+                 **engine_kwargs):
+        if n_replicas < 1:
+            raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+        if "persist_path" in engine_kwargs:
+            raise ValueError(
+                "persist_path belongs to the shard layer (warm-start merge "
+                "+ merged save); build per-replica persistence through "
+                "engine_factory instead")
+        if engine_factory is not None and engine_kwargs:
+            raise ValueError("pass engine_kwargs only with the default "
+                             "factory")
+        self._factory = engine_factory or (
+            lambda rid, device: SparseKernelEngine(**engine_kwargs))
+        if devices is None:
+            if mesh is not None:
+                from repro.parallel.sharding import replica_devices
+                devices = replica_devices(mesh)
+            else:
+                devices = jax.devices()
+        self._devices = list(devices)
+        self.max_inflight = max_inflight
+        self.persist_path = Path(persist_path) if persist_path else None
+        self._parallel = bool(parallel)
+        self._lock = threading.Lock()       # ring + replica map + counters
+        self._reb_lock = threading.Lock()   # serializes rebalances
+        self._ring = HashRing(vnodes=vnodes)
+        self._replicas: OrderedDict[str, _Replica] = OrderedDict()
+        self._next_id = 0
+        self._routed: dict[str, int] = {}
+        self._counters = {"steps": 0, "requests": 0, "overflows": 0,
+                          "rebalances": 0, "migrated_entries": 0,
+                          "warm_start_entries": 0, "warm_start_skipped": 0,
+                          "persist_saves": 0, "persist_saved_entries": 0}
+        # id(mat) -> (digest, weakref): the engine's identity memo, at the
+        # shard layer — warm traffic pays the digest hash once, not once
+        # per step per layer
+        self._digest_memo: dict = {}
+        for _ in range(n_replicas):
+            rep = self._new_replica()
+            self._replicas[rep.rid] = rep
+            self._ring.add(rep.rid)
+        if self.persist_path is not None:
+            self._warm_start_merge()
+
+    # ------------------------------------------------------------ replicas
+
+    def _new_replica(self, engine: SparseKernelEngine | None = None
+                     ) -> _Replica:
+        rid = f"r{self._next_id}"
+        self._next_id += 1
+        device = self._devices[len(self._replicas) % len(self._devices)] \
+            if self._devices else None
+        if engine is None:
+            engine = self._factory(rid, device)
+        return _Replica(rid, engine, device, self._parallel)
+
+    @property
+    def replica_ids(self) -> list[str]:
+        with self._lock:
+            return list(self._replicas)
+
+    def replica(self, rid: str) -> SparseKernelEngine:
+        with self._lock:
+            return self._replicas[rid].engine
+
+    def owner_of(self, digest: str) -> str:
+        """The replica id currently owning ``digest`` on the ring."""
+        with self._lock:
+            return self._ring.owner(digest)
+
+    # ------------------------------------------------------------- serving
+
+    def _digest(self, mat) -> str:
+        from repro.core.autotune import matrix_digest
+        memo = self._digest_memo
+        key = id(mat)
+        hit = memo.get(key)
+        if hit is not None and hit[1]() is mat:
+            return hit[0]
+        dg = matrix_digest(mat)
+        try:
+            ref = weakref.ref(mat, lambda _r, _k=key: memo.pop(_k, None))
+        except TypeError:
+            return dg
+        memo[key] = (dg, ref)
+        return dg
+
+    def step(self, requests: list) -> list:
+        """Serve one micro-batch across the replicas; responses return in
+        request order.  Assignment (ring owner + bounded-load overflow),
+        load accounting, and sub-batch submission happen atomically under
+        the shard lock, so a concurrent ``remove_replica`` can never strand
+        a request: a replica leaves the ring *before* its queue is drained,
+        and anything already queued still completes."""
+        if not requests:
+            return []
+        digests = [self._digest(r.mat) for r in requests]
+        with self._lock:
+            if not self._replicas:
+                raise RuntimeError("ShardedEngine has no replicas")
+            groups: OrderedDict[str, list[int]] = OrderedDict()
+            planned: dict[str, int] = {}
+            for i, dg in enumerate(digests):
+                rid = self._ring.owner(dg)
+                if self.max_inflight is not None:
+                    depth = (self._replicas[rid].load.inflight
+                             + planned.get(rid, 0))
+                    if depth >= self.max_inflight:
+                        alt = self._ring.successor(dg)
+                        if alt is not None and (
+                                self._replicas[alt].load.inflight
+                                + planned.get(alt, 0)) < self.max_inflight:
+                            rid = alt
+                            self._counters["overflows"] += 1
+                        # both saturated: the owner serves it anyway —
+                        # bounded load sheds to the successor, never drops
+                planned[rid] = planned.get(rid, 0) + 1
+                groups.setdefault(rid, []).append(i)
+            dispatch = []
+            for rid, idxs in groups.items():
+                rep = self._replicas[rid]
+                rep.load.begin(len(idxs))
+                self._routed[rid] = self._routed.get(rid, 0) + len(idxs)
+                sub = [requests[i] for i in idxs]
+                fut = rep.submit(rep.engine.step, sub) \
+                    if self._parallel else None
+                dispatch.append((rep, idxs, sub, fut))
+            self._counters["steps"] += 1
+            self._counters["requests"] += len(requests)
+        out: list = [None] * len(requests)
+        err: BaseException | None = None
+        for rep, idxs, sub, fut in dispatch:
+            try:
+                resp = fut.result() if fut is not None \
+                    else rep.run(rep.engine.step, sub)
+            except BaseException as e:      # noqa: BLE001 — re-raised below
+                if err is None:
+                    err = e
+                resp = None
+            finally:
+                rep.load.end(len(idxs))
+            if resp is not None:
+                for k, i in enumerate(idxs):
+                    out[i] = resp[k]
+        if err is not None:
+            raise err
+        return out
+
+    def drain(self) -> None:
+        """Force completion of every replica's in-flight work (each on its
+        own serving thread, so the right stream's leases release)."""
+        with self._lock:
+            reps = list(self._replicas.values())
+        for rep in reps:
+            rep.run(rep.engine.drain)
+
+    def close(self) -> None:
+        """Drain and tear down the serving threads.  Idempotent."""
+        with self._lock:
+            reps = list(self._replicas.values())
+        for rep in reps:
+            try:
+                rep.run(rep.engine.drain)
+            except Exception:
+                pass
+            if rep.pool is not None:
+                rep.pool.shutdown(wait=True)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # ----------------------------------------------------------- rebalance
+
+    def add_replica(self, engine: SparseKernelEngine | None = None) -> str:
+        """Stand up one more replica and re-home *only* the digests whose
+        ring ownership moved to it (their cache rows migrate warm, dest
+        arenas prebuilt).  Serving continues throughout; a moved digest
+        served mid-migration is a cold miss on the new owner, never an
+        error.  Returns the new replica id."""
+        with self._reb_lock:
+            rep = self._new_replica(engine)
+            with self._lock:
+                self._replicas[rep.rid] = rep
+                self._ring.add(rep.rid)
+                sources = [r for r in self._replicas.values()
+                           if r.rid != rep.rid]
+                self._counters["rebalances"] += 1
+            self._migrate(sources)
+            return rep.rid
+
+    def remove_replica(self, rid: str) -> int:
+        """Quiesce and retire one replica: it leaves the ring (no new
+        assignments), its queued work drains (zero lost requests), every
+        cache row it owned migrates to the digests' new ring owners, and
+        its serving thread shuts down.  Returns the number of migrated
+        entries."""
+        with self._reb_lock:
+            with self._lock:
+                rep = self._replicas.get(rid)
+                if rep is None:
+                    raise KeyError(f"no replica {rid!r}")
+                if len(self._replicas) <= 1:
+                    raise ValueError("cannot remove the last replica")
+                self._ring.remove(rid)
+                self._counters["rebalances"] += 1
+            # anything assigned before the ring exit was already submitted
+            # (assignment+submit are atomic under the lock) — drain it
+            rep.run(rep.engine.drain)
+            if rep.pool is not None:
+                rep.pool.shutdown(wait=True)
+            moved = self._migrate([rep])
+            with self._lock:
+                del self._replicas[rid]
+            return moved
+
+    def _migrate(self, sources: list[_Replica]) -> int:
+        """Re-home every source cache row whose digest's ring owner is no
+        longer the source, via a ``save_backends``/``load_grouped`` round
+        trip — the same validated namespace view the warm-start path
+        trusts, so a migration can never install an entry a cold load
+        would have rejected.  Runs under ``_reb_lock``; the ring is stable
+        while it works."""
+        moved = 0
+        tmpdir = None
+        try:
+            for src in sources:
+                if not any(len(c) for caches in
+                           src.engine.backends.caches_by_platform().values()
+                           for c in caches):
+                    continue
+                if tmpdir is None:
+                    tmpdir = Path(tempfile.mkdtemp(prefix="shard_migrate_"))
+                tmp = tmpdir / f"{src.rid}.npz"
+                # engine.save counts persist_saves/persist_saved_entries on
+                # the source — migrations are observable in its stats()
+                src.engine.save(tmp)
+                loaded = load_grouped(tmp)
+                if loaded is None:
+                    continue
+                with self._lock:
+                    owner = {dg: self._ring.owner(dg)
+                             for tag, items in loaded.entries.items()
+                             for (_op, dg), _e in items}
+                    reps = dict(self._replicas)
+                for tag, items in loaded.entries.items():
+                    for (op, dg), entry in items:
+                        if owner[dg] == src.rid:
+                            continue
+                        dest = reps.get(owner[dg])
+                        if dest is None:
+                            continue
+                        platform = src.engine.default_platform \
+                            if tag is LEGACY_NAMESPACE else tag
+                        if (platform, op) not in dest.engine.backends:
+                            continue
+                        be = dest.engine.backends.get(platform, op)
+                        be.tuner.cache.put((op, dg), entry)
+                        # prebuild the dest arena so the first post-
+                        # rebalance request scatters into a live slot
+                        dest.engine._arena_for((platform, op, dg), entry)
+                        src_be = src.engine.backends.get(platform, op)
+                        src_be.tuner.cache.pop((op, dg))
+                        moved += 1
+        finally:
+            if tmpdir is not None:
+                shutil.rmtree(tmpdir, ignore_errors=True)
+        with self._lock:
+            self._counters["migrated_entries"] += moved
+        return moved
+
+    # --------------------------------------------------------- persistence
+
+    def _warm_start_merge(self) -> None:
+        """Restore one cache file and route every entry to its ring owner
+        — N replicas warm-start from a single file written by any previous
+        layout (one engine, or a different replica count)."""
+        loaded = load_grouped(self.persist_path, quarantine=True)
+        if loaded is None:
+            return
+        restored = skipped = 0
+        for tag, items in loaded.entries.items():
+            for (op, dg), entry in items:
+                rep = self._replicas[self._ring.owner(dg)]
+                eng = rep.engine
+                platform = eng.default_platform \
+                    if tag is LEGACY_NAMESPACE else tag
+                if (platform, op) in eng.backends:
+                    eng.backends.get(platform, op).tuner.cache.put(
+                        (op, dg), entry)
+                    eng._arena_for((platform, op, dg), entry)
+                    eng.telemetry.count(warm_start_entries=1)
+                    restored += 1
+                else:
+                    skipped += 1
+        with self._lock:
+            self._counters["warm_start_entries"] += restored
+            self._counters["warm_start_skipped"] += skipped + loaded.skipped
+
+    def save(self, path: str | Path | None = None) -> Path:
+        """Merge every replica's caches into one namespaced file (digest-
+        deduped per platform, atomically committed) — the cross-replica
+        warm-start artifact a future layout re-splits by ring ownership."""
+        target = Path(path) if path is not None else self.persist_path
+        if target is None:
+            raise ValueError("no persist_path configured and none given")
+        merged: dict[str, _MergedEntries] = {}
+        with self._lock:
+            reps = list(self._replicas.values())
+        for rep in reps:
+            for plat, caches in \
+                    rep.engine.backends.caches_by_platform().items():
+                view = merged.setdefault(plat, _MergedEntries())
+                for cache in caches:
+                    for key, entry in cache.items():
+                        view.put(key, entry)
+        out = save_backends({plat: [view] for plat, view in merged.items()},
+                            target)
+        total = sum(len(v) for v in merged.values())
+        with self._lock:
+            self._counters["persist_saves"] += 1
+            self._counters["persist_saved_entries"] += total
+        return out
+
+    # ------------------------------------------------------- observability
+
+    @property
+    def featurize_calls(self) -> int:
+        with self._lock:
+            reps = list(self._replicas.values())
+        return sum(rep.engine.featurize_calls for rep in reps)
+
+    def stats(self) -> dict:
+        """Aggregate counters across replicas plus the shard router's own
+        accounting.  ``"aggregate"`` sums the fleet; ``"routing"`` is the
+        shard layer (per-shard request shares, bounded-load overflows,
+        rebalances, migrated/warm-started entries, merged saves);
+        ``"by_shard"`` holds each replica's full ``stats()`` snapshot."""
+        with self._lock:
+            reps = list(self._replicas.items())
+            ring_nodes = self._ring.nodes()
+            vnodes = self._ring.vnodes
+            counters = dict(self._counters)
+            routed = dict(self._routed)
+            loads = {rid: rep.load.snapshot() for rid, rep in reps}
+            devices = {rid: str(rep.device) for rid, rep in reps}
+        per = {rid: rep.engine.stats() for rid, rep in reps}
+        agg = {
+            "requests": sum(s["requests"] for s in per.values()),
+            "batches": sum(s["batches"] for s in per.values()),
+            "hits": sum(s["hits"] for s in per.values()),
+            "misses": sum(s["misses"] for s in per.values()),
+            "featurize_calls": sum(s["featurize_calls"]
+                                   for s in per.values()),
+            "failovers": sum(s["health"]["failovers"] for s in per.values()),
+            "execute_failures": sum(s["health"]["execute_failures"]
+                                    for s in per.values()),
+            "warm_start_entries": sum(s["warm_start_entries"]
+                                      for s in per.values()),
+            "persist_saves": sum(s["persist_saves"] for s in per.values()),
+            "persist_saved_entries": sum(s["persist_saved_entries"]
+                                         for s in per.values()),
+            "cache_size": sum(c["size"] for s in per.values()
+                              for c in s["caches"].values()),
+            "cache_capacity": sum(c["maxsize"] for s in per.values()
+                                  for c in s["caches"].values()),
+        }
+        served = agg["hits"] + agg["misses"]
+        agg["hit_rate"] = agg["hits"] / served if served else 0.0
+        return {
+            "replicas": len(per),
+            "ring": {"nodes": ring_nodes, "vnodes": vnodes},
+            "routing": {
+                "by_shard": routed,
+                "steps": counters["steps"],
+                "requests": counters["requests"],
+                "overflows": counters["overflows"],
+                "rebalances": counters["rebalances"],
+                "migrated_entries": counters["migrated_entries"],
+                "warm_start_entries": counters["warm_start_entries"],
+                "warm_start_skipped": counters["warm_start_skipped"],
+                "merged_saves": counters["persist_saves"],
+                "merged_saved_entries": counters["persist_saved_entries"],
+                "max_inflight": self.max_inflight,
+            },
+            "load": loads,
+            "devices": devices,
+            "aggregate": agg,
+            "by_shard": per,
+            "ts": time.monotonic(),
+        }
+
+    def prometheus_text(self, namespace: str = "repro_serving") -> str:
+        """One exposition for the whole fleet: every replica's full
+        ``export.prometheus_text`` with ``shard="<rid>"`` stamped on every
+        series, followed by the shard router's own series.  Parses with
+        ``parse_prometheus_text`` (duplicate HELP/TYPE headers across
+        replica sections are comments to the parser)."""
+        with self._lock:
+            reps = list(self._replicas.items())
+        parts = [prometheus_text(rep.engine, namespace,
+                                 labels={"shard": rid})
+                 for rid, rep in reps]
+        s = self.stats()
+        w = _Writer(namespace)
+        w.scalar("shard_replicas", "gauge", "live engine replicas",
+                 s["replicas"])
+        full = w.head("shard_routed_requests_total", "counter",
+                      "requests routed per shard")
+        for rid, n in sorted(s["routing"]["by_shard"].items()):
+            w.sample(full, n, {"shard": rid})
+        full = w.head("shard_inflight", "gauge",
+                      "shard-level in-flight depth")
+        for rid, load in sorted(s["load"].items()):
+            w.sample(full, load["inflight"], {"shard": rid})
+        for name, help_ in (("overflows", "bounded-load overflow re-routes"),
+                            ("rebalances", "replica add/remove events"),
+                            ("migrated_entries",
+                             "cache rows re-homed by rebalances"),
+                            ("warm_start_entries",
+                             "entries restored by the warm-start merge")):
+            w.scalar(f"shard_{name}_total", "counter", help_,
+                     s["routing"][name])
+        w.scalar("shard_aggregate_hit_rate", "gauge",
+                 "fleet-wide lifetime cache hit rate",
+                 s["aggregate"]["hit_rate"])
+        parts.append(w.text())
+        return "".join(parts)

@@ -280,6 +280,7 @@ class EngineTelemetry:
         self.warm_start_entries = 0     # cache entries restored from disk
         self.warm_start_skipped = 0     # persisted entries no backend claimed
         self.persist_saves = 0
+        self.persist_saved_entries = 0  # cache entries written by saves
         self.persist_load_failures = 0  # corrupted/absent files -> cold start
         self.persist_quarantined = 0    # corrupt cache files renamed .corrupt
         self.execute_failures = 0       # executor raised (per request)
@@ -398,6 +399,7 @@ class EngineTelemetry:
                 "warm_start_entries": self.warm_start_entries,
                 "warm_start_skipped": self.warm_start_skipped,
                 "persist_saves": self.persist_saves,
+                "persist_saved_entries": self.persist_saved_entries,
                 "persist_load_failures": self.persist_load_failures,
                 "persist_quarantined": self.persist_quarantined,
                 "routing": {

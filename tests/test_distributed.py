@@ -28,6 +28,30 @@ def test_spec_rules():
     assert all(x is None for x in s)
 
 
+def test_host_mesh_model_axis_validation():
+    """model_axis outside [1, n_devices] must raise a ValueError naming
+    both values — not build a zero-extent mesh or divide by zero."""
+    n = len(jax.devices())
+    for bad in (0, -1, n + 1):
+        with pytest.raises(ValueError) as exc:
+            make_host_mesh(model_axis=bad)
+        msg = str(exc.value)
+        assert f"model_axis={bad}" in msg
+        assert str(n) in msg
+    # the full valid range still builds
+    mesh = make_host_mesh(model_axis=n)
+    assert mesh.shape["model"] == n
+
+
+def test_replica_devices_covers_data_axis():
+    """replica_devices gives one distinct placement slot per data slice."""
+    from repro.parallel.sharding import replica_devices
+    mesh = make_host_mesh()
+    devs = replica_devices(mesh)
+    assert len(devs) == mesh.shape["data"]
+    assert len(set(devs)) == len(devs)
+
+
 def test_spec_rules_production_mesh_shapes():
     """Verify divisibility-driven drops on a production-like abstract mesh."""
     import jax.sharding as shd

@@ -335,6 +335,36 @@ def test_prometheus_histogram_buckets_match_export_path():
                         stage=stage) == pytest.approx(hist.total)
 
 
+def test_prometheus_labels_merged_into_every_series():
+    """prometheus_text(labels=...) stamps the dict on every sample (the
+    shard-label hook) and round-trips: values match the unlabeled render,
+    per-series labels still win on clash."""
+    engine = SparseKernelEngine()
+    engine.step(_requests(_mats(2, seed0=21_300)))
+    engine.release_stream()
+    plain = parse_prometheus_text(prometheus_text(engine))
+    labeled = parse_prometheus_text(
+        prometheus_text(engine, labels={"shard": "r7"}))
+    assert len(labeled) == len(plain)
+    assert all(lab.get("shard") == "r7" for _n, lab, _v in labeled)
+    # stripping the injected label recovers the plain exposition for the
+    # time-independent series (counters; gauges like ts/latency EMAs move)
+    stripped = [(n, {k: v for k, v in lab.items() if k != "shard"}, val)
+                for n, lab, val in labeled]
+    for (n0, l0, v0), (n1, l1, v1) in zip(plain, stripped):
+        assert (n0, l0) == (n1, l1)
+        if n0.endswith("_total") or n0.endswith("_bucket"):
+            assert v0 == v1
+    assert prom_get(labeled, "repro_serving_requests_total", shard="r7") \
+        == engine.stats()["requests"]
+    # per-series labels win on key clash with the injected base
+    from repro.serving.export import _Writer
+    w = _Writer("ns", {"shard": "base"})
+    w.scalar("x", "gauge", "clash", 1.0, {"shard": "series"})
+    assert parse_prometheus_text(w.text()) \
+        == [("ns_x", {"shard": "series"}, 1.0)]
+
+
 def test_prometheus_parser_rejects_malformed():
     for bad in ("no_value_here\n", "name{unclosed 1.0\n",
                 'name{k="v" 1.0\n', "name not-a-number\n"):

@@ -1,0 +1,362 @@
+"""Sharded serving: consistent-hash ring stability properties, routing and
+bounded-load overflow through ``ShardedEngine``, warm-start merge, live
+rebalance (replica add/remove with warm cache-row migration), aggregated
+stats, and shard-labeled Prometheus exposition.
+
+The differential anchor everywhere: a sharded fleet must serve the exact
+responses a single unsharded engine serves — bit for bit — because every
+replica runs the identical deterministic pipeline on the identical cached
+plans, just partitioned by digest ownership.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.data.matrices import generate_matrix
+from repro.serving import (HashRing, KernelRequest, ShardedEngine,
+                           SparseKernelEngine, parse_prometheus_text,
+                           prom_get)
+
+
+def _mats(n, seed0=0, n_rows=64, nnz=300):
+    return [generate_matrix("uniform", seed=seed0 + i, n_rows=n_rows,
+                            n_cols=n_rows, target_nnz=nnz)
+            for i in range(n)]
+
+
+def _requests(mats, rhs=None):
+    return [KernelRequest(m, operand=rhs) for m in mats]
+
+
+def _rhs(n_rows=64, cols=8, seed=0):
+    return np.asarray(
+        np.random.default_rng(seed).standard_normal((n_rows, cols)),
+        np.float32)
+
+
+# ------------------------------------------------------------------ ring
+
+def test_ring_deterministic_and_roughly_balanced():
+    keys = [f"digest-{i}" for i in range(4000)]
+    ring = HashRing(["r0", "r1", "r2", "r3"], vnodes=64)
+    assert ring.assignment(keys) == HashRing(
+        ["r3", "r1", "r0", "r2"], vnodes=64).assignment(keys)
+    shares = {n: 0 for n in ring.nodes()}
+    for owner in ring.assignment(keys).values():
+        shares[owner] += 1
+    for n, c in shares.items():
+        # vnodes keep shares near 1/4; generous bounds, no flakes
+        assert 0.10 < c / len(keys) < 0.45, (n, shares)
+
+
+def test_ring_remove_rehomes_only_the_removed_nodes_keys():
+    """The consistent-hashing property itself: losing 1 of N nodes moves
+    ~1/N of the key space, and every moved key was owned by the loser."""
+    keys = [f"digest-{i}" for i in range(4000)]
+    ring = HashRing([f"r{i}" for i in range(5)], vnodes=64)
+    before = ring.assignment(keys)
+    ring.remove("r2")
+    after = ring.assignment(keys)
+    moved = [k for k in keys if before[k] != after[k]]
+    assert all(before[k] == "r2" for k in moved)
+    assert "r2" not in after.values()
+    # exactly the removed node's share moved (~1/5, loose bounds)
+    assert 0.05 < len(moved) / len(keys) < 0.40
+
+
+def test_ring_readd_restores_assignment_bit_for_bit():
+    keys = [f"digest-{i}" for i in range(4000)]
+    ring = HashRing([f"r{i}" for i in range(5)], vnodes=64)
+    before = ring.assignment(keys)
+    ring.remove("r2")
+    ring.add("r2")
+    assert ring.assignment(keys) == before
+
+
+def test_ring_membership_errors_and_successor():
+    ring = HashRing(["r0"], vnodes=32)
+    with pytest.raises(ValueError):
+        ring.add("r0")                       # duplicate
+    with pytest.raises(KeyError):
+        ring.remove("r9")                    # unknown
+    assert ring.successor("k") is None       # single node: no overflow target
+    assert ring.owner("k") == "r0"
+    ring.add("r1")
+    for k in ("a", "b", "c", "d"):
+        assert ring.successor(k) != ring.owner(k)
+    ring.remove("r0")
+    ring.remove("r1")
+    with pytest.raises(KeyError):
+        ring.owner("k")                      # empty ring
+    with pytest.raises(ValueError):
+        HashRing(vnodes=0)
+
+
+# --------------------------------------------------------------- serving
+
+def test_sharded_matches_unsharded_bit_for_bit():
+    mats = _mats(10, seed0=30_000)
+    rhs = _rhs(seed=1)
+    ref = SparseKernelEngine(cache_size=64)
+    want = ref.step(_requests(mats, rhs))
+    ref.drain()
+    with ShardedEngine(n_replicas=3, cache_size=64) as se:
+        got = se.step(_requests(mats, rhs))
+        se.drain()
+        assert len(got) == len(mats)
+        for w, g in zip(want, got):
+            assert g is not None
+            assert g.digest == w.digest
+            assert g.config == w.config
+            assert np.array_equal(np.asarray(w.output), np.asarray(g.output))
+        s = se.stats()
+        # the batch really was partitioned across replicas
+        assert sum(s["routing"]["by_shard"].values()) == len(mats)
+        assert len(s["routing"]["by_shard"]) >= 2
+
+
+def test_sharded_ownership_is_sticky_and_second_pass_hits():
+    mats = _mats(8, seed0=30_100)
+    with ShardedEngine(n_replicas=3, cache_size=64) as se:
+        r1 = se.step(_requests(mats))
+        se.drain()
+        owners = {r.digest: se.owner_of(r.digest) for r in r1}
+        r2 = se.step(_requests(mats))
+        se.drain()
+        assert {r.digest: se.owner_of(r.digest) for r in r2} == owners
+        s = se.stats()
+        assert s["aggregate"]["misses"] == len(mats)
+        assert s["aggregate"]["hits"] == len(mats)
+        # each digest's hit landed on the replica that owns it
+        for rid, per in s["by_shard"].items():
+            assert per["hits"] == s["routing"]["by_shard"][rid] - per["misses"]
+
+
+def test_bounded_load_overflow_spills_to_successor_and_never_drops():
+    mat = _mats(1, seed0=30_200)[0]
+    with ShardedEngine(n_replicas=2, cache_size=16, max_inflight=2,
+                       parallel=False) as se:
+        out = se.step(_requests([mat] * 8))
+        se.drain()
+        assert all(r is not None for r in out)
+        s = se.stats()
+        # one digest, one owner: slots 0-1 at the owner, 2-3 overflow to
+        # the successor, 4+ fall back to the owner (never dropped)
+        assert s["routing"]["overflows"] == 2
+        assert sorted(s["routing"]["by_shard"].values()) == [2, 6]
+
+
+def test_add_replica_migrates_only_moved_digests_warm():
+    mats = _mats(12, seed0=30_300)
+    with ShardedEngine(n_replicas=2, cache_size=64) as se:
+        se.step(_requests(mats))
+        se.drain()
+        cold = se.featurize_calls
+        before = {se._digest(m): se.owner_of(se._digest(m)) for m in mats}
+        rid = se.add_replica()
+        after = {dg: se.owner_of(dg) for dg in before}
+        moved = [dg for dg in before if before[dg] != after[dg]]
+        assert all(after[dg] == rid for dg in moved)
+        s = se.stats()
+        assert s["routing"]["rebalances"] == 1
+        assert s["routing"]["migrated_entries"] == len(moved)
+        # migrations are observable through the persistence counters
+        assert sum(per["persist_saved_entries"]
+                   for per in s["by_shard"].values()) > 0
+        # moved digests serve warm on the new owner: all hits, zero
+        # featurizations, and the source rows were popped (no doubles)
+        out = se.step(_requests(mats))
+        se.drain()
+        assert se.featurize_calls == cold
+        s2 = se.stats()
+        assert s2["aggregate"]["hits"] == len(mats)
+        assert s2["aggregate"]["cache_size"] == len(mats)
+        assert all(r is not None for r in out)
+
+
+def test_remove_replica_quiesces_migrates_and_survivors_serve_warm():
+    mats = _mats(12, seed0=30_400)
+    rhs = _rhs(seed=2)
+    ref = SparseKernelEngine(cache_size=64)
+    want = ref.step(_requests(mats, rhs))
+    ref.drain()
+    with ShardedEngine(n_replicas=3, cache_size=64) as se:
+        se.step(_requests(mats, rhs))
+        se.drain()
+        victim = se.replica_ids[0]
+        owned = [se._digest(m) for m in mats
+                 if se.owner_of(se._digest(m)) == victim]
+        moved = se.remove_replica(victim)
+        assert moved == len(owned)
+        assert victim not in se.replica_ids
+        # post-remove assignment == a fresh ring of the survivors
+        survivors = HashRing(se.replica_ids, vnodes=se._ring.vnodes)
+        for m in mats:
+            assert se.owner_of(se._digest(m)) == survivors.owner(
+                se._digest(m))
+        # featurize_calls sums over *live* replicas — the victim took its
+        # count with it, so baseline after the removal
+        base = se.featurize_calls
+        out = se.step(_requests(mats, rhs))
+        se.drain()
+        assert se.featurize_calls == base
+        for w, g in zip(want, out):
+            assert np.array_equal(np.asarray(w.output), np.asarray(g.output))
+    with ShardedEngine(n_replicas=1, cache_size=8) as solo:
+        with pytest.raises(ValueError):
+            solo.remove_replica(solo.replica_ids[0])
+        with pytest.raises(KeyError):
+            solo.remove_replica("r99")
+
+
+def test_warm_start_merge_restores_any_layout(tmp_path):
+    """One cache file warm-starts any replica count: a single engine's
+    save() restores into 3 shards; the shard's merged save() restores into
+    2 — both serve the traffic with zero featurizations."""
+    mats = _mats(9, seed0=30_500)
+    path = tmp_path / "cache.npz"
+    eng = SparseKernelEngine(cache_size=64, persist_path=path)
+    eng.step(_requests(mats))
+    eng.drain()
+    eng.save()
+    assert eng.stats()["persist_saved_entries"] == len(mats)
+
+    with ShardedEngine(n_replicas=3, cache_size=64,
+                       persist_path=path) as se:
+        s = se.stats()
+        assert s["routing"]["warm_start_entries"] == len(mats)
+        assert s["aggregate"]["warm_start_entries"] == len(mats)
+        se.step(_requests(mats))
+        se.drain()
+        assert se.featurize_calls == 0
+        assert se.stats()["aggregate"]["hits"] == len(mats)
+        merged = tmp_path / "merged.npz"
+        se.save(merged)
+        assert se.stats()["routing"]["merged_saved_entries"] == len(mats)
+
+    with ShardedEngine(n_replicas=2, cache_size=64,
+                       persist_path=merged) as se2:
+        se2.step(_requests(mats))
+        se2.drain()
+        assert se2.featurize_calls == 0
+
+
+def test_sharded_engine_constructor_validation():
+    with pytest.raises(ValueError):
+        ShardedEngine(n_replicas=0)
+    with pytest.raises(ValueError):
+        # engine_kwargs only make sense with the default factory
+        ShardedEngine(n_replicas=2, cache_size=8,
+                      engine_factory=lambda rid, dev: SparseKernelEngine())
+
+
+def test_engine_save_counts_persist_saved_entries(tmp_path):
+    """Satellite: every save counts its written entries, and the counter
+    rides the Prometheus exposition."""
+    from repro.serving import prometheus_text
+    eng = SparseKernelEngine(cache_size=32)
+    eng.step(_requests(_mats(5, seed0=30_600)))
+    eng.release_stream()
+    eng.save(tmp_path / "c.npz")
+    eng.save(tmp_path / "c.npz")
+    s = eng.stats()
+    assert s["persist_saves"] == 2
+    assert s["persist_saved_entries"] == 10
+    samples = parse_prometheus_text(prometheus_text(eng))
+    assert prom_get(samples,
+                    "repro_serving_persist_saved_entries_total") == 10
+    ev = eng.events.events(kind="persist_save")
+    assert ev and ev[-1]["entries"] == 5
+
+
+def test_sharded_prometheus_every_series_carries_the_shard_label():
+    with ShardedEngine(n_replicas=2, cache_size=32) as se:
+        se.step(_requests(_mats(6, seed0=30_700)))
+        se.drain()
+        text = se.prometheus_text()
+        samples = parse_prometheus_text(text)
+        assert samples
+        s = se.stats()
+        fleet_prefix = "repro_serving_shard_"
+        for name, labels, _v in samples:
+            if not name.startswith(fleet_prefix):
+                assert labels.get("shard") in s["by_shard"], (name, labels)
+        for rid, per in s["by_shard"].items():
+            assert prom_get(samples, "repro_serving_requests_total",
+                            shard=rid) == per["requests"]
+            assert prom_get(samples, "repro_serving_shard_routed_requests_total",
+                            shard=rid) == s["routing"]["by_shard"][rid]
+        assert prom_get(samples, "repro_serving_shard_replicas") == 2
+        assert prom_get(samples, "repro_serving_shard_migrated_entries_total") \
+            == 0
+
+
+def test_sharded_stats_aggregate_consistency():
+    mats = _mats(7, seed0=30_800)
+    single_cap = sum(c["maxsize"] for c in
+                     SparseKernelEngine(cache_size=16).stats()
+                     ["caches"].values())
+    with ShardedEngine(n_replicas=3, cache_size=16) as se:
+        se.step(_requests(mats))
+        se.drain()
+        s = se.stats()
+        assert s["replicas"] == 3
+        assert s["aggregate"]["requests"] == len(mats)
+        assert s["aggregate"]["requests"] == \
+            sum(per["requests"] for per in s["by_shard"].values())
+        assert s["aggregate"]["cache_capacity"] == 3 * single_cap
+        assert set(s["ring"]["nodes"]) == set(s["by_shard"])
+        assert set(s["load"]) == set(s["by_shard"])
+        assert all(load["inflight"] == 0 for load in s["load"].values())
+
+
+@pytest.mark.slow
+def test_rebalance_under_load_loses_nothing_and_stays_bit_identical():
+    """A driver thread serves continuously while a replica is added and
+    then removed: every step returns a full response set (zero lost
+    requests), nothing raises, and a final synchronized pass is still
+    bit-identical to the unsharded reference."""
+    mats = _mats(16, seed0=30_900)
+    rhs = _rhs(seed=3)
+    ref = SparseKernelEngine(cache_size=64)
+    want = [np.asarray(r.output) for r in ref.step(_requests(mats, rhs))]
+    ref.drain()
+    se = ShardedEngine(n_replicas=2, cache_size=64)
+    try:
+        stop = threading.Event()
+        counts: list[int] = []
+        errors: list[BaseException] = []
+
+        def drive():
+            try:
+                while not stop.is_set():
+                    rs = se.step(_requests(mats, rhs))
+                    counts.append(sum(r is not None for r in rs))
+            except BaseException as e:      # noqa: BLE001 — reported below
+                errors.append(e)
+
+        t = threading.Thread(target=drive)
+        t.start()
+        time.sleep(0.3)
+        rid = se.add_replica()
+        time.sleep(0.3)
+        se.remove_replica(rid)
+        time.sleep(0.3)
+        stop.set()
+        t.join(timeout=60)
+        assert not t.is_alive()
+        assert not errors, errors
+        assert len(counts) >= 3
+        assert all(c == len(mats) for c in counts)
+        out = se.step(_requests(mats, rhs))
+        se.drain()
+        for w, g in zip(want, out):
+            assert np.array_equal(w, np.asarray(g.output))
+        s = se.stats()
+        assert s["routing"]["rebalances"] == 2
+        assert s["routing"]["migrated_entries"] > 0
+        assert s["replicas"] == 2
+    finally:
+        se.close()
