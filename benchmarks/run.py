@@ -57,6 +57,7 @@ def main(argv: list[str] | None = None) -> None:
         ("faults", "benchmarks.serving_faults"),
         ("observability", "benchmarks.serving_observability"),
         ("shard", "benchmarks.serving_shard"),
+        ("admission", "benchmarks.serving_admission"),
     ]
     only = set(argv)
     failures = []

@@ -1,0 +1,255 @@
+"""Open-loop admission benchmark: sustained overload and replica failure
+through the bounded queue — the scenario every other serving benchmark
+avoids by being closed-loop.
+
+* **Overload, 2x sustained** — service capacity ``mu`` is measured
+  closed-loop first (with a fixed injected per-call executor latency, so
+  the service rate is stable across machines), then a Poisson arrival
+  process at ``2*mu`` submits open-loop through an ``AdmissionQueue``
+  with per-request deadlines and mixed priorities.  The point under
+  test: **bounded, observable degradation** — every submit resolves
+  (``lost == 0``), overload shows up as counted ``shed`` +
+  ``deadline_exceeded`` outcomes instead of unbounded queueing, and the
+  *served*-request p99 stays near the deadline budget.  Gates in
+  ``scripts/smoke.sh``.
+* **Overload, unbounded baseline** — the identical arrival schedule into
+  an effectively unbounded queue with no deadlines: nothing sheds, so
+  every request is eventually served and the tail latency diverges with
+  the backlog.  The bounded/baseline p99 ratio is the emitted evidence
+  that admission control, not luck, bounds the tail.
+* **Replica failure under admission** — a 2-replica ``ShardedEngine``
+  behind the queue; mid-run one replica's executor hangs (deterministic
+  ``FaultPlan.hang_calls`` window).  The dispatch timeout quarantines
+  it, its sub-batch re-dispatches to the survivor, open-loop traffic
+  keeps resolving (``lost == 0``), and after the hang releases a
+  probation probe re-admits the replica.  Gate: zero lost, exactly one
+  quarantine, exactly one re-admission.
+
+``python benchmarks/serving_admission.py --quick`` runs the reduced
+protocol (``REPRO_BENCH_QUICK=1`` selects it through ``benchmarks.run``);
+``--json PATH`` (standalone) writes the rows machine-readably.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+if __package__ in (None, ""):   # `python benchmarks/serving_admission.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks import common
+from repro.data import generate_matrix
+from repro.serving import (AdmissionQueue, FaultPlan, KernelRequest,
+                           ShardedEngine, SparseKernelEngine, inject_faults)
+
+FAMILIES = ("uniform", "banded", "powerlaw", "blockdiag")
+SERVICE_LATENCY_S = 0.005       # injected per-call cost: stabilizes mu
+DEADLINE_MS = 150.0
+
+
+def _matrices(n, seed0=0, n_rows=128, nnz=600):
+    return [generate_matrix(FAMILIES[i % len(FAMILIES)], seed=seed0 + i,
+                            n_rows=n_rows, n_cols=n_rows, target_nnz=nnz)
+            for i in range(n)]
+
+
+def _reqs(pool, values, rhs, idxs):
+    return [KernelRequest(pool[i % len(pool)], values[i % len(pool)],
+                          "spmm", rhs) for i in idxs]
+
+
+def _pool(n=12, seed0=10_000):
+    pool = _matrices(n, seed0=seed0)
+    rng = np.random.default_rng(3)
+    values = [rng.normal(size=m.nnz).astype(np.float32) for m in pool]
+    rhs = rng.normal(size=(pool[0].n_cols, 16)).astype(np.float32)
+    return pool, values, rhs
+
+
+def _measure_mu(engine, pool, values, rhs, *, batch=8, seconds=0.5):
+    """Closed-loop warm service rate (requests/sec) — the denominator the
+    overload factor is defined against."""
+    n = served = 0
+    for warm in range(3):                       # warm caches + warm lane
+        engine.step(_reqs(pool, values, rhs, range(batch)))
+    engine.drain()
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < seconds:
+        engine.step(_reqs(pool, values, rhs,
+                          range(n * batch, n * batch + batch)))
+        n += 1
+        served += batch
+    engine.drain()
+    return served / (time.perf_counter() - t0)
+
+
+def _open_loop(queue, pool, values, rhs, *, n_requests, rate, seed,
+               deadline_ms):
+    """Submit ``n_requests`` with exponential inter-arrivals at ``rate``
+    req/s; returns the resolved tickets (queue closed = all resolved)."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=n_requests)
+    tickets = []
+    for i in range(n_requests):
+        r = _reqs(pool, values, rhs, [i])[0]
+        tickets.append(queue.submit(r, deadline_ms=deadline_ms,
+                                    priority=i % 3))
+        time.sleep(gaps[i])
+    queue.close()                                # drains; every ticket ends
+    return tickets
+
+
+def _latencies_ms(tickets, outcome="served"):
+    return np.array([(t.resolved_ts - t.submitted_ts) * 1e3
+                     for t in tickets if t.outcome == outcome]) \
+        if any(t.outcome == outcome for t in tickets) else np.array([0.0])
+
+
+def _bench_overload(rows, quick):
+    n_requests = 160 if quick else 400
+    pool, values, rhs = _pool()
+    engine = SparseKernelEngine()
+    fx = inject_faults(engine.backends, engine.default_platform, "spmm",
+                       FaultPlan.latency_calls(0, None, SERVICE_LATENCY_S))
+    try:
+        mu = _measure_mu(engine, pool, values, rhs,
+                         seconds=0.25 if quick else 0.5)
+        rate = 2.0 * mu
+
+        # high watermark sits below the depth the deadline alone would
+        # allow (deadline_ms * mu), so sustained overload exercises both
+        # shedding and deadline expiry rather than one masking the other
+        q = AdmissionQueue(engine, capacity=48, high_watermark=24,
+                           max_batch=8)
+        tickets = _open_loop(q, pool, values, rhs, n_requests=n_requests,
+                             rate=rate, seed=7, deadline_ms=DEADLINE_MS)
+        s = q.snapshot()
+        lost = sum(t.outcome is None for t in tickets)
+        unaccounted = s["submitted"] - (s["served"] + s["shed"]
+                                        + s["deadline_exceeded"]
+                                        + s["failed"])
+        p99 = float(np.percentile(_latencies_ms(tickets), 99))
+
+        base = AdmissionQueue(engine, capacity=10**6,
+                              high_watermark=10**6, max_batch=8)
+        base_tickets = _open_loop(base, pool, values, rhs,
+                                  n_requests=n_requests, rate=rate,
+                                  seed=7, deadline_ms=None)
+        base_p99 = float(np.percentile(_latencies_ms(base_tickets), 99))
+    finally:
+        fx.restore()
+
+    ratio = base_p99 / max(p99, 1e-9)
+    rows.append((
+        "admission/overload/bounded_p99_ms", f"{p99:.1f}", "",
+        f"2x overload ({rate:.0f} req/s vs mu={mu:.0f}): "
+        f"served={s['served']} shed={s['shed']} "
+        f"deadline_exceeded={s['deadline_exceeded']} failed={s['failed']} "
+        f"lost={lost} unaccounted={unaccounted} peak_depth={s['peak_depth']} "
+        f"(gates: lost==0, shed>0, p99 bounded)",
+        {"p99_ms": p99, "lost": float(lost),
+         "unaccounted": float(unaccounted),
+         "served": float(s["served"]), "shed": float(s["shed"]),
+         "deadline_exceeded": float(s["deadline_exceeded"]),
+         "failed": float(s["failed"]),
+         "peak_depth": float(s["peak_depth"]),
+         "deadline_ms": DEADLINE_MS, "mu_req_per_s": mu}))
+    rows.append((
+        "admission/overload/unbounded_baseline_p99_ms", f"{base_p99:.1f}",
+        "", f"same arrivals, no bound, no deadlines: every request "
+        f"eventually served, tail diverges with the backlog — "
+        f"{ratio:.1f}x the bounded p99",
+        {"p99_ms": base_p99, "p99_ratio": ratio,
+         "served": float(sum(t.outcome == 'served'
+                             for t in base_tickets))}))
+    if lost or unaccounted:
+        raise AssertionError(
+            f"admission overload lost {lost} / unaccounted {unaccounted}")
+    if not s["shed"]:
+        raise AssertionError("2x overload shed nothing — queue not bounded?")
+    if base_p99 <= p99:
+        print(f"# WARNING: unbounded baseline p99 {base_p99:.1f}ms did not "
+              f"exceed bounded {p99:.1f}ms")
+    return p99
+
+
+def _bench_supervision(rows, quick):
+    n_requests = 60 if quick else 150
+    pool, values, rhs = _pool(seed0=20_000)
+    se = ShardedEngine(n_replicas=2, cache_size=64, step_timeout_s=1.0,
+                       hang_timeout_s=0.5, probation_s=0.05)
+    try:
+        # warm both replicas so quarantine re-homes real cache rows
+        se.step(_reqs(pool, values, rhs, range(len(pool))))
+        se.drain()
+        r0 = se.replica("r0")
+        fx = inject_faults(r0.backends, r0.default_platform, "spmm",
+                           FaultPlan.hang_calls(0))
+
+        q = AdmissionQueue(se, capacity=256, max_batch=8)
+        tickets = []
+        for i in range(n_requests):
+            tickets.append(q.submit(_reqs(pool, values, rhs, [i])[0],
+                                    deadline_ms=30_000))
+            time.sleep(0.002)
+        q.close()
+        lost = sum(t.outcome is None for t in tickets)
+        served = sum(t.outcome == "served" for t in tickets)
+        s = se.stats()
+        quarantines = s["supervisor"]["counters"]["quarantines"]
+        moved = s["routing"]["migrated_entries"]
+
+        # release the hang, let the abandoned future finish, re-admit
+        fx.release_hangs()
+        fx.restore()
+        deadline = time.monotonic() + 10
+        while (se.stats()["load"]["r0"]["inflight"]
+               and time.monotonic() < deadline):
+            time.sleep(0.02)
+        time.sleep(0.1)                          # probation elapses
+        se.supervisor.poll_once()
+        s2 = se.stats()
+        readmissions = s2["supervisor"]["counters"]["readmissions"]
+        back = s2["supervisor"]["replicas"]["r0"]["state"] == "live"
+        post = se.step(_reqs(pool, values, rhs, range(8)))
+        ok_after = all(r is not None and r.output is not None for r in post)
+    finally:
+        se.close()
+    rows.append((
+        "admission/supervision/lost_requests", f"{lost}", "",
+        f"one of 2 replicas hung mid-run: served={served} "
+        f"quarantines={quarantines} rehomed_entries={moved} "
+        f"readmissions={readmissions} back_live={back} "
+        f"serves_after={ok_after} (gates: lost==0, quarantined, re-admitted)",
+        {"lost": float(lost), "served": float(served),
+         "quarantines": float(quarantines),
+         "rehomed_entries": float(moved),
+         "readmissions": float(readmissions),
+         "back_live": float(back), "serves_after": float(ok_after)}))
+    if lost:
+        raise AssertionError(f"supervision scenario lost {lost} requests")
+    if quarantines != 1 or readmissions != 1 or not back:
+        raise AssertionError(
+            f"supervision cycle broken: quarantines={quarantines} "
+            f"readmissions={readmissions} back_live={back}")
+
+
+def run(quick: bool | None = None):
+    if quick is None:       # benchmarks.run path: REPRO_BENCH_QUICK=1
+        quick = os.environ.get("REPRO_BENCH_QUICK", "") == "1"
+    rows = []
+    _bench_overload(rows, quick)
+    _bench_supervision(rows, quick)
+    common.emit(rows)
+
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    common.begin_section("admission")
+    run(quick="--quick" in args)
+    if "--json" in args:
+        common.write_json(args[args.index("--json") + 1])

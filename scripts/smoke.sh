@@ -8,7 +8,8 @@
 #   bash scripts/smoke.sh
 #
 # SMOKE_QUICK=1 runs the reduced CI path: docs check, example, and the quick
-# serving/routing/faults/observability/shard benchmarks — skipping tier-1 (CI
+# serving/routing/faults/observability/shard/admission benchmarks — skipping
+# tier-1 (CI
 # runs it as its own step), the slow stress tests, and the bsr_preproc bench.
 # The benchmark run exports XLA_FLAGS=--xla_force_host_platform_device_count=8
 # (scoped to that invocation: tier-1 exercises the single-device mesh paths)
@@ -62,7 +63,8 @@ for mod in ("repro.serving", "repro.serving.backends", "repro.serving.engine",
             "repro.serving.router", "repro.serving.telemetry",
             "repro.serving.health", "repro.serving.faults",
             "repro.serving.trace", "repro.serving.export",
-            "repro.serving.shard", "repro.launch.mesh",
+            "repro.serving.shard", "repro.serving.admission",
+            "repro.launch.mesh",
             "repro.parallel.sharding",
             "repro.core.autotune", "repro.kernels.ops", "repro.kernels.ref"):
     try:
@@ -85,7 +87,7 @@ except Exception as e:
 # 4. benchmark names named in the docs are registered in benchmarks/run.py
 run_py = Path("benchmarks/run.py").read_text()
 for name in ("serving", "routing", "faults", "observability", "shard",
-             "bsr_preproc", "fig4", "kernel"):
+             "admission", "bsr_preproc", "fig4", "kernel"):
     if f'("{name}"' not in run_py:
         failures.append(f"documented benchmark {name!r} not in benchmarks/run.py")
 
@@ -111,14 +113,14 @@ if [ "$QUICK" != "1" ]; then
   python -m benchmarks.run bsr_preproc
 fi
 
-echo "== serving + routing + faults + observability + shard benchmarks (quick) -> BENCH_9.json =="
+echo "== serving + routing + faults + observability + shard + admission benchmarks (quick) -> BENCH_10.json =="
 # The 8-device flag is scoped to this invocation: the sharded scenarios
 # need a real multi-device host platform, while tier-1 above runs the
 # stock single-device mesh.  It must be in the environment before jax
 # initializes, which is why it rides the command, not a jax call.
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 REPRO_BENCH_QUICK=1 python -m benchmarks.run serving routing faults \
-  observability shard --json BENCH_9.json
+  observability shard admission --json BENCH_10.json
 
 echo "== device_build overlap gate =="
 python - <<'EOF'
@@ -131,7 +133,7 @@ noise tolerance applies — the gate catches the async path becoming
 mode this guards against."""
 import json
 
-doc = json.load(open("BENCH_9.json"))
+doc = json.load(open("BENCH_10.json"))
 by = {r["name"]: r for r in doc["rows"]}
 ov = by["serving/device_build/overlapped_requests_per_s"]["metrics"]["req_per_s"]
 sy = by["serving/device_build/synchronous_requests_per_s"]["metrics"]["req_per_s"]
@@ -156,7 +158,7 @@ over an in-flight generation).  The benchmark itself asserts every
 timed step took the lane and the fused build path."""
 import json
 
-doc = json.load(open("BENCH_9.json"))
+doc = json.load(open("BENCH_10.json"))
 by = {r["name"]: r for r in doc["rows"]}
 e = by["serving/warm_lane/engine_requests_per_s"]["metrics"]
 b = by["serving/warm_lane/pr1_loop_requests_per_s"]["metrics"]
@@ -184,7 +186,7 @@ kill step's work; 3x leaves noise headroom without letting a
 pathological retry path through)."""
 import json
 
-doc = json.load(open("BENCH_9.json"))
+doc = json.load(open("BENCH_10.json"))
 by = {r["name"]: r for r in doc["rows"]}
 m = by["faults/degraded/requests_per_s"]["metrics"]
 print(f"degraded p99={m['p99_ms']:.2f}ms "
@@ -215,7 +217,7 @@ import json
 
 from repro.serving import parse_prometheus_text
 
-doc = json.load(open("BENCH_9.json"))
+doc = json.load(open("BENCH_10.json"))
 by = {r["name"]: r for r in doc["rows"]}
 m = by["observability/tracing_sampled/requests_per_s"]["metrics"]
 print(f"tracing overhead={m['overhead_pct']:.2f}% at "
@@ -250,7 +252,7 @@ synchronized); (4) the run really placed replicas over the 8-device
 host mesh the XLA flag stands up."""
 import json
 
-doc = json.load(open("BENCH_9.json"))
+doc = json.load(open("BENCH_10.json"))
 by = {r["name"]: r for r in doc["rows"]}
 cold = by["shard/cold/n1_requests_per_s"]["metrics"]
 print(f"shard capacity speedup={cold['speedup']:.2f}x "
@@ -280,6 +282,49 @@ assert dev["n_devices"] == 8, (
     f"--xla_force_host_platform_device_count=8 flag did not take")
 assert dev["distinct_replica_devices"] == 4, \
     "4-replica fleet did not spread over 4 distinct mesh devices"
+EOF
+
+echo "== admission-control gate =="
+python - <<'EOF'
+"""Overload must degrade into *counted* outcomes, never lost requests:
+at 2x sustained overload (Poisson arrivals, open loop) every submit
+resolves (lost == 0, unaccounted == 0), the bounded queue sheds
+(shed > 0 — the high watermark is real), and the served-request p99
+stays within 4x the deadline budget (served requests dispatch before
+expiry, so p99 ~ deadline + one batch; 4x leaves scheduler-noise
+headroom on a saturated CI core) while the unbounded baseline's p99 is
+emitted alongside for the trajectory.  The supervision leg: a hung
+replica behind the queue is quarantined, its warm rows re-homed, zero
+requests lost, and the replica re-admitted after probation — all
+asserted inside benchmarks/serving_admission.py, re-checked here to
+have landed in the artifact."""
+import json
+
+doc = json.load(open("BENCH_10.json"))
+by = {r["name"]: r for r in doc["rows"]}
+m = by["admission/overload/bounded_p99_ms"]["metrics"]
+base = by["admission/overload/unbounded_baseline_p99_ms"]["metrics"]
+print(f"admission p99={m['p99_ms']:.0f}ms (deadline {m['deadline_ms']:.0f}ms) "
+      f"vs unbounded baseline {base['p99_ms']:.0f}ms "
+      f"({base['p99_ratio']:.1f}x); served={m['served']:.0f} "
+      f"shed={m['shed']:.0f} deadline_exceeded={m['deadline_exceeded']:.0f} "
+      f"lost={m['lost']:.0f}")
+assert m["lost"] == 0 and m["unaccounted"] == 0, \
+    "overload lost or failed to account for submitted requests"
+assert m["shed"] > 0, "2x overload never tripped the high watermark"
+assert m["p99_ms"] <= 4.0 * m["deadline_ms"], (
+    f"admitted p99 {m['p99_ms']:.0f}ms blew past the deadline budget "
+    f"{m['deadline_ms']:.0f}ms (gate: 4x) — the queue is not bounding "
+    f"the tail")
+sup = by["admission/supervision/lost_requests"]["metrics"]
+print(f"supervision: lost={sup['lost']:.0f} "
+      f"quarantines={sup['quarantines']:.0f} "
+      f"rehomed={sup['rehomed_entries']:.0f} "
+      f"readmissions={sup['readmissions']:.0f}")
+assert sup["lost"] == 0, "hung-replica scenario lost requests"
+assert sup["quarantines"] == 1, "hung replica was never quarantined"
+assert sup["readmissions"] == 1 and sup["back_live"] == 1, \
+    "quarantined replica never re-admitted after probation"
 EOF
 
 if [ "${SMOKE_FAULTS:-0}" = "1" ]; then

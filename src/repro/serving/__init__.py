@@ -77,12 +77,27 @@ subsystem owns that layer:
   capacity, autotune throughput, and build bandwidth scale with replica
   count; replica add/remove re-homes only the digests whose ring
   ownership moved (cache rows migrate warm via the persistence
-  namespaces), and one merged cache file warm-starts any layout.
+  namespaces), and one merged cache file warm-starts any layout.  A
+  ``ReplicaSupervisor`` watches per-replica serving-thread heartbeats —
+  a hung or crashed replica is quarantined off the ring (warm state
+  re-homed to the survivors), its in-flight sub-batch re-dispatched
+  (``step_timeout_s``), and re-admitted after a probation probe;
+  ``close()`` is the graceful shutdown (drain, save, join every thread).
+* ``admission`` — the open-loop front door: a bounded ``AdmissionQueue``
+  callers ``submit(request, deadline_ms, priority)`` into for an
+  ``AdmissionTicket`` future.  A batcher thread forms SLO-aware batches
+  (sized from the ``"step"`` histograms + ``BackendLoad``), expired
+  requests complete ``deadline_exceeded`` without touching the pipeline,
+  and over the high-watermark the queue sheds lowest-priority-first
+  instead of blocking producers — every submit resolves, none block,
+  none are lost.
 * ``faults`` — a deterministic, seedable fault-injection harness
-  (``FaultPlan``: raise-on-nth-call windows, NaN outputs, latency spikes,
-  plus torn-write/bit-rot helpers for persistence files) that wraps any
-  registered backend's executor in place — what the fault-tolerance tests
-  and ``benchmarks/serving_faults.py`` drive.
+  (``FaultPlan``: raise-on-nth-call windows, NaN outputs, latency
+  spikes, hangs held until released, serving-thread crashes
+  (``ReplicaCrash``), plus torn-write/bit-rot helpers for persistence
+  files) that wraps any registered backend's executor in place — what
+  the fault-tolerance tests, the supervisor watchdog tests, and
+  ``benchmarks/serving_faults.py`` drive.
 
 Typical use::
 
@@ -106,6 +121,9 @@ shadow-verifies on ``cpu_ref``.  See ``docs/serving.md`` for the full
 request lifecycle, routing policies, persistence format, and how to add a
 backend.
 """
+from repro.serving.admission import (AdmissionQueue, AdmissionTicket,
+                                     DeadlineExceededError, QueueClosed,
+                                     ShedError)
 from repro.serving.arena import ArenaLease, ArenaOverrun, PlanArena
 from repro.serving.backends import (DEFAULT_PLATFORM, BackendLoad,
                                     BackendRegistry, KernelBackend,
@@ -113,18 +131,19 @@ from repro.serving.backends import (DEFAULT_PLATFORM, BackendLoad,
                                     pallas_backend)
 from repro.serving.engine import (KernelRequest, KernelResponse,
                                   OutputGuardError, SparseKernelEngine)
-from repro.serving.export import (chrome_trace, parse_prometheus_text,
-                                  prom_get, prometheus_text, stats_delta)
+from repro.serving.export import (admission_prometheus_text, chrome_trace,
+                                  parse_prometheus_text, prom_get,
+                                  prometheus_text, stats_delta)
 from repro.serving.faults import (FaultPlan, FaultWindow, FaultyExecutor,
-                                  InjectedFault, flip_byte, inject_faults,
-                                  truncate_file)
+                                  InjectedFault, ReplicaCrash, flip_byte,
+                                  inject_faults, truncate_file)
 from repro.serving.health import (BackendHealth, HealthConfig,
                                   HealthRegistry)
 from repro.serving.persist import (CACHE_FORMAT_VERSION, GroupedCacheLoad,
                                    LEGACY_NAMESPACE, load_cache,
                                    load_grouped, save_backends, save_cache,
                                    warm_start)
-from repro.serving.shard import HashRing, ShardedEngine
+from repro.serving.shard import HashRing, ReplicaSupervisor, ShardedEngine
 from repro.serving.router import (CostModelRouter, LoadAwareRouter,
                                   RouteDecision, Router, RoutingContext,
                                   StaticRouter)
@@ -145,9 +164,12 @@ __all__ = ["SparseKernelEngine", "KernelRequest", "KernelResponse",
            "RouteCalibration",
            "BackendHealth", "HealthConfig", "HealthRegistry",
            "OutputGuardError",
-           "HashRing", "ShardedEngine",
+           "HashRing", "ShardedEngine", "ReplicaSupervisor",
+           "AdmissionQueue", "AdmissionTicket", "QueueClosed", "ShedError",
+           "DeadlineExceededError",
            "Span", "Trace", "FlightRecorder", "EventLog",
-           "prometheus_text", "parse_prometheus_text", "prom_get",
+           "prometheus_text", "admission_prometheus_text",
+           "parse_prometheus_text", "prom_get",
            "chrome_trace", "stats_delta",
            "FaultPlan", "FaultWindow", "FaultyExecutor", "InjectedFault",
-           "inject_faults", "truncate_file", "flip_byte"]
+           "ReplicaCrash", "inject_faults", "truncate_file", "flip_byte"]

@@ -1,0 +1,545 @@
+"""Admission control: the bounded queue between open-loop traffic and
+the serving pipeline.
+
+Everything below this layer is *closed-loop*: callers hand ``step()`` a
+pre-formed micro-batch and wait for it.  Production traffic is open-loop
+— requests arrive on their own schedule, and when arrivals outrun
+service capacity the only choices are unbounded queueing (latency
+diverges for everyone) or bounded, *observable* degradation.  This
+module implements the second: a thread-safe ``AdmissionQueue`` that the
+engine drains itself.
+
+Producers call ``submit(request, deadline_ms, priority)`` and get an
+``AdmissionTicket`` (a future) back immediately — ``submit`` never
+blocks.  Every ticket resolves to exactly one outcome:
+
+``served``
+    The request went through the pipeline; ``ticket.response`` is its
+    ``KernelResponse``.
+``shed``
+    The queue was over its high-watermark and this request lost the
+    priority comparison — either at submit (the incoming request was the
+    lowest priority present) or later (a higher-priority submit evicted
+    it).  Shedding is lowest-priority-first, youngest-first within a
+    priority class, so under sustained overload the queue converges to
+    FIFO service of the highest classes instead of thrashing everyone.
+``deadline_exceeded``
+    The request's deadline budget ran out — at submit (zero/negative
+    budget), while queued (the batcher sweeps expired tickets before
+    every batch, so they never touch the pipeline), or mid-pipeline (the
+    engine's stage gates; see ``KernelRequest.deadline_ts``).
+``failed``
+    The dispatching ``step()`` raised; ``ticket.error`` carries the
+    exception and ``ticket.result()`` re-raises it.  The batch's other
+    tickets fail with it — nothing is ever silently dropped.
+
+Batches form when the queue holds a full target batch OR when the
+oldest admitted request's deadline slack (or plain age) says waiting any
+longer would blow the SLO.  The target size is *SLO-aware*: the
+per-request service time is estimated from the engine's ``"step"`` stage
+histogram (``repro.serving.telemetry``), the current backend in-flight
+depth (``BackendLoad``) counts as queue-ahead work, and the batch is
+capped at the largest size whose estimated service time still fits the
+tightest pending deadline — a loaded engine forms smaller, more urgent
+batches instead of optimizing throughput it cannot deliver.
+
+The queue fronts anything with a ``step(requests) -> responses`` method:
+a ``SparseKernelEngine`` or a ``ShardedEngine``.  The batcher is ONE
+thread, deliberately — the engine's arena lease protocol is per-thread,
+so a single batcher owns a single serving stream and the double-buffer
+hand-off works exactly as documented.  ``close()`` drains what's queued
+(every ticket still resolves), drains the engine stream, and joins the
+thread; the queue is a context manager.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+
+from repro.serving.trace import EventLog
+
+__all__ = ["AdmissionQueue", "AdmissionTicket", "QueueClosed", "ShedError",
+           "DeadlineExceededError", "OUTCOMES"]
+
+OUTCOMES = ("served", "shed", "deadline_exceeded", "failed")
+
+
+class QueueClosed(RuntimeError):
+    """``submit`` after ``close()`` — the producer must stop."""
+
+
+class ShedError(RuntimeError):
+    """``ticket.result()`` on a shed request."""
+
+
+class DeadlineExceededError(RuntimeError):
+    """``ticket.result()`` on an expired request."""
+
+
+class AdmissionTicket:
+    """The future a ``submit`` returns.  Resolves exactly once.
+
+    ``wait(timeout)`` blocks for resolution and returns the outcome (one
+    of ``OUTCOMES``, or ``None`` on timeout).  ``result(timeout)``
+    returns the ``KernelResponse`` for a served request and raises
+    ``ShedError`` / ``DeadlineExceededError`` / the dispatch error for
+    the other outcomes.  ``outcome`` / ``response`` / ``error`` are
+    readable without blocking once ``done()`` is true."""
+
+    __slots__ = ("request", "deadline_ts", "priority", "seq",
+                 "submitted_ts", "outcome", "response", "error",
+                 "resolved_ts", "_event")
+
+    def __init__(self, request, deadline_ts, priority, seq, now):
+        self.request = request
+        self.deadline_ts = deadline_ts
+        self.priority = priority
+        self.seq = seq
+        self.submitted_ts = now
+        self.outcome: str | None = None
+        self.response = None
+        self.error: BaseException | None = None
+        self.resolved_ts: float | None = None
+        self._event = threading.Event()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def wait(self, timeout: float | None = None) -> str | None:
+        if not self._event.wait(timeout):
+            return None
+        return self.outcome
+
+    def result(self, timeout: float | None = None):
+        if self.wait(timeout) is None:
+            raise TimeoutError("ticket unresolved")
+        if self.outcome == "served":
+            return self.response
+        if self.outcome == "shed":
+            raise ShedError("request shed under overload")
+        if self.outcome == "deadline_exceeded":
+            raise DeadlineExceededError("deadline budget exhausted")
+        raise self.error
+
+    def _resolve(self, outcome, now, response=None, error=None) -> None:
+        # single-resolution invariant: the queue only calls this while it
+        # owns the ticket (pending under the lock, or popped into exactly
+        # one batch), so no double-set is possible
+        self.outcome = outcome
+        self.response = response
+        self.error = error
+        self.resolved_ts = now
+        self._event.set()
+
+
+class AdmissionQueue:
+    """Bounded, deadline- and priority-aware admission in front of an
+    engine.
+
+    Args:
+        engine: anything with ``step(requests)`` — a
+            ``SparseKernelEngine`` or ``ShardedEngine``.  The queue owns
+            one serving stream on it (the batcher thread) and calls
+            ``engine.drain()`` when closing.
+        capacity: maximum pending tickets; ``submit`` beyond it sheds
+            (never blocks, never errors).
+        high_watermark: depth at which shedding starts (default:
+            ``capacity``).  Between the watermark and ``capacity`` only
+            submits that win the priority comparison displace pending
+            work.
+        max_batch: hard cap on batch size (also the "queue is full
+            enough, go" trigger).
+        min_batch: floor on the SLO-sized target.
+        max_wait_ms: oldest-request age that forces a flush even when the
+            batch isn't full and no deadline presses.
+        default_service_ms: per-request service estimate used until the
+            engine's ``"step"`` histogram has samples.
+        slo_margin: safety factor on the service estimate when checking
+            deadline slack (1.5 = flush when the tightest slack is
+            within 1.5x the estimated batch service time).
+        clock: monotonic clock (inject a fake for deterministic tests;
+            share it with the engine so ``deadline_ts`` agrees).
+        event_capacity: structured event ring size (shed / expiry /
+            close events — ``queue.events``).
+        start: ``False`` skips the batcher thread; tests drive the queue
+            synchronously with ``pump()``.
+
+    Priorities are integers, higher = more important (default 0).
+    Deadlines are per-request millisecond budgets measured from submit.
+    """
+
+    def __init__(self, engine, *, capacity: int = 256,
+                 high_watermark: int | None = None, max_batch: int = 16,
+                 min_batch: int = 1, max_wait_ms: float = 5.0,
+                 default_service_ms: float = 5.0, slo_margin: float = 1.5,
+                 clock=time.monotonic, event_capacity: int = 256,
+                 start: bool = True):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        if high_watermark is None:
+            high_watermark = capacity
+        if not 1 <= high_watermark <= capacity:
+            raise ValueError("high_watermark must be in [1, capacity]")
+        if max_batch < 1 or min_batch < 1 or min_batch > max_batch:
+            raise ValueError("need 1 <= min_batch <= max_batch")
+        self.engine = engine
+        self.capacity = capacity
+        self.high_watermark = high_watermark
+        self.max_batch = max_batch
+        self.min_batch = min_batch
+        self.max_wait_s = max_wait_ms / 1e3
+        self.default_service_s = default_service_ms / 1e3
+        self.slo_margin = slo_margin
+        self.clock = clock
+        self.events = EventLog(capacity=event_capacity)
+        self._cv = threading.Condition()
+        self._pending: list[AdmissionTicket] = []
+        self._seq = itertools.count()
+        self._closed = False
+        # counters (guarded by _cv)
+        self.submitted = 0
+        self.admitted = 0
+        self.served = 0
+        self.shed = 0
+        self.deadline_exceeded = 0      # resolved at submit or while queued
+        self.pipeline_expired = 0       # resolved by the engine's stage gates
+        self.failed = 0
+        self.batches = 0
+        self.flushes = {"full": 0, "deadline": 0, "age": 0, "close": 0}
+        self.peak_depth = 0
+        self._batcher: threading.Thread | None = None
+        if start:
+            self._batcher = threading.Thread(
+                target=self._drain_loop, name="admission-batcher",
+                daemon=True)
+            self._batcher.start()
+
+    # ------------------------------------------------------------ producers
+
+    def submit(self, request, deadline_ms: float | None = None,
+               priority: int = 0) -> AdmissionTicket:
+        """Admit (or shed) one request; returns its ticket immediately.
+
+        ``deadline_ms`` is the request's budget from now; zero or
+        negative resolves the ticket ``deadline_exceeded`` on the spot —
+        it is never enqueued.  ``request.deadline_ts`` is stamped from
+        the budget so the engine's stage gates enforce the same clock.
+        Over the high-watermark the lowest-priority ticket present
+        (incoming included) resolves ``shed``; the producer never
+        blocks."""
+        now = self.clock()
+        deadline_ts = None
+        if deadline_ms is not None:
+            deadline_ts = now + deadline_ms / 1e3
+        request.deadline_ts = deadline_ts
+        t = AdmissionTicket(request, deadline_ts, priority,
+                            next(self._seq), now)
+        if deadline_ts is not None and deadline_ts <= now:
+            with self._cv:
+                if self._closed:
+                    raise QueueClosed("admission queue is closed")
+                self.submitted += 1
+                self.deadline_exceeded += 1
+            t._resolve("deadline_exceeded", now)
+            return t
+        evicted = None
+        with self._cv:
+            if self._closed:
+                raise QueueClosed("admission queue is closed")
+            self.submitted += 1
+            if len(self._pending) >= self.high_watermark:
+                victim = self._shed_victim(t)
+                if victim is t:
+                    self.shed += 1
+                else:
+                    self._pending.remove(victim)
+                    self._pending.append(t)
+                    self.admitted += 1
+                    self.shed += 1
+                    evicted = victim
+                self.events.emit("shed", priority=victim.priority,
+                                 depth=len(self._pending),
+                                 evicted=victim is not t)
+            else:
+                self._pending.append(t)
+                self.admitted += 1
+                self.peak_depth = max(self.peak_depth, len(self._pending))
+                self._cv.notify_all()
+                return t
+        # resolve outside the lock: ticket waiters may run arbitrary code
+        if evicted is not None:
+            evicted._resolve("shed", now)
+            with self._cv:
+                self._cv.notify_all()
+            return t
+        t._resolve("shed", now)
+        return t
+
+    def _shed_victim(self, incoming: AdmissionTicket) -> AdmissionTicket:
+        """Lowest priority loses; within a class the youngest (largest
+        seq) goes first, so admitted work keeps its FIFO place and the
+        incoming request — the youngest of all — sheds itself unless it
+        strictly outranks something."""
+        victim = min(self._pending, key=lambda p: (p.priority, -p.seq))
+        if incoming.priority > victim.priority:
+            return victim
+        return incoming
+
+    # ------------------------------------------------------------- batcher
+
+    def _drain_loop(self) -> None:
+        while True:
+            with self._cv:
+                if not self._pending:
+                    if self._closed:
+                        break
+                    self._cv.wait(0.05)
+                    continue
+                batch, reason, wait_s = self._next_batch_locked()
+                if batch is None:
+                    self._cv.wait(wait_s)
+                    continue
+            self._dispatch(batch, reason)
+        # the batcher owns the engine's serving stream: force its last
+        # generation to completion and release the leases before exiting
+        try:
+            self.engine.drain()
+        except Exception:
+            pass
+
+    def pump(self, force: bool = False) -> int:
+        """Synchronously form and dispatch at most one batch (test /
+        ``start=False`` driver).  ``force=True`` flushes whatever is
+        pending without waiting for a trigger.  Returns the number of
+        tickets dispatched or expired."""
+        with self._cv:
+            before = len(self._pending)
+            batch, reason, _ = self._next_batch_locked(force=force)
+            expired = before - len(self._pending) - (len(batch or ()))
+        if batch is None:
+            return max(expired, 0)
+        self._dispatch(batch, reason)
+        return len(batch) + max(expired, 0)
+
+    def _next_batch_locked(self, force: bool = False):
+        """Decide, under the lock, whether to batch now.
+
+        Returns ``(batch, flush_reason, _)`` when a trigger fired, or
+        ``(None, None, wait_s)`` with the next wake-up delay.  Expired
+        pending tickets are swept first — they complete
+        ``deadline_exceeded`` right here, without touching the
+        pipeline."""
+        now = self.clock()
+        alive = []
+        for p in self._pending:
+            if p.deadline_ts is not None and p.deadline_ts <= now:
+                self.deadline_exceeded += 1
+                p._resolve("deadline_exceeded", now)
+            else:
+                alive.append(p)
+        self._pending = alive
+        if not alive:
+            return None, None, 0.05
+        target = self._target_batch(now)
+        reason = None
+        if len(alive) >= target:
+            reason = "full"
+        else:
+            oldest = min(alive, key=lambda p: p.seq)
+            age = now - oldest.submitted_ts
+            slack = self._tightest_slack(now)
+            est = self._service_estimate_s(min(len(alive), target))
+            if slack is not None and slack <= est * self.slo_margin:
+                reason = "deadline"
+            elif age >= self.max_wait_s:
+                reason = "age"
+            elif force or self._closed:
+                reason = "close" if self._closed else "age"
+            else:
+                wait = self.max_wait_s - age
+                if slack is not None:
+                    wait = min(wait, max(slack - est * self.slo_margin,
+                                         1e-4))
+                return None, None, min(max(wait, 1e-4), 0.05)
+        batch = sorted(alive, key=lambda p: (-p.priority, p.seq))[:target]
+        taken = set(map(id, batch))
+        self._pending = [p for p in alive if id(p) not in taken]
+        self.batches += 1
+        self.flushes[reason] += 1
+        return batch, reason, 0.0
+
+    def _tightest_slack(self, now: float) -> float | None:
+        slacks = [p.deadline_ts - now for p in self._pending
+                  if p.deadline_ts is not None]
+        return min(slacks) if slacks else None
+
+    def _engines(self):
+        sub = getattr(self.engine, "engines", None)
+        return sub() if callable(sub) else [self.engine]
+
+    def _per_request_estimate_s(self) -> float:
+        """Observed per-request step cost: the ``"step"`` stage
+        histogram's mean over the mean batch size, averaged across
+        replicas (racy unlocked float reads — an estimate, not
+        accounting)."""
+        total_mean = n_hists = 0.0
+        per_batch = 0.0
+        for eng in self._engines():
+            tel = getattr(eng, "telemetry", None)
+            if tel is None:
+                continue
+            h = tel.stages.get("step")
+            if h is None or not h.n:
+                continue
+            total_mean += h.mean
+            n_hists += 1
+            if tel.batches:
+                per_batch += tel.requests / tel.batches
+        if not n_hists:
+            return self.default_service_s
+        mean_step = total_mean / n_hists
+        mean_batch = max(per_batch / n_hists, 1.0)
+        return max(mean_step / mean_batch, 1e-6)
+
+    def _inflight(self) -> int:
+        """Backend in-flight depth across every replica — work queued
+        ahead of the next batch (``BackendLoad``)."""
+        total = 0
+        for eng in self._engines():
+            backends = getattr(eng, "backends", None)
+            if backends is None:
+                continue
+            for load in backends.loads_by_tag().values():
+                total += load.inflight
+        return total
+
+    def _service_estimate_s(self, n: int) -> float:
+        """Estimated wall time to serve an ``n``-request batch: its own
+        per-request cost (split across replicas) plus the backends'
+        current in-flight depth as queue-ahead work."""
+        per = self._per_request_estimate_s()
+        replicas = max(len(self._engines()), 1)
+        return per * (n / replicas + self._inflight())
+
+    def _target_batch(self, now: float) -> int:
+        """SLO-aware size: the largest batch (within [min_batch,
+        max_batch]) whose estimated service time fits the tightest
+        pending deadline slack.  No deadlines -> max_batch."""
+        slack = self._tightest_slack(now)
+        if slack is None:
+            return self.max_batch
+        per = self._per_request_estimate_s()
+        replicas = max(len(self._engines()), 1)
+        budget = slack / self.slo_margin \
+            - per * self._inflight()
+        fit = int(budget * replicas / per) if per > 0 else self.max_batch
+        return max(self.min_batch, min(self.max_batch, fit))
+
+    def _dispatch(self, batch: list[AdmissionTicket], reason: str) -> None:
+        now = self.clock()
+        try:
+            responses = self.engine.step([p.request for p in batch])
+        except BaseException as e:
+            # a failed step fails its whole batch, loudly: every ticket
+            # resolves with the error — never a silent drop
+            now = self.clock()
+            with self._cv:
+                self.failed += len(batch)
+            self.events.emit("batch_failed", n=len(batch),
+                             error=type(e).__name__, reason=reason)
+            for p in batch:
+                p._resolve("failed", now, error=e)
+            return
+        now = self.clock()
+        n_served = n_expired = 0
+        for p, r in zip(batch, responses):
+            if r.deadline_exceeded:
+                n_expired += 1
+                p._resolve("deadline_exceeded", now, response=r)
+            else:
+                n_served += 1
+                p._resolve("served", now, response=r)
+        with self._cv:
+            self.served += n_served
+            self.pipeline_expired += n_expired
+            self.deadline_exceeded += n_expired
+
+    # ----------------------------------------------------------- lifecycle
+
+    def close(self, drain: bool = True) -> None:
+        """Stop admitting, resolve everything pending, join the batcher.
+
+        ``drain=True`` (default) serves the backlog first — every
+        pending ticket still resolves ``served`` / ``deadline_exceeded``
+        / ``failed``.  ``drain=False`` resolves the backlog ``shed``.
+        Either way the engine stream the batcher owned is drained and no
+        thread is left behind.  Idempotent."""
+        with self._cv:
+            if self._closed:
+                self._cv.notify_all()
+            self._closed = True
+            dropped = []
+            if not drain:
+                dropped, self._pending = self._pending, []
+                self.shed += len(dropped)
+            self._cv.notify_all()
+        now = self.clock()
+        for p in dropped:
+            p._resolve("shed", now)
+        if self._batcher is not None:
+            self._batcher.join()
+            self._batcher = None
+        else:
+            # start=False: drain synchronously on the caller's thread
+            while drain and self._pump_remaining():
+                pass
+            with self._cv:
+                remaining, self._pending = self._pending, []
+            for p in remaining:
+                p._resolve("shed", self.clock())
+                with self._cv:
+                    self.shed += 1
+            self.engine.drain()
+        self.events.emit("queue_close", drained=drain)
+
+    def _pump_remaining(self) -> int:
+        with self._cv:
+            if not self._pending:
+                return 0
+        return self.pump(force=True)
+
+    def __enter__(self) -> "AdmissionQueue":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------- observability
+
+    def snapshot(self) -> dict:
+        """Queue health: depth, oldest-age, every outcome counter, batch
+        flush reasons — what ``export.admission_prometheus_text``
+        renders."""
+        with self._cv:
+            now = self.clock()
+            oldest = min((p.submitted_ts for p in self._pending),
+                         default=None)
+            return {
+                "depth": len(self._pending),
+                "capacity": self.capacity,
+                "high_watermark": self.high_watermark,
+                "oldest_age_ms": (now - oldest) * 1e3
+                                 if oldest is not None else 0.0,
+                "peak_depth": self.peak_depth,
+                "submitted": self.submitted,
+                "admitted": self.admitted,
+                "served": self.served,
+                "shed": self.shed,
+                "deadline_exceeded": self.deadline_exceeded,
+                "pipeline_expired": self.pipeline_expired,
+                "failed": self.failed,
+                "batches": self.batches,
+                "flushes": dict(self.flushes),
+                "closed": self._closed,
+            }

@@ -165,7 +165,17 @@ class KernelRequest:
     means prepare-only (tune + build, let the caller launch).  ``platform``
     pins the request to that backend tag in the engine's registry; ``None``
     leaves the choice to the engine's router (the default ``StaticRouter``
-    sends it to the registry's default platform)."""
+    sends it to the registry's default platform).
+
+    ``deadline_ts`` is an absolute deadline on the engine's monotonic
+    clock (``None`` = no deadline; the admission queue stamps it from the
+    caller's ``deadline_ms`` budget).  A request whose deadline has passed
+    is *expired*: it completes as ``KernelResponse.deadline_exceeded``
+    instead of running, checked at step entry and again before the score,
+    build, and execute stages — work already sunk stays sunk, but no new
+    stage starts for a request that cannot make its deadline, and the
+    retry lane never re-serves an expired failure.
+    """
     mat: SparseMatrix
     values: np.ndarray | None = None
     op: str = "spmm"
@@ -173,6 +183,7 @@ class KernelRequest:
     platform: str | None = None
     trace_id: str | None = None  # caller-supplied id; None -> engine stamps
                                  # one when the request's trace is retained
+    deadline_ts: float | None = None  # absolute monotonic deadline, or None
 
 
 @dataclasses.dataclass
@@ -204,6 +215,8 @@ class KernelResponse:
     trace_id: str | None = None  # set iff this request's trace was retained
                                  # (head-sampled step, or degraded) — the key
                                  # into engine.traces()
+    deadline_exceeded: bool = False  # True -> the request expired instead of
+                                     # serving: config/matrix/output are empty
 
 
 @dataclasses.dataclass
@@ -229,6 +242,7 @@ class _StepState:
     failover_from: dict = dataclasses.field(default_factory=dict)  # i -> tag
     retried: set = dataclasses.field(default_factory=set)   # retry-lane idxs
     probes: set = dataclasses.field(default_factory=set)    # tags probing
+    expired: set = dataclasses.field(default_factory=set)   # deadline-expired
     replaced_refs: list = dataclasses.field(default_factory=list)
     # --- tracing (repro.serving.trace): the step's clock anchors, the
     # head-sampling decision, and the raw stage timing tuples
@@ -317,6 +331,10 @@ class SparseKernelEngine:
             candidate whose backend's drift gauge exceeds this many
             milliseconds falls through to the router (``None`` disables
             the check).
+        clock: the monotonic clock ``KernelRequest.deadline_ts`` is
+            checked against (default ``time.monotonic``).  Inject a fake
+            for deterministic deadline tests; share one with the
+            ``AdmissionQueue`` feeding this engine so budgets agree.
 
     Thread-safety: all public methods are safe under concurrent callers;
     see the module docstring for the per-thread lease protocol.
@@ -337,7 +355,8 @@ class SparseKernelEngine:
                  event_capacity: int = 1024,
                  warm_lane: bool = True,
                  warm_sample_rate: float = 0.0625,
-                 warm_drift_ms: float | None = None):
+                 warm_drift_ms: float | None = None,
+                 clock=time.monotonic):
         if backends is None:
             backends = default_registry(
                 tuner, cache_size=cache_size,
@@ -375,6 +394,7 @@ class SparseKernelEngine:
             else HealthRegistry(health_config)
         self.max_retries = int(max_retries)
         self.validate_outputs = bool(validate_outputs)
+        self._clock = clock             # deadline checks only
         self.telemetry = EngineTelemetry()
         self.persist_path = Path(persist_path) if persist_path else None
         self._arenas: OrderedDict = OrderedDict()  # (plat, op, digest) -> arena
@@ -478,6 +498,10 @@ class SparseKernelEngine:
         st.wall0 = time.time()
         st.sampled = self.recorder.sample()
         try:
+            # entry deadline gate: a request already past its deadline
+            # never routes, partitions, or takes load — it completes as
+            # deadline_exceeded at account time
+            self._deadline_gate(st)
             if self.warm_lane and requests:
                 warm = self._warm_probe(st)
                 if warm:
@@ -537,10 +561,23 @@ class SparseKernelEngine:
         the breaker grants a half-open probe."""
         if not st.digests:      # the warm probe (or retry lane) pre-digests
             st.digests = [self._digest(r.mat) for r in st.requests]
-        st.decisions = self.router.route(st.requests, st.digests,
-                                         self.routing_context())
+        if st.expired:
+            # entry-expired requests never reach the router (no scoring,
+            # no routing telemetry); their decisions stay None
+            live = [i for i in range(len(st.requests))
+                    if i not in st.expired]
+            decs = self.router.route(
+                [st.requests[i] for i in live],
+                [st.digests[i] for i in live],
+                self.routing_context()) if live else []
+            st.decisions = [None] * len(st.requests)
+            for i, d in zip(live, decs):
+                st.decisions[i] = d
+        else:
+            st.decisions = self.router.route(st.requests, st.digests,
+                                             self.routing_context())
         for r, d in zip(st.requests, st.decisions):
-            if (d.platform, r.op) not in self.backends:
+            if d is not None and (d.platform, r.op) not in self.backends:
                 self.backends.get(d.platform, r.op)   # raises the KeyError
         self._health_gate(st)
 
@@ -549,6 +586,8 @@ class SparseKernelEngine:
         admitted: dict[tuple[str, str], bool] = {}
         fast_fails = 0
         for i, (r, d) in enumerate(zip(st.requests, st.decisions)):
+            if d is None:       # entry-expired: nothing routed to gate
+                continue
             tag = (d.platform, r.op)
             if tag not in admitted:
                 was_closed = self.health.state(tag) == CLOSED
@@ -588,12 +627,43 @@ class SparseKernelEngine:
             self.health.failure_rate(be.tag),
             be.platform != self.default_platform, be.platform)).platform
 
+    def _deadline_gate(self, st: _StepState) -> None:
+        """Expire every request whose ``deadline_ts`` has passed.
+
+        Runs at step entry and again at the top of the score, build, and
+        execute stages (covering staged, warm, cold-subset, and retry
+        sub-batches alike — they all share those stage methods): an
+        expired request is pulled out of its partition group so no later
+        stage spends work on it, while partition-time load accounting and
+        any lease its build already took stay in the step's pools — the
+        normal hand-off/unwind paths release them, so early exit never
+        leaks a lease or an in-flight count."""
+        now = None
+        for i, r in enumerate(st.requests):
+            if r.deadline_ts is None or i in st.expired:
+                continue
+            if now is None:
+                now = self._clock()
+            if now >= r.deadline_ts:
+                self._expire(st, i)
+
+    def _expire(self, st: _StepState, i: int) -> None:
+        """Mark request ``i`` expired and detach it from its partition."""
+        st.expired.add(i)
+        if st.decisions and st.decisions[i] is not None:
+            idxs = st.groups.get((st.decisions[i].platform,
+                                  st.requests[i].op))
+            if idxs is not None and i in idxs:
+                idxs.remove(i)
+
     def _partition_stage(self, st: _StepState) -> None:
         """Split the batch into one partition per decided (platform, op)
         tag, peek per-backend hit/miss status (so responses can report
         ``cache_hit`` truthfully), and raise each backend's in-flight
         depth by its share of the batch."""
         for i, r in enumerate(st.requests):
+            if i in st.expired:
+                continue
             st.groups.setdefault((st.decisions[i].platform, r.op),
                                  []).append(i)
         st.resolved = {tag: self.backends.get(*tag) for tag in st.groups}
@@ -610,6 +680,7 @@ class SparseKernelEngine:
         directly (the router's multi-space dispatch already scored them);
         the rest go through one batched ``get_batch`` dispatch per
         backend."""
+        self._deadline_gate(st)
         st.entries = [None] * len(st.requests)
         for tag, idxs in st.groups.items():
             be = st.resolved[tag]
@@ -649,6 +720,7 @@ class SparseKernelEngine:
         take the numpy path.  Builds issued while this thread's previous
         generation is still in flight count as *overlapped* — the async
         pipeline working as intended."""
+        self._deadline_gate(st)
         st.built = [None] * len(st.requests)
         st.device_flags = [False] * len(st.requests)
         overlapped = bool(getattr(self._stream, "leases", ()))
@@ -694,6 +766,7 @@ class SparseKernelEngine:
         retry stage, recorded against the backend's health.  A granted
         half-open probe whose partition had nothing to execute is returned
         to the breaker (no outcome will ever arrive for it)."""
+        self._deadline_gate(st)
         st.outputs = [None] * len(st.requests)
         st.errors = [None] * len(st.requests)
         for tag, idxs in st.groups.items():
@@ -759,6 +832,24 @@ class SparseKernelEngine:
             if st.errors else []
         if not failed:
             return
+        # the retry lane respects the remaining deadline budget: a failed
+        # request whose deadline has passed completes as deadline_exceeded
+        # instead of burning a fallback backend's time (the failure was
+        # already recorded against the original backend's health)
+        if any(st.requests[i].deadline_ts is not None for i in failed):
+            now = self._clock()
+            exhausted = [i for i in failed
+                         if st.requests[i].deadline_ts is not None
+                         and now >= st.requests[i].deadline_ts]
+            if exhausted:
+                for i in exhausted:
+                    st.errors[i] = None
+                    self._expire(st, i)
+                self.telemetry.count(
+                    retry_deadline_exhausted=len(exhausted))
+                failed = [i for i in failed if i not in st.expired]
+                if not failed:
+                    return
         if self.max_retries < 1:
             raise st.errors[failed[0]]
         targets: dict[tuple[str, str], str | None] = {}
@@ -794,13 +885,30 @@ class SparseKernelEngine:
             if sub.errors[k] is not None:
                 self.telemetry.count(retry_failures=1)
                 raise sub.errors[k]     # double failure: surface it
+        if sub.expired:
+            # the deadline passed while the retry sub-batch was being
+            # scored/built: those requests expire in the parent too (their
+            # first-attempt failure stands; sub leases/loads merged above)
+            for k, i in enumerate(failed):
+                if k in sub.expired:
+                    st.errors[i] = None
+                    self._expire(st, i)
+            self.telemetry.count(retry_deadline_exhausted=len(sub.expired))
+            failed = [i for k, i in enumerate(failed)
+                      if k not in sub.expired]
+            sub_k = [k for k in range(len(sub.requests))
+                     if k not in sub.expired]
+        else:
+            sub_k = list(range(len(sub.requests)))
+        if not failed:
+            return
         self.telemetry.count(failovers=len(failed))
         self.events.emit(
             "failover", n=len(failed),
             moves=sorted({f"{st.decisions[i].platform}->"
                           f"{sub.decisions[k].platform}"
-                          for k, i in enumerate(failed)}))
-        for k, i in enumerate(failed):
+                          for k, i in zip(sub_k, failed)}))
+        for k, i in zip(sub_k, failed):
             old_tag = (st.decisions[i].platform, st.requests[i].op)
             new_tag = (sub.decisions[k].platform, st.requests[i].op)
             st.groups[old_tag].remove(i)
@@ -866,7 +974,8 @@ class SparseKernelEngine:
         st.digests = [self._digest(r.mat) for r in reqs]
         with self._lock:
             table = self._warm_table
-            recs = [table.get((st.digests[i], r.op, r.platform))
+            recs = [None if i in st.expired
+                    else table.get((st.digests[i], r.op, r.platform))
                     for i, r in enumerate(reqs)]
         if not any(rec is not None for rec in recs):
             return None
@@ -949,7 +1058,8 @@ class SparseKernelEngine:
         dt = time.perf_counter() - t0
         self.telemetry.record_stage("warm", dt)
         st.stage_spans.append(("warm", t0 - t_step, dt))
-        cold = [i for i in range(len(st.requests)) if i not in warm]
+        cold = [i for i in range(len(st.requests))
+                if i not in warm and i not in st.expired]
         if cold:
             self._cold_subset(st, cold)
         for name, stage in (("execute", self._execute_stage),
@@ -1072,6 +1182,9 @@ class SparseKernelEngine:
             st.hit_of[i] = sub.hit_of[k]
             if k in sub.failover_from:
                 st.failover_from[i] = sub.failover_from[k]
+            if k in sub.expired:    # deadline passed inside the sub-pipeline
+                st.expired.add(i)   # (sub groups already pruned, so the
+                                    # group merge below skips it)
         st.probes |= sub.probes
         st.resolved.update(sub.resolved)
         for tag, idxs in sub.groups.items():
@@ -1095,7 +1208,8 @@ class SparseKernelEngine:
         gen_of: dict[str, int] = {}
         cand = []
         for i, resp in enumerate(responses):
-            if i in warm_set or resp.degraded or resp.attempts > 1:
+            if i in warm_set or resp.degraded or resp.attempts > 1 \
+                    or resp.deadline_exceeded:
                 continue
             if st.decisions[i].reason not in _WARM_REASONS:
                 continue
@@ -1167,6 +1281,8 @@ class SparseKernelEngine:
                 self.health.record_successes(tag, warm_exec, per_req)
         reasons: dict[tuple[str, str], int] = {}
         for d in st.decisions:
+            if d is None:       # entry-expired: never routed
+                continue
             key = (d.platform, d.reason)
             reasons[key] = reasons.get(key, 0) + 1
         for (platform, reason), n in reasons.items():
@@ -1178,14 +1294,27 @@ class SparseKernelEngine:
         with self._lock:
             self._generation += 1
             generation = self._generation
-        responses = [
-            KernelResponse(dg, entry.config, matrix, output, st.hit_of[i],
-                           in_arena, st.decisions[i].platform,
-                           st.decisions[i].reason, st.device_flags[i],
-                           generation, 2 if i in st.retried else 1,
-                           st.failover_from.get(i), i in st.failover_from)
-            for i, (dg, entry, (matrix, in_arena), output) in enumerate(
-                zip(st.digests, st.entries, st.built, st.outputs))]
+        responses = []
+        for i in range(len(st.requests)):
+            if i in st.expired:
+                # expired requests hand back no plan/matrix/output: any
+                # build they sunk before expiring stays in the step's
+                # lease/ref pools and releases through the normal hand-off
+                d = st.decisions[i] if st.decisions else None
+                responses.append(KernelResponse(
+                    st.digests[i] if st.digests else "", {}, None, None,
+                    False, False, d.platform if d is not None else "",
+                    "deadline", False, generation,
+                    deadline_exceeded=True))
+                continue
+            matrix, in_arena = st.built[i]
+            responses.append(KernelResponse(
+                st.digests[i], st.entries[i].config, matrix,
+                st.outputs[i], st.hit_of[i], in_arena,
+                st.decisions[i].platform, st.decisions[i].reason,
+                st.device_flags[i], generation,
+                2 if i in st.retried else 1,
+                st.failover_from.get(i), i in st.failover_from))
         if self.warm_lane:
             self._warm_record(st, responses, warm_set)
 
@@ -1194,7 +1323,7 @@ class SparseKernelEngine:
         # carry no lease but were still async device dispatches, plus
         # first-attempt builds the retry lane abandoned) and the kernel
         # outputs — so drain() can force completion of all of it
-        refs = [matrix.data for matrix, _ in st.built] \
+        refs = [b[0].data for b in st.built if b is not None] \
             + st.replaced_refs \
             + [o for o in st.outputs if o is not None]
 
@@ -1221,7 +1350,8 @@ class SparseKernelEngine:
         if err is not None:
             raise err
 
-        self.telemetry.count(requests=len(st.requests), batches=1)
+        self.telemetry.count(requests=len(st.requests), batches=1,
+                             deadline_expired=len(st.expired))
         self.telemetry.record_stage("step", time.perf_counter() - t_step)
         self._finish_traces(st, responses, t_acct)
         if (self.autosave_every and self.persist_path is not None
@@ -1275,7 +1405,8 @@ class SparseKernelEngine:
                                "device_built": r.device_built,
                                "attempts": r.attempts,
                                "failed_over_from": r.failed_over_from,
-                               "degraded": r.degraded},
+                               "degraded": r.degraded,
+                               "deadline_exceeded": r.deadline_exceeded},
                         children=children)
             self.recorder.record(
                 Trace(tid, st.wall0,

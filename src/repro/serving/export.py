@@ -39,8 +39,9 @@ from __future__ import annotations
 
 import re
 
-__all__ = ["prometheus_text", "parse_prometheus_text", "prom_get",
-           "chrome_trace", "stats_delta"]
+__all__ = ["prometheus_text", "admission_prometheus_text",
+           "parse_prometheus_text", "prom_get", "chrome_trace",
+           "stats_delta"]
 
 
 # --------------------------------------------------------------- prometheus
@@ -157,6 +158,14 @@ def prometheus_text(engine, namespace: str = "repro_serving",
     w.scalar("warm_table_size", "gauge", "recorded warm decisions",
              wl["table"])
 
+    dl = s.get("deadlines", {})
+    w.scalar("deadline_expired_total", "counter",
+             "requests expired by the pipeline deadline gates",
+             dl.get("expired", 0))
+    w.scalar("retry_deadline_exhausted_total", "counter",
+             "failed requests whose remaining budget forbade a retry",
+             dl.get("retry_exhausted", 0))
+
     h = s["health"]
     for name in ("execute_failures", "output_guard_failures",
                  "circuit_fast_fails", "failovers", "retry_failures"):
@@ -243,6 +252,45 @@ def prometheus_text(engine, namespace: str = "repro_serving",
         w.histogram("backend_serve_seconds", "per-backend serve latency",
                     hist, {"tag": tag})
 
+    return w.text()
+
+
+def admission_prometheus_text(queue, namespace: str = "repro_serving",
+                              labels: dict | None = None) -> str:
+    """One ``AdmissionQueue``'s health as Prometheus text exposition.
+
+    Queue depth / capacity / oldest-age gauges, every outcome counter
+    (submitted, admitted, served, shed, deadline-exceeded — split out
+    into the pipeline-expired share — failed), and batch flushes by
+    trigger.  Reads one ``snapshot()``; round-trips through
+    ``parse_prometheus_text``.  ``labels`` merges into every series,
+    same as the engine exposition."""
+    s = queue.snapshot()
+    w = _Writer(namespace, labels)
+    for name, help_ in (("depth", "pending admitted requests"),
+                        ("capacity", "maximum pending requests"),
+                        ("high_watermark", "depth at which shedding starts"),
+                        ("oldest_age_ms",
+                         "age of the oldest pending request (ms)"),
+                        ("peak_depth", "high-water pending depth")):
+        w.scalar(f"admission_{name}", "gauge", help_, s[name])
+    for name, help_ in (("submitted", "submit calls"),
+                        ("admitted", "requests accepted into the queue"),
+                        ("served", "requests served through the pipeline"),
+                        ("shed", "requests shed under overload"),
+                        ("deadline_exceeded",
+                         "requests resolved deadline_exceeded"),
+                        ("pipeline_expired",
+                         "deadline_exceeded raised mid-pipeline"),
+                        ("failed", "requests failed by a dispatch error"),
+                        ("batches", "batches dispatched")):
+        w.scalar(f"admission_{name}_total", "counter", help_, s[name])
+    full = w.head("admission_flushes_total", "counter",
+                  "batch flushes by trigger")
+    for reason, n in sorted(s["flushes"].items()):
+        w.sample(full, n, {"reason": reason})
+    w.scalar("admission_closed", "gauge", "queue closed flag",
+             int(s["closed"]))
     return w.text()
 
 

@@ -21,6 +21,16 @@ Injected errors raise ``InjectedFault`` (a ``RuntimeError``), so tests can
 distinguish scheduled failures from genuine bugs.  ``truncate_file`` /
 ``flip_byte`` are the matching *persistence* fault tools — torn and
 bit-rotted cache files for ``repro.serving.persist``'s quarantine path.
+
+Two *replica-level* kinds exist for the ``ReplicaSupervisor`` watchdog
+tests: ``"hang"`` blocks the serving thread on an event until the test
+calls ``FaultyExecutor.release_hangs()`` (or an optional per-window
+timeout elapses) and then executes normally — a stuck-but-alive replica
+whose heartbeat goes stale; ``"crash"`` raises ``ReplicaCrash``, a
+``BaseException`` that deliberately escapes the engine's per-request
+``except Exception`` fault isolation, killing the whole step the way a
+dying serving thread would — the replica's work unwinds (leases roll
+back) and the future carries the crash to the shard layer.
 """
 from __future__ import annotations
 
@@ -30,12 +40,22 @@ import time
 
 import numpy as np
 
-__all__ = ["InjectedFault", "FaultWindow", "FaultPlan", "FaultyExecutor",
-           "inject_faults", "truncate_file", "flip_byte"]
+__all__ = ["InjectedFault", "ReplicaCrash", "FaultWindow", "FaultPlan",
+           "FaultyExecutor", "inject_faults", "truncate_file", "flip_byte"]
 
 
 class InjectedFault(RuntimeError):
     """A scheduled executor failure (never raised by real serving code)."""
+
+
+class ReplicaCrash(BaseException):
+    """A scheduled serving-thread death.
+
+    Derives from ``BaseException`` on purpose: the engine's execute stage
+    isolates per-request ``Exception``s into the retry lane, but a crash
+    must take the whole step down (leases roll back via ``step()``'s
+    ``BaseException`` handler) so the shard layer sees a dead replica,
+    not a degraded response."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,14 +65,18 @@ class FaultWindow:
     Args:
         kind: ``"error"`` (raise ``InjectedFault`` instead of executing),
             ``"nan"`` (execute, then poison the output with NaNs — what
-            the engine's opt-in output guard must catch), or
-            ``"latency"`` (sleep ``latency_s`` before executing).
+            the engine's opt-in output guard must catch), ``"latency"``
+            (sleep ``latency_s`` before executing), ``"hang"`` (block on
+            the executor's release event — ``latency_s`` > 0 bounds the
+            wait — then execute normally), or ``"crash"`` (raise
+            ``ReplicaCrash``, taking the serving thread's step down).
         start: first call index (0-based) the rule applies to.
         stop: one past the last affected call; ``None`` = forever.
         every: within the window, apply to every ``every``-th call.
         prob: probability the rule fires on a matching call (drawn
             deterministically from the plan seed and the call index).
-        latency_s: injected delay for ``kind="latency"``.
+        latency_s: injected delay for ``kind="latency"``; maximum blocked
+            wait for ``kind="hang"`` (0 = until released).
     """
     kind: str = "error"
     start: int = 0
@@ -96,6 +120,22 @@ class FaultPlan:
         return cls((FaultWindow("latency", start, stop,
                                 latency_s=latency_s),), seed)
 
+    @classmethod
+    def hang_calls(cls, start: int, stop: int | None = None,
+                   max_wait_s: float = 0.0, seed: int = 0) -> "FaultPlan":
+        """Block every call in ``[start, stop)`` until the executor's
+        ``release_hangs()`` fires (or ``max_wait_s`` elapses, if > 0),
+        then execute normally — a hung-but-alive serving thread."""
+        return cls((FaultWindow("hang", start, stop,
+                                latency_s=max_wait_s),), seed)
+
+    @classmethod
+    def crash_calls(cls, start: int, stop: int | None = None,
+                    seed: int = 0) -> "FaultPlan":
+        """Kill the serving thread's step on every call in ``[start,
+        stop)`` by raising ``ReplicaCrash`` (a ``BaseException``)."""
+        return cls((FaultWindow("crash", start, stop),), seed)
+
     def active(self, i: int) -> list[FaultWindow]:
         out = []
         for w in self.windows:
@@ -119,18 +159,28 @@ class FaultyExecutor:
     each call index; per-kind injection counts live in ``injected``.
     ``block_event``, when set to a ``threading.Event``, makes every
     *faulted* error call block on the event before raising — the hook the
-    drain-under-failure tests use to hold a failure in flight.
+    drain-under-failure tests use to hold a failure in flight.  Hung
+    calls (``kind="hang"``) park on the internal release event until
+    ``release_hangs()``; ``hanging`` counts the threads currently parked
+    so a watchdog test can wait for the hang to actually take hold.
     """
 
     def __init__(self, inner, plan: FaultPlan):
         self.inner = inner
         self.plan = plan
         self.calls = 0
-        self.injected = {"error": 0, "nan": 0, "latency": 0}
+        self.injected = {"error": 0, "nan": 0, "latency": 0,
+                         "hang": 0, "crash": 0}
         self.block_event: threading.Event | None = None
+        self.hanging = 0
+        self._hang_released = threading.Event()
         self._lock = threading.Lock()
         self._backend = None
         self._orig_run = None
+
+    def release_hangs(self) -> None:
+        """Unblock every call parked (now or later) on a hang window."""
+        self._hang_released.set()
 
     def __call__(self, config, matrix, operand):
         with self._lock:
@@ -142,6 +192,16 @@ class FaultyExecutor:
         for w in acts:
             if w.kind == "latency":
                 time.sleep(w.latency_s)
+            elif w.kind == "hang":
+                with self._lock:
+                    self.hanging += 1
+                try:
+                    self._hang_released.wait(w.latency_s or None)
+                finally:
+                    with self._lock:
+                        self.hanging -= 1
+        if any(w.kind == "crash" for w in acts):
+            raise ReplicaCrash(f"injected serving-thread crash on call {i}")
         if any(w.kind == "error" for w in acts):
             if self.block_event is not None:
                 self.block_event.wait()

@@ -63,12 +63,31 @@ first (ring exit -> queued work drains -> migrate -> teardown): requests
 already assigned to it still complete — zero lost requests — and
 everything it learned moves to the survivors.
 
+**Supervision.**  Every replica's serving thread stamps a heartbeat
+around each call (``busy_since`` marks a call in flight), and a
+``ReplicaSupervisor`` — the PR-6 circuit-breaker state machine lifted to
+replica granularity — watches them: a replica whose thread has been busy
+past ``hang_timeout_s`` is **quarantined** (breaker *open*): evicted from
+the ring, its warm state re-homed to the survivors through the same
+migration path a ``remove_replica`` uses, while its thread is left alone
+(it may still wake up).  After ``probation_s`` the supervisor **probes**
+the thread (*half-open*); a responsive replica is re-admitted — ring
+re-entry plus warm state migrating back (*closed*).  ``step()`` itself
+failover-guards dispatch: a sub-batch whose future times out
+(``step_timeout_s``) or dies with ``ReplicaCrash`` quarantines the
+replica and **re-dispatches through the survivors**, so a hung or
+crashed replica costs latency, never lost requests.  The watchdog runs
+on its own thread (``supervise=True``) or deterministically via
+``supervisor.poll_once()`` with an injected clock.
+
 **Observability.**  ``stats()`` aggregates across replicas (plus a
-``"by_shard"`` section of full per-replica snapshots and shard-router
-counters); ``prometheus_text()`` concatenates every replica's exposition
-with a ``shard="<rid>"`` label stamped on *every* series (the
-``export.prometheus_text(labels=...)`` hook) plus shard-router series, so
-one scrape shows the whole fleet without series collisions.
+``"by_shard"`` section of full per-replica snapshots, shard-router
+counters, and the supervisor's state/heartbeat view);
+``prometheus_text()`` concatenates every replica's exposition with a
+``shard="<rid>"`` label stamped on *every* series (the
+``export.prometheus_text(labels=...)`` hook) plus shard-router and
+supervisor series, so one scrape shows the whole fleet without series
+collisions.
 """
 from __future__ import annotations
 
@@ -81,16 +100,19 @@ import time
 import weakref
 from collections import OrderedDict
 from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as _FutTimeout
 from pathlib import Path
 
 import jax
 
 from repro.serving.engine import SparseKernelEngine
 from repro.serving.export import _Writer, prometheus_text
+from repro.serving.faults import ReplicaCrash
 from repro.serving.persist import (LEGACY_NAMESPACE, load_grouped,
                                    save_backends)
+from repro.serving.trace import EventLog
 
-__all__ = ["HashRing", "ShardedEngine"]
+__all__ = ["HashRing", "ShardedEngine", "ReplicaSupervisor"]
 
 
 class HashRing:
@@ -191,18 +213,30 @@ class _MergedEntries:
 
 class _Replica:
     """One engine replica: its id, engine, placement device, shard-level
-    load counter, and (in parallel mode) its dedicated serving thread."""
+    load counter, heartbeat, and (in parallel mode) its dedicated serving
+    thread."""
 
     def __init__(self, rid: str, engine: SparseKernelEngine, device,
-                 parallel: bool):
+                 parallel: bool, clock=time.monotonic):
         from repro.serving.backends import BackendLoad
         self.rid = rid
         self.engine = engine
         self.device = device
         self.load = BackendLoad()
+        self._clock = clock
+        self._hb_lock = threading.Lock()
+        # stamped by the serving thread around every call it runs: a
+        # heartbeat that stops advancing while busy_since stays set is a
+        # hung thread — the supervisor's detection signal
+        self.heartbeat_ts = clock()
+        self.busy_since: float | None = None
         self.pool = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix=f"shard-{rid}") \
             if parallel else None
+
+    def heartbeat(self) -> tuple[float, float | None]:
+        with self._hb_lock:
+            return self.heartbeat_ts, self.busy_since
 
     def run(self, fn, *args):
         """Run ``fn`` on this replica's serving thread (inline when
@@ -216,10 +250,229 @@ class _Replica:
         return self.pool.submit(self._placed, fn, *args)
 
     def _placed(self, fn, *args):
-        if self.device is not None:
-            with jax.default_device(self.device):
-                return fn(*args)
-        return fn(*args)
+        now = self._clock()
+        with self._hb_lock:
+            self.heartbeat_ts = now
+            self.busy_since = now
+        try:
+            if self.device is not None:
+                with jax.default_device(self.device):
+                    return fn(*args)
+            return fn(*args)
+        finally:
+            now = self._clock()
+            with self._hb_lock:
+                self.heartbeat_ts = now
+                self.busy_since = None
+
+
+class ReplicaSupervisor:
+    """Replica-granularity circuit breaker: watch heartbeats, quarantine
+    hung replicas, probe, re-admit.
+
+    States mirror the PR-6 breaker vocabulary — ``live`` (closed),
+    ``quarantined`` (open: off the ring, warm state re-homed to the
+    survivors), probe (half-open: after ``probation_s`` the supervisor
+    submits a no-op to the replica's serving thread with a short
+    timeout), and back to ``live`` on a responsive probe (ring re-entry +
+    warm state migrated back).  A failed probe restarts probation.
+
+    ``poll_once()`` is the whole state machine, driven either by the
+    watchdog thread (``start()`` / ``ShardedEngine(supervise=True)``) or
+    directly by a test with an injected ``clock`` — hang detection
+    compares the fake clock against ``busy_since``, so a hang injected
+    with ``FaultPlan.hang_calls`` quarantines deterministically without
+    real-time sleeps.  ``quarantine()`` is also the entry point
+    ``ShardedEngine.step()``'s failover uses on a step timeout or
+    ``ReplicaCrash``.  The last ring node is never quarantined (bounded
+    degradation beats an empty fleet); the refusal is an event.
+    """
+
+    def __init__(self, shard: "ShardedEngine", *, hang_timeout_s: float = 2.0,
+                 probation_s: float = 5.0, interval_s: float = 0.25,
+                 probe_timeout_s: float = 0.5, clock=time.monotonic):
+        self._shard = shard
+        self.hang_timeout_s = float(hang_timeout_s)
+        self.probation_s = float(probation_s)
+        self.interval_s = float(interval_s)
+        self.probe_timeout_s = float(probe_timeout_s)
+        self.clock = clock
+        self.events = EventLog(capacity=256)
+        self._lock = threading.Lock()
+        # rid -> {"state": "quarantined", "since": ts, "reason": str};
+        # absent = live
+        self._quarantined: dict[str, dict] = {}
+        self.counters = {"hangs_detected": 0, "quarantines": 0,
+                         "failed_probes": 0, "readmissions": 0}
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    def state(self, rid: str) -> str:
+        with self._lock:
+            return "quarantined" if rid in self._quarantined else "live"
+
+    # ------------------------------------------------------- state machine
+
+    def poll_once(self) -> int:
+        """One watchdog pass: detect hangs, probe expired probations.
+        Returns the number of state transitions taken."""
+        now = self.clock()
+        sh = self._shard
+        with sh._lock:
+            reps = list(sh._replicas.items())
+            on_ring = set(sh._ring.nodes())
+        acted = 0
+        for rid, rep in reps:
+            if self.state(rid) == "live":
+                if rid not in on_ring:
+                    continue            # mid-rebalance; not ours to touch
+                _hb, busy = rep.heartbeat()
+                if busy is not None and now - busy >= self.hang_timeout_s:
+                    with self._lock:
+                        self.counters["hangs_detected"] += 1
+                    if self.quarantine(rid, "hang"):
+                        acted += 1
+            else:
+                with self._lock:
+                    st = self._quarantined.get(rid)
+                if st is not None and now - st["since"] >= self.probation_s:
+                    acted += self._probe(rid)
+        return acted
+
+    def quarantine(self, rid: str, reason: str) -> bool:
+        """Evict ``rid`` from the ring and re-home its warm state to the
+        survivors.  The replica object (and its possibly-hung thread)
+        stays in the replica map for the later probe.  Returns ``False``
+        when ``rid`` is already off the ring or is the last node."""
+        sh = self._shard
+        with sh._reb_lock:
+            with sh._lock:
+                rep = sh._replicas.get(rid)
+                if rep is None or rid not in sh._ring:
+                    return False
+                if len(sh._ring) <= 1:
+                    self.events.emit("quarantine_refused", rid=rid,
+                                     reason=reason)
+                    return False
+                sh._ring.remove(rid)
+            moved = sh._migrate([rep])
+        with self._lock:
+            self._quarantined[rid] = {"state": "quarantined",
+                                      "since": self.clock(),
+                                      "reason": reason}
+            self.counters["quarantines"] += 1
+        self.events.emit("replica_quarantined", rid=rid, reason=reason,
+                         moved=moved)
+        return True
+
+    def _probe(self, rid: str) -> int:
+        """Half-open: is the replica's serving thread responsive?  The
+        probe is a no-op submitted to its pool — a still-hung worker
+        can't run it before ``probe_timeout_s`` (real time: the hang
+        itself, not the injected clock, holds the thread)."""
+        sh = self._shard
+        with sh._lock:
+            rep = sh._replicas.get(rid)
+        if rep is None:                      # removed while quarantined
+            with self._lock:
+                self._quarantined.pop(rid, None)
+            return 0
+        alive = True
+        if rep.pool is not None:
+            try:
+                rep.pool.submit(lambda: True).result(
+                    timeout=self.probe_timeout_s)
+            except _FutTimeout:
+                alive = False
+            except RuntimeError:             # pool already shut down
+                with self._lock:
+                    self._quarantined.pop(rid, None)
+                return 0
+        if not alive:
+            with self._lock:
+                self.counters["failed_probes"] += 1
+                st = self._quarantined.get(rid)
+                if st is not None:
+                    st["since"] = self.clock()   # probation restarts
+            self.events.emit("replica_probe_failed", rid=rid)
+            return 0
+        return 1 if self.readmit(rid) else 0
+
+    def readmit(self, rid: str) -> bool:
+        """Close the breaker: put ``rid`` back on the ring and migrate
+        its digests' warm state back (the ``add_replica`` path)."""
+        sh = self._shard
+        with sh._reb_lock:
+            with sh._lock:
+                rep = sh._replicas.get(rid)
+                if rep is None or rid in sh._ring:
+                    with self._lock:
+                        self._quarantined.pop(rid, None)
+                    return False
+                sh._ring.add(rid)
+                sources = [r for r in sh._replicas.values() if r.rid != rid]
+            moved = sh._migrate(sources)
+        with self._lock:
+            self._quarantined.pop(rid, None)
+            self.counters["readmissions"] += 1
+        self.events.emit("replica_readmitted", rid=rid, moved=moved)
+        return True
+
+    # ----------------------------------------------------------- lifecycle
+
+    def start(self) -> None:
+        """Run ``poll_once`` every ``interval_s`` on a watchdog thread."""
+        if self._thread is not None:
+            return
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop,
+                                        name="replica-watchdog", daemon=True)
+        self._thread.start()
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.interval_s):
+            try:
+                self.poll_once()
+            except Exception:
+                pass
+
+    def close(self) -> None:
+        """Stop and join the watchdog thread (if running).  Idempotent."""
+        self._stop.set()
+        t = self._thread
+        if t is not None:
+            t.join()
+            self._thread = None
+
+    # ------------------------------------------------------- observability
+
+    def snapshot(self) -> dict:
+        """Per-replica supervisor state + heartbeat ages + counters —
+        what the shard exposition's ``replica_*`` series render."""
+        now = self.clock()
+        sh = self._shard
+        with sh._lock:
+            reps = list(sh._replicas.items())
+            on_ring = set(sh._ring.nodes())
+        replicas = {}
+        for rid, rep in reps:
+            hb, busy = rep.heartbeat()
+            with self._lock:
+                st = self._quarantined.get(rid)
+            replicas[rid] = {
+                "state": "quarantined" if st is not None else "live",
+                "reason": st["reason"] if st is not None else "",
+                "on_ring": rid in on_ring,
+                "heartbeat_age_ms": max(now - hb, 0.0) * 1e3,
+                "busy_ms": max(now - busy, 0.0) * 1e3
+                           if busy is not None else 0.0,
+            }
+        with self._lock:
+            counters = dict(self.counters)
+        return {"replicas": replicas, "counters": counters,
+                "hang_timeout_s": self.hang_timeout_s,
+                "probation_s": self.probation_s,
+                "watchdog_running": self._thread is not None}
 
 
 class ShardedEngine:
@@ -248,6 +501,19 @@ class ShardedEngine:
             Default: ``jax.devices()``.
         parallel: serve replicas on dedicated worker threads (default).
             ``False`` serves sub-batches inline, sequentially.
+        step_timeout_s: per-sub-batch dispatch deadline — a replica
+            future not done in time is abandoned (its load ends if the
+            call ever returns), the replica quarantined, and the
+            sub-batch re-dispatched through the survivors.  ``None``
+            (default) waits forever, the pre-supervision behavior.
+        hang_timeout_s / probation_s / watchdog_interval_s: the
+            ``ReplicaSupervisor`` tunables (see its docstring).
+        supervise: start the supervisor's watchdog thread.  ``False``
+            (default) leaves the state machine to explicit
+            ``supervisor.poll_once()`` calls — and to ``step()``'s own
+            timeout/crash failover, which works either way.
+        clock: monotonic clock shared by heartbeats and the supervisor
+            (inject a fake for deterministic watchdog tests).
         engine_kwargs: forwarded to ``SparseKernelEngine`` by the default
             factory (``cache_size=...``, ``router=...``, ...).
     """
@@ -256,7 +522,10 @@ class ShardedEngine:
                  vnodes: int = 64, max_inflight: int | None = None,
                  persist_path: str | Path | None = None,
                  mesh=None, devices=None, parallel: bool = True,
-                 **engine_kwargs):
+                 step_timeout_s: float | None = None,
+                 hang_timeout_s: float = 2.0, probation_s: float = 5.0,
+                 watchdog_interval_s: float = 0.25, supervise: bool = False,
+                 clock=time.monotonic, **engine_kwargs):
         if n_replicas < 1:
             raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
         if "persist_path" in engine_kwargs:
@@ -279,6 +548,9 @@ class ShardedEngine:
         self.max_inflight = max_inflight
         self.persist_path = Path(persist_path) if persist_path else None
         self._parallel = bool(parallel)
+        self.step_timeout_s = step_timeout_s
+        self._clock = clock
+        self._closed = False
         self._lock = threading.Lock()       # ring + replica map + counters
         self._reb_lock = threading.Lock()   # serializes rebalances
         self._ring = HashRing(vnodes=vnodes)
@@ -288,7 +560,9 @@ class ShardedEngine:
         self._counters = {"steps": 0, "requests": 0, "overflows": 0,
                           "rebalances": 0, "migrated_entries": 0,
                           "warm_start_entries": 0, "warm_start_skipped": 0,
-                          "persist_saves": 0, "persist_saved_entries": 0}
+                          "persist_saves": 0, "persist_saved_entries": 0,
+                          "step_timeouts": 0, "replica_crashes": 0,
+                          "redispatched": 0}
         # id(mat) -> (digest, weakref): the engine's identity memo, at the
         # shard layer — warm traffic pays the digest hash once, not once
         # per step per layer
@@ -299,6 +573,11 @@ class ShardedEngine:
             self._ring.add(rep.rid)
         if self.persist_path is not None:
             self._warm_start_merge()
+        self.supervisor = ReplicaSupervisor(
+            self, hang_timeout_s=hang_timeout_s, probation_s=probation_s,
+            interval_s=watchdog_interval_s, clock=clock)
+        if supervise:
+            self.supervisor.start()
 
     # ------------------------------------------------------------ replicas
 
@@ -310,7 +589,14 @@ class ShardedEngine:
             if self._devices else None
         if engine is None:
             engine = self._factory(rid, device)
-        return _Replica(rid, engine, device, self._parallel)
+        return _Replica(rid, engine, device, self._parallel, self._clock)
+
+    def engines(self) -> list[SparseKernelEngine]:
+        """The live replica engines — the hook ``AdmissionQueue`` uses
+        for SLO batch sizing (per-replica ``"step"`` histograms +
+        ``BackendLoad`` depths)."""
+        with self._lock:
+            return [rep.engine for rep in self._replicas.values()]
 
     @property
     def replica_ids(self) -> list[str]:
@@ -388,15 +674,55 @@ class ShardedEngine:
         out: list = [None] * len(requests)
         err: BaseException | None = None
         for rep, idxs, sub, fut in dispatch:
+            resp = None
+            redo: tuple[str, BaseException] | None = None
             try:
-                resp = fut.result() if fut is not None \
-                    else rep.run(rep.engine.step, sub)
+                if fut is not None:
+                    resp = fut.result(timeout=self.step_timeout_s)
+                else:
+                    resp = rep.run(rep.engine.step, sub)
+                rep.load.end(len(idxs))
+            except _FutTimeout as e:
+                # the replica's serving thread is stuck mid-step: abandon
+                # the future — its load ends if the call ever returns —
+                # and fail over.  Responses a woken replica eventually
+                # produces are discarded (the batch was re-served).
+                fut.add_done_callback(
+                    lambda _f, r=rep, n=len(idxs): r.load.end(n))
+                redo = ("timeout", e)
+            except ReplicaCrash as e:
+                rep.load.end(len(idxs))
+                redo = ("crash", e)
             except BaseException as e:      # noqa: BLE001 — re-raised below
+                rep.load.end(len(idxs))
                 if err is None:
                     err = e
-                resp = None
-            finally:
-                rep.load.end(len(idxs))
+            if redo is not None:
+                reason, exc = redo
+                with self._lock:
+                    self._counters["step_timeouts"
+                                   if reason == "timeout"
+                                   else "replica_crashes"] += 1
+                if self.supervisor.quarantine(rep.rid, reason):
+                    try:
+                        # re-route through the survivors: the ring no
+                        # longer contains the quarantined replica, so the
+                        # recursion terminates after at most n_replicas-1
+                        # further quarantines
+                        resp = self.step(sub)
+                        with self._lock:
+                            self._counters["redispatched"] += len(sub)
+                    except BaseException as e:   # noqa: BLE001
+                        resp = None
+                        if err is None:
+                            err = e
+                elif err is None:
+                    # last ring node: nowhere to fail over — surface the
+                    # failure instead of re-dispatching into the same hang
+                    err = TimeoutError(
+                        f"replica {rep.rid} stuck past "
+                        f"{self.step_timeout_s}s with no failover target"
+                    ) if reason == "timeout" else exc
             if resp is not None:
                 for k, i in enumerate(idxs):
                     out[i] = resp[k]
@@ -405,24 +731,55 @@ class ShardedEngine:
         return out
 
     def drain(self) -> None:
-        """Force completion of every replica's in-flight work (each on its
-        own serving thread, so the right stream's leases release)."""
+        """Force completion of every live replica's in-flight work (each on
+        its own serving thread, so the right stream's leases release).  A
+        quarantined replica's serving thread may be hung mid-call, so it is
+        skipped — draining it would block forever on its pool."""
         with self._lock:
             reps = list(self._replicas.values())
         for rep in reps:
+            if self.supervisor.state(rep.rid) != "live":
+                continue
             rep.run(rep.engine.drain)
 
-    def close(self) -> None:
-        """Drain and tear down the serving threads.  Idempotent."""
+    def close(self, save: bool | None = None) -> None:
+        """Graceful shutdown: watchdog joined, responsive replicas
+        drained on their own serving threads, merged warm state saved,
+        serving threads joined.  Idempotent; also the context-manager
+        exit.
+
+        ``save=None`` (default) saves iff a ``persist_path`` is
+        configured; ``True``/``False`` force it.  A replica the
+        supervisor holds in quarantine — its thread may be hung — is
+        shut down without waiting, so ``close()`` never blocks on a dead
+        thread; its warm state already moved to the survivors at
+        quarantine time and is in the save."""
         with self._lock:
+            if self._closed:
+                return
+            self._closed = True
             reps = list(self._replicas.values())
+        self.supervisor.close()
+        quarantined = {rid for rid, r in
+                       self.supervisor.snapshot()["replicas"].items()
+                       if r["state"] != "live"}
         for rep in reps:
+            if rep.rid in quarantined:
+                continue
             try:
                 rep.run(rep.engine.drain)
             except Exception:
                 pass
+        do_save = (self.persist_path is not None) if save is None else save
+        if do_save and self.persist_path is not None:
+            try:
+                self.save()
+            except Exception:
+                pass
+        for rep in reps:
             if rep.pool is not None:
-                rep.pool.shutdown(wait=True)
+                hung = rep.rid in quarantined
+                rep.pool.shutdown(wait=not hung, cancel_futures=hung)
 
     def __enter__(self):
         return self
@@ -643,11 +1000,15 @@ class ShardedEngine:
                 "merged_saves": counters["persist_saves"],
                 "merged_saved_entries": counters["persist_saved_entries"],
                 "max_inflight": self.max_inflight,
+                "step_timeouts": counters["step_timeouts"],
+                "replica_crashes": counters["replica_crashes"],
+                "redispatched": counters["redispatched"],
             },
             "load": loads,
             "devices": devices,
             "aggregate": agg,
             "by_shard": per,
+            "supervisor": self.supervisor.snapshot(),
             "ts": time.monotonic(),
         }
 
@@ -679,11 +1040,35 @@ class ShardedEngine:
                             ("migrated_entries",
                              "cache rows re-homed by rebalances"),
                             ("warm_start_entries",
-                             "entries restored by the warm-start merge")):
+                             "entries restored by the warm-start merge"),
+                            ("step_timeouts",
+                             "sub-batch dispatches abandoned on timeout"),
+                            ("replica_crashes",
+                             "serving-thread crashes seen by dispatch"),
+                            ("redispatched",
+                             "requests re-served through failover")):
             w.scalar(f"shard_{name}_total", "counter", help_,
                      s["routing"][name])
         w.scalar("shard_aggregate_hit_rate", "gauge",
                  "fleet-wide lifetime cache hit rate",
                  s["aggregate"]["hit_rate"])
+        sup = s["supervisor"]
+        hb = w.head("replica_heartbeat_age_ms", "gauge",
+                    "ms since the replica's serving thread last stamped "
+                    "its heartbeat")
+        st_full = w.head("replica_state", "gauge",
+                         "supervisor state one-hot per replica")
+        for rid, r in sorted(sup["replicas"].items()):
+            w.sample(hb, r["heartbeat_age_ms"], {"shard": rid})
+            for state in ("live", "quarantined"):
+                w.sample(st_full, int(r["state"] == state),
+                         {"shard": rid, "state": state})
+        for name, help_ in (("hangs_detected", "hung serving threads seen"),
+                            ("quarantines", "replicas quarantined"),
+                            ("failed_probes", "probation probes that hung"),
+                            ("readmissions",
+                             "replicas re-admitted after probation")):
+            w.scalar(f"shard_replica_{name}_total", "counter", help_,
+                     sup["counters"][name])
         parts.append(w.text())
         return "".join(parts)

@@ -300,6 +300,10 @@ class EngineTelemetry:
                                         # pipeline (breaker/drift/saturation)
         self.warm_invalidations = 0     # warm entries dropped on a health-
                                         # generation change (sticky analogue)
+        self.deadline_expired = 0       # requests completed deadline_exceeded
+                                        # by the engine's stage gates
+        self.retry_deadline_exhausted = 0  # failed requests whose budget ran
+                                           # out before the retry lane
         self.calibration = RouteCalibration()
 
     def record_stage(self, name: str, seconds: float) -> None:
@@ -395,6 +399,10 @@ class EngineTelemetry:
                     "fallthroughs": self.warm_fallthroughs,
                     "invalidations": self.warm_invalidations,
                     "fused_builds": self.fused_builds,
+                },
+                "deadlines": {
+                    "expired": self.deadline_expired,
+                    "retry_exhausted": self.retry_deadline_exhausted,
                 },
                 "warm_start_entries": self.warm_start_entries,
                 "warm_start_skipped": self.warm_start_skipped,

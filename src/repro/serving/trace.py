@@ -31,9 +31,12 @@ forever — the black-box model, hence the name.
 **Event log.**  ``EventLog`` is a bounded ring of structured events —
 breaker transitions, failovers, circuit fast-fails, persistence
 quarantines, warm starts, saves, router spills, sticky invalidations,
-drains — each a flat dict with a wall-clock ``ts``, a monotonic ``seq``,
-and a ``kind``.  ``to_jsonl()`` renders the ring one-JSON-object-per-line
-for log shippers; ``repro.serving.export`` consumes the same ring.
+drains, admission-queue sheds and batch failures, and the replica
+supervisor's lifecycle (``replica_quarantined`` / ``replica_probe_failed``
+/ ``replica_readmitted`` / ``quarantine_refused``) — each a flat dict
+with a wall-clock ``ts``, a monotonic ``seq``, and a ``kind``.
+``to_jsonl()`` renders the ring one-JSON-object-per-line for log
+shippers; ``repro.serving.export`` consumes the same ring.
 
 See ``docs/serving.md`` ("Observability") for the span model and the
 exporters that render these structures (Prometheus text, Chrome trace).

@@ -1,0 +1,416 @@
+"""Admission-control and replica-supervision tests: deadline edge cases
+through the pipeline (``repro.serving.engine`` gates), the bounded
+``AdmissionQueue`` (shedding order, queued expiry, overload resolution),
+the ``ReplicaSupervisor`` watchdog (hang -> quarantine -> probation ->
+re-admission), graceful shutdown, and the queue's Prometheus exposition
+round-trip.
+
+Deadline timing runs on injected fake clocks (the engine and the queue
+share one), hangs and crashes come from call-indexed ``FaultPlan``
+windows, and every early-exit path asserts leases and loads released —
+the invariants the overload benchmark gates at scale.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.data.matrices import generate_matrix
+from repro.serving import (AdmissionQueue, DeadlineExceededError, FaultPlan,
+                           FaultyExecutor, KernelRequest, QueueClosed,
+                           ReplicaCrash, ShardedEngine, ShedError,
+                           SparseKernelEngine, admission_prometheus_text,
+                           inject_faults, parse_prometheus_text, prom_get)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _req(seed, n_rows=64, nnz=400):
+    m = generate_matrix("uniform", seed, n_rows=n_rows, n_cols=n_rows,
+                        target_nnz=nnz)
+    return KernelRequest(m, None, "spmm",
+                         np.ones((m.n_cols, 8), np.float32))
+
+
+def _assert_released(engine):
+    assert engine.stats()["arenas"]["outstanding_leases"] == 0
+    for tag, load in engine.backends.loads_by_tag().items():
+        assert load.inflight == 0, (tag, load.inflight)
+
+
+# ----------------------------------------------------- engine deadline gates
+
+def test_deadline_zero_budget_expires_at_step_entry():
+    clk = FakeClock()
+    eng = SparseKernelEngine(clock=clk)
+    r = _req(0)
+    r.deadline_ts = 0.0                 # already past at t=0? no: now == ts
+    clk.advance(0.1)
+    live = _req(1)
+    out = eng.step([r, live])
+    assert out[0].deadline_exceeded and out[0].output is None
+    assert out[0].route_reason == "deadline"
+    assert not out[1].deadline_exceeded and out[1].output is not None
+    assert eng.stats()["deadlines"]["expired"] == 1
+    eng.drain()
+    _assert_released(eng)
+
+
+def test_deadline_expires_mid_pipeline_between_score_and_execute():
+    clk = FakeClock()
+    eng = SparseKernelEngine(clock=clk)
+    doomed, live = _req(0), _req(1)
+    doomed.deadline_ts = 5.0
+    live.deadline_ts = 10_000.0
+    orig = eng._build_stage
+
+    def late_build(st):
+        clk.advance(6.0)            # budget blows after score, before build
+        return orig(st)
+
+    eng._build_stage = late_build
+    out = eng.step([doomed, live])
+    assert out[0].deadline_exceeded and out[0].output is None
+    assert not out[1].deadline_exceeded and out[1].output is not None
+    assert eng.stats()["deadlines"]["expired"] == 1
+    eng.drain()
+    _assert_released(eng)
+
+
+def test_retry_lane_respects_remaining_budget():
+    from repro.serving import InjectedFault
+    clk = FakeClock()
+    eng = SparseKernelEngine(clock=clk, warm_lane=False)
+    be = eng.backends.get(eng.default_platform, "spmm")
+    orig_run = be.run
+    calls = {"n": 0}
+
+    def failing_and_slow(config, matrix, operand):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            # the failing call burns the whole budget: by the time the
+            # retry lane looks at this request, its deadline has passed
+            clk.advance(60.0)
+            raise InjectedFault("boom")
+        return orig_run(config, matrix, operand)
+
+    be.run = failing_and_slow
+    try:
+        doomed = _req(0)
+        doomed.deadline_ts = 5.0
+        out = eng.step([doomed])
+        assert out[0].deadline_exceeded
+        assert eng.stats()["deadlines"]["retry_exhausted"] == 1
+        # the failure never became a served response or a failover
+        assert eng.stats()["health"]["failovers"] == 0
+    finally:
+        be.run = orig_run
+    eng.drain()
+    _assert_released(eng)
+
+
+# --------------------------------------------------------- queue unit tests
+
+def test_zero_and_negative_budget_resolve_at_submit():
+    eng = SparseKernelEngine()
+    q = AdmissionQueue(eng, capacity=4, start=False)
+    for budget in (0, -10):
+        t = q.submit(_req(0), deadline_ms=budget)
+        assert t.outcome == "deadline_exceeded" and t.done()
+        with pytest.raises(DeadlineExceededError):
+            t.result()
+    assert q.snapshot()["depth"] == 0
+    assert q.snapshot()["deadline_exceeded"] == 2
+    q.close()
+    _assert_released(eng)
+
+
+def test_shed_vs_overflow_ordering_under_full_queue():
+    eng = SparseKernelEngine()
+    q = AdmissionQueue(eng, capacity=4, high_watermark=4, start=False)
+    low = [q.submit(_req(i), priority=0) for i in range(4)]
+    # same priority as the floor: the incoming (youngest) request sheds
+    same = q.submit(_req(10), priority=0)
+    assert same.outcome == "shed"
+    with pytest.raises(ShedError):
+        same.result()
+    assert all(t.outcome is None for t in low)
+    # higher priority: evicts the YOUNGEST lowest-priority pending ticket,
+    # never an older one — admitted work keeps its FIFO place
+    high = q.submit(_req(11), priority=3)
+    assert high.outcome is None
+    assert low[3].outcome == "shed"
+    assert all(t.outcome is None for t in low[:3])
+    # a second high submit now evicts the next-youngest low ticket
+    high2 = q.submit(_req(12), priority=3)
+    assert low[2].outcome == "shed" and high2.outcome is None
+    assert q.snapshot()["depth"] == 4
+    q.close()           # start=False close drains synchronously
+    assert high.outcome == "served" and high2.outcome == "served"
+    assert low[0].outcome == "served" and low[1].outcome == "served"
+    s = q.snapshot()
+    assert s["submitted"] == s["served"] + s["shed"] + s["failed"] \
+        + s["deadline_exceeded"]
+    _assert_released(eng)
+
+
+def test_queued_expiry_swept_before_dispatch():
+    clk = FakeClock()
+    eng = SparseKernelEngine(clock=clk)
+    q = AdmissionQueue(eng, capacity=8, start=False, clock=clk)
+    doomed = q.submit(_req(0), deadline_ms=50)
+    live = q.submit(_req(1), deadline_ms=50_000)
+    clk.advance(1.0)
+    q.pump(force=True)
+    # the expired ticket resolved without touching the pipeline
+    assert doomed.outcome == "deadline_exceeded" and doomed.response is None
+    assert live.outcome == "served" and live.response.output is not None
+    q.close()
+    _assert_released(eng)
+
+
+def test_pipeline_expiry_resolves_ticket_with_response():
+    clk = FakeClock()
+    eng = SparseKernelEngine(clock=clk)
+    q = AdmissionQueue(eng, capacity=8, start=False, clock=clk)
+    doomed = q.submit(_req(0), deadline_ms=500)
+    orig = eng._execute_stage
+
+    def late_execute(st):
+        clk.advance(1.0)            # budget blows mid-pipeline
+        return orig(st)
+
+    eng._execute_stage = late_execute
+    q.pump(force=True)
+    assert doomed.outcome == "deadline_exceeded"
+    assert doomed.response is not None and doomed.response.deadline_exceeded
+    assert q.snapshot()["pipeline_expired"] == 1
+    q.close()
+    _assert_released(eng)
+
+
+def test_submit_after_close_raises():
+    eng = SparseKernelEngine()
+    q = AdmissionQueue(eng, capacity=4, start=False)
+    q.close()
+    with pytest.raises(QueueClosed):
+        q.submit(_req(0))
+
+
+def test_batch_failure_resolves_every_ticket_loudly():
+    eng = SparseKernelEngine(max_retries=0, warm_lane=False)
+    inject_faults(eng.backends, eng.default_platform, "spmm",
+                  FaultPlan.fail_calls(0))
+    q = AdmissionQueue(eng, capacity=8, start=False)
+    tickets = [q.submit(_req(i)) for i in range(3)]
+    q.pump(force=True)
+    for t in tickets:
+        assert t.outcome == "failed" and t.error is not None
+        with pytest.raises(Exception):
+            t.result()
+    assert q.snapshot()["failed"] == 3
+    q.close()
+    _assert_released(eng)
+
+
+def test_open_loop_overload_every_submit_resolves():
+    eng = SparseKernelEngine()
+    with AdmissionQueue(eng, capacity=24, high_watermark=16,
+                        max_batch=8) as q:
+        tickets = [q.submit(_req(i % 12), deadline_ms=5_000,
+                            priority=i % 3) for i in range(120)]
+    outs = [t.outcome for t in tickets]
+    assert all(o in ("served", "shed", "deadline_exceeded") for o in outs)
+    s = q.snapshot()
+    assert s["submitted"] == 120
+    assert s["served"] + s["shed"] + s["deadline_exceeded"] + s["failed"] \
+        == 120
+    assert s["peak_depth"] <= 24
+    _assert_released(eng)
+
+
+def test_admission_prometheus_round_trip():
+    eng = SparseKernelEngine()
+    q = AdmissionQueue(eng, capacity=4, high_watermark=2, start=False)
+    q.submit(_req(0), deadline_ms=0)              # deadline at submit
+    q.submit(_req(1))
+    q.submit(_req(2))
+    q.submit(_req(3))                             # over watermark: shed
+    samples = parse_prometheus_text(
+        admission_prometheus_text(q, labels={"queue": "front"}))
+    assert prom_get(samples, "repro_serving_admission_depth",
+                    queue="front") == 2
+    assert prom_get(samples, "repro_serving_admission_shed_total") == 1
+    assert prom_get(samples,
+                    "repro_serving_admission_deadline_exceeded_total") == 1
+    assert prom_get(samples, "repro_serving_admission_submitted_total") == 4
+    q.close()
+    samples = parse_prometheus_text(admission_prometheus_text(q))
+    assert prom_get(samples, "repro_serving_admission_closed") == 1
+    assert prom_get(samples, "repro_serving_admission_served_total") == 2
+    _assert_released(eng)
+
+
+def test_engine_exposition_carries_deadline_counters():
+    from repro.serving import prometheus_text
+    clk = FakeClock()
+    eng = SparseKernelEngine(clock=clk)
+    r = _req(0)
+    r.deadline_ts = 0.0
+    clk.advance(1.0)
+    eng.step([r])
+    samples = parse_prometheus_text(prometheus_text(eng))
+    assert prom_get(samples, "repro_serving_deadline_expired_total") == 1
+    eng.drain()
+
+
+# ------------------------------------------------------- fault-mode tests
+
+def test_hang_fault_blocks_until_released():
+    done = threading.Event()
+    fx = FaultyExecutor(lambda c, m, o: "ok", FaultPlan.hang_calls(0, 1))
+    out = {}
+
+    def call():
+        out["v"] = fx(None, None, None)
+        done.set()
+
+    t = threading.Thread(target=call, daemon=True)
+    t.start()
+    deadline = time.monotonic() + 5
+    while fx.hanging == 0 and time.monotonic() < deadline:
+        time.sleep(0.005)
+    assert fx.hanging == 1 and not done.is_set()
+    fx.release_hangs()
+    assert done.wait(5)
+    assert out["v"] == "ok"                 # hang executes after release
+    assert fx.injected["hang"] == 1
+    assert fx(None, None, None) == "ok"     # outside the window: clean
+
+
+def test_crash_fault_raises_base_exception():
+    fx = FaultyExecutor(lambda c, m, o: "ok", FaultPlan.crash_calls(1, 2))
+    assert fx(None, None, None) == "ok"
+    with pytest.raises(ReplicaCrash):
+        fx(None, None, None)
+    assert not isinstance(ReplicaCrash("x"), Exception)
+    assert fx.injected["crash"] == 1
+
+
+# ------------------------------------------------- supervisor + shutdown
+
+@pytest.mark.slow
+def test_hung_replica_quarantined_rehomed_and_readmitted():
+    se = ShardedEngine(n_replicas=2, cache_size=64, step_timeout_s=1.0,
+                       hang_timeout_s=0.3, probation_s=0.05)
+    r0 = se.replica("r0")
+    fx = inject_faults(r0.backends, r0.default_platform, "spmm",
+                       FaultPlan.hang_calls(0))
+    out = se.step([_req(i) for i in range(12)])
+    # zero lost requests: the hung replica's sub-batch re-served elsewhere
+    assert all(r is not None and r.output is not None for r in out)
+    s = se.stats()
+    assert s["routing"]["step_timeouts"] >= 1
+    assert s["routing"]["redispatched"] >= 1
+    assert s["supervisor"]["replicas"]["r0"]["state"] == "quarantined"
+    assert "r0" not in s["ring"]["nodes"]
+    fx.release_hangs()
+    fx.restore()
+    deadline = time.monotonic() + 5
+    while (se.stats()["load"]["r0"]["inflight"] and
+           time.monotonic() < deadline):
+        time.sleep(0.02)
+    assert se.stats()["load"]["r0"]["inflight"] == 0
+    time.sleep(0.1)                                 # probation elapses
+    assert se.supervisor.poll_once() == 1           # probe + readmit
+    s2 = se.stats()
+    assert s2["supervisor"]["replicas"]["r0"]["state"] == "live"
+    assert s2["supervisor"]["counters"]["readmissions"] == 1
+    assert "r0" in s2["ring"]["nodes"]
+    out2 = se.step([_req(100 + i) for i in range(6)])
+    assert all(r.output is not None for r in out2)
+    se.close()
+
+
+def test_crashed_replica_quarantined_and_batch_reserved():
+    se = ShardedEngine(n_replicas=2, cache_size=64)
+    r0 = se.replica("r0")
+    fx = inject_faults(r0.backends, r0.default_platform, "spmm",
+                       FaultPlan.crash_calls(0, 1))
+    out = se.step([_req(i) for i in range(12)])
+    assert all(r is not None and r.output is not None for r in out)
+    s = se.stats()
+    assert s["routing"]["replica_crashes"] == 1
+    assert s["supervisor"]["counters"]["quarantines"] == 1
+    assert r0.stats()["arenas"]["outstanding_leases"] == 0
+    fx.restore()
+    se.supervisor.probation_s = 0.0
+    assert se.supervisor.poll_once() == 1
+    assert se.stats()["supervisor"]["replicas"]["r0"]["state"] == "live"
+    se.close()
+
+
+def test_watchdog_state_machine_with_fake_clock():
+    clk = FakeClock()
+    se = ShardedEngine(n_replicas=2, cache_size=16, clock=clk,
+                       hang_timeout_s=2.0, probation_s=5.0)
+    rep = se._replicas["r0"]
+    with rep._hb_lock:
+        rep.busy_since = 0.0            # a call that began at t=0
+    clk.advance(1.0)
+    assert se.supervisor.poll_once() == 0          # within hang_timeout
+    clk.advance(2.0)
+    assert se.supervisor.poll_once() == 1          # quarantined
+    assert se.supervisor.state("r0") == "quarantined"
+    assert se.stats()["supervisor"]["counters"]["hangs_detected"] == 1
+    with rep._hb_lock:
+        rep.busy_since = None           # the thread woke up
+    clk.advance(4.0)
+    assert se.supervisor.poll_once() == 0          # probation not over
+    clk.advance(2.0)
+    assert se.supervisor.poll_once() == 1          # probed, re-admitted
+    assert se.supervisor.state("r0") == "live"
+    se.close()
+
+
+def test_last_replica_never_quarantined():
+    se = ShardedEngine(n_replicas=1, cache_size=8)
+    assert not se.supervisor.quarantine("r0", "hang")
+    assert se.supervisor.state("r0") == "live"
+    kinds = se.supervisor.events.snapshot()["by_kind"]
+    assert kinds.get("quarantine_refused", 0) == 1
+    se.close()
+
+
+def test_graceful_shutdown_joins_threads_and_saves(tmp_path):
+    path = tmp_path / "fleet.npz"
+    se = ShardedEngine(n_replicas=2, cache_size=64, persist_path=path,
+                       supervise=True, watchdog_interval_s=0.05)
+    q = AdmissionQueue(se, capacity=32, max_batch=8)
+    tickets = [q.submit(_req(i), deadline_ms=10_000) for i in range(10)]
+    q.close()                       # drains, joins the batcher, drains se
+    assert all(t.outcome == "served" for t in tickets)
+    before = threading.active_count()
+    se.close()                      # joins watchdog + serving threads
+    assert path.exists()            # warm state saved on close
+    assert threading.active_count() < before
+    assert se.supervisor._thread is None
+    for rep in se._replicas.values():
+        for eng in (rep.engine,):
+            assert eng.stats()["arenas"]["outstanding_leases"] == 0
+    # idempotent, and the context manager re-enters the same path
+    se.close()
+    # a fresh fleet warm-starts from the close-time save
+    with ShardedEngine(n_replicas=2, cache_size=64,
+                       persist_path=path) as se2:
+        assert se2.stats()["routing"]["warm_start_entries"] > 0
